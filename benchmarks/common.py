@@ -1,0 +1,30 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExemplarClustering, centralized_greedy
+
+
+def eval_objective(data: np.ndarray, n_eval: int = 512, seed: int = 0,
+                   score_dtype=None) -> ExemplarClustering:
+    r = np.random.default_rng(seed)
+    E = data[r.choice(len(data), min(n_eval, len(data)), replace=False)]
+    return ExemplarClustering(jnp.asarray(E), score_dtype=score_dtype)
+
+
+def centralized_value(obj, data: np.ndarray, k: int) -> float:
+    return float(centralized_greedy(obj, jnp.asarray(data), k).value)
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0

@@ -1,0 +1,42 @@
+"""Paper Figure 2 (e)-(f): large-scale runs with GREEDY and STOCHASTIC
+GREEDY as the compression subprocedure; capacity = 0.05% / 0.1% of n.
+
+(Original uses 1M Tiny Images / 45M Webscope; this container runs a 200k-row
+synthetic analog with the same capacity *ratios* — DESIGN.md §8.)
+Claim: both TREE variants ≈ centralized GREEDY; STOCHASTIC slightly lower.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, centralized_value, eval_objective
+from repro.core import TreeConfig, tree_maximize
+from repro.data import datasets
+
+
+def run(quick: bool = True):
+    n = 50_000 if quick else 200_000
+    data = datasets.large_scale(n=n)
+    k = 50
+    obj = eval_objective(data, 512)
+    dj = jnp.asarray(data)
+    cg = centralized_value(obj, data, k)
+    print("fig2ef: variant,capacity_pct,ratio,oracle_calls,sec")
+    # paper uses 0.05%/0.1% of 1M-45M rows; at this container's n the same
+    # percentages land at μ ≈ k (degenerate 40-round regime), so quick mode
+    # keeps the paper's *ratio to √(nk)* instead: μ ≪ √(nk) ≈ 1580.
+    for cap_pct in ((0.5, 1.0) if quick else (0.05, 0.1)):
+        mu = max(int(n * cap_pct / 100), 2 * k)
+        for alg, eps in (("greedy", 0.5), ("stochastic_greedy", 0.5),
+                         ("stochastic_greedy", 0.2)):
+            tag = alg if alg == "greedy" else f"{alg}(eps={eps})"
+            with Timer() as t:
+                res = tree_maximize(obj, dj, TreeConfig(
+                    k=k, capacity=mu, seed=0, algorithm=alg, eps=eps))
+            print(f"fig2ef,{tag},{cap_pct},{res.value / cg:.4f},"
+                  f"{res.oracle_calls},{t.s:.1f}")
+
+
+if __name__ == "__main__":
+    run()

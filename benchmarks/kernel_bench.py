@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks: CPU wall time of the production (ref/XLA) path,
+allclose of Pallas interpret vs oracle, and the BlockSpec-derived TPU HBM
+traffic model for the exemplar-gains kernel (EXPERIMENTS.md §Perf iter 2).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args).block_until_ready()   # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6   # us
+
+
+def run(quick: bool = True):
+    key = jax.random.PRNGKey(0)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n, m, d = (2048, 1024, 256) if quick else (16384, 8192, 1024)
+    X = jax.random.normal(k1, (n, d))
+    E = jax.random.normal(k2, (m, d))
+    cm = jnp.abs(jax.random.normal(k3, (m,))) * 4
+
+    f_ref = jax.jit(lambda X, E, cm: ops.exemplar_gains(X, E, cm, impl="ref"))
+    us = _time(f_ref, X, E, cm)
+    got = ops.exemplar_gains(X[:128], E[:128], cm[:128], impl="pallas",
+                             bn=32, bm=32)
+    want = ref.exemplar_gains(X[:128], E[:128], cm[:128])
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    # BlockSpec-derived HBM traffic (bn=bm=256): per call the kernel streams
+    # X once, E once per X-row-block, writes gains — vs ref's (n, m) fp32 d2.
+    ref_bytes = n * m * 4 * 2 + (n + m) * d * 4
+    ker_bytes = n * d * 4 + (n // 256) * m * d * 4 + n * 4
+    print(f"kernel_bench,exemplar_gains_ref_cpu,{us:.0f},"
+          f"traffic_model_ratio={ref_bytes / ker_bytes:.1f}x")
+
+    B, H, Hkv, S, D = (2, 8, 2, 1024, 64) if quick else (4, 16, 4, 4096, 128)
+    q = jax.random.normal(k1, (B, H, S, D), jnp.bfloat16)
+    kk = jax.random.normal(k2, (B, Hkv, S, D), jnp.bfloat16)
+    vv = jax.random.normal(k3, (B, Hkv, S, D), jnp.bfloat16)
+    f_att = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, impl="ref"))
+    us = _time(f_att, q, kk, vv, iters=3)
+    flops = 4 * B * H * S * S * D
+    print(f"kernel_bench,flash_attention_ref_cpu,{us:.0f},"
+          f"gflops={flops / us / 1e3:.1f}")
+
+    T, Dk = (512, 64) if quick else (2048, 64)
+    r = jax.random.normal(k1, (B, H, T, Dk)) * 0.3
+    kw = jax.random.normal(k2, (B, H, T, Dk)) * 0.3
+    vw = jax.random.normal(k3, (B, H, T, Dk)) * 0.3
+    w = jax.nn.sigmoid(jax.random.normal(k1, (B, H, T, Dk)) + 2)
+    u = jax.random.normal(k2, (H, Dk)) * 0.1
+    from repro.models.layers import gla_chunked
+    f_gla = jax.jit(lambda *a: gla_chunked(*a, chunk=64)[0])
+    us = _time(f_gla, r, kw, vw, jnp.log(w), u, iters=3)
+    print(f"kernel_bench,wkv6_chunked_cpu,{us:.0f},T={T}")
+
+
+if __name__ == "__main__":
+    run()

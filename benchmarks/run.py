@@ -1,0 +1,45 @@
+# One function per paper table/figure. Prints ``name,...`` CSV rows.
+"""Benchmark driver:  PYTHONPATH=src python -m benchmarks.run [--full]
+
+  table1   — capacity / rounds / oracle-call accounting   (paper Table 1)
+  table3   — relative error vs centralized, fixed μ       (paper Table 3)
+  fig2     — approximation ratio vs capacity sweep        (paper Fig 2 a-d)
+  fig2ef   — large-scale, stochastic subprocedure         (paper Fig 2 e-f)
+  ft       — failure/straggler degradation                (beyond paper)
+  kernels  — kernel micro-benchmarks + traffic models
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow on CPU)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (fault_tolerance_bench, fig2_capacity,
+                            fig2_large_scale, kernel_bench,
+                            table1_complexity, table3_relative_error)
+    suites = {
+        "table1": table1_complexity.run,
+        "table3": table3_relative_error.run,
+        "fig2": fig2_capacity.run,
+        "fig2ef": fig2_large_scale.run,
+        "ft": fault_tolerance_bench.run,
+        "kernels": kernel_bench.run,
+    }
+    for name, fn in suites.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"# --- {name} ---", flush=True)
+        fn(quick=quick)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Paper Table 1 (our rows): capacity vs rounds vs oracle evaluations.
+
+Validates, on real runs:
+  * r = ⌈log_{μ/k}(n/μ)⌉ + 1 rounds (Prop 3.1),
+  * O(n/μ) machines in round 0,
+  * O(nk) oracle evaluations.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Timer, eval_objective
+from repro.core import TreeConfig, tree_maximize
+
+
+def run(quick: bool = True):
+    n, d, k = (6000, 12, 10) if quick else (50_000, 12, 25)
+    r = np.random.default_rng(0)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    obj = eval_objective(data, 256)
+    rows = []
+    for mu in (2 * k, 4 * k, 16 * k,
+               int(math.ceil(math.sqrt(n * k))), n):
+        cfg = TreeConfig(k=k, capacity=mu, seed=0)
+        with Timer() as t:
+            res = tree_maximize(obj, jnp.asarray(data), cfg)
+        bound = cfg.round_bound(n)
+        rows.append((mu, res.rounds, bound, res.machines_per_round[0],
+                     math.ceil(n / mu), res.oracle_calls,
+                     res.oracle_calls / (n * k), t.s))
+    print("table1: mu,rounds,round_bound,machines_r0,ceil(n/mu),"
+          "oracle_calls,calls_over_nk,sec")
+    for row in rows:
+        print("table1," + ",".join(f"{v:.3g}" if isinstance(v, float)
+                                   else str(v) for v in row))
+        assert row[1] <= row[2] + 1 and row[3] == row[4]
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Distributed TREE across a real multi-device mesh with failure injection.
+
+    PYTHONPATH=src python examples/distributed_tree.py     (spawns 8 devices)
+
+Machines shard over devices via shard_map; we kill 3 machines in round 0
+mid-run and show the algorithm completes with negligible quality loss
+(Lemma 3.4 graceful degradation), then restart from a round checkpoint.
+"""
+import os
+import sys
+
+if "XLA_FLAGS" not in os.environ:       # must run before jax import
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (ExemplarClustering, TreeConfig, centralized_greedy,
+                        make_submod_mesh, tree_maximize)
+from repro.data import datasets
+
+print(f"devices: {len(jax.devices())}")
+data = datasets.csn(n=8_000, d=17)
+k = 20
+obj = ExemplarClustering(jnp.asarray(data[:512]))
+dj = jnp.asarray(data)
+mesh = make_submod_mesh()
+
+cent = float(centralized_greedy(obj, dj, k).value)
+
+with tempfile.TemporaryDirectory() as ckpt:
+    cfg = TreeConfig(k=k, capacity=200, seed=0, checkpoint_dir=ckpt)
+    healthy = tree_maximize(obj, dj, cfg, mesh=mesh)
+    print(f"healthy run   : {healthy.value / cent:.2%} of centralized, "
+          f"{healthy.rounds} rounds on {mesh.devices.size} devices")
+
+    failed = tree_maximize(obj, dj, cfg, mesh=mesh,
+                           fail_machines={0: [0, 1, 2]})
+    print(f"3 dead machines: {failed.value / cent:.2%} "
+          f"(graceful degradation)")
+
+    resumed = tree_maximize(
+        obj, dj, TreeConfig(k=k, capacity=200, seed=0, checkpoint_dir=ckpt,
+                            resume=True), mesh=mesh)
+    print(f"restart from round checkpoint: {resumed.value / cent:.2%} "
+          f"(best-so-far preserved)")

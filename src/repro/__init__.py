@@ -1,0 +1,3 @@
+"""repro — horizontally scalable submodular maximization (ICML 2016)
+as a production JAX framework: core algorithm + LM substrate."""
+__version__ = "1.0.0"

@@ -1,0 +1,28 @@
+"""Architecture registry: --arch <id> resolves here."""
+from repro.configs import base
+
+ARCH_IDS = [
+    "deepseek-moe-16b", "olmoe-1b-7b", "mistral-large-123b", "qwen3-8b",
+    "gemma-2b", "deepseek-coder-33b", "whisper-tiny", "rwkv6-1.6b",
+    "internvl2-76b", "jamba-1.5-large-398b",
+]
+
+_MODULES = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mistral-large-123b": "mistral_large_123b",
+    "qwen3-8b": "qwen3_8b",
+    "gemma-2b": "gemma_2b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "whisper-tiny": "whisper_tiny",
+    "rwkv6-1.6b": "rwkv6_1_6b",
+    "internvl2-76b": "internvl2_76b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+}
+
+
+def get_config(arch: str) -> base.ModelConfig:
+    import importlib
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").CONFIG

@@ -1,0 +1,19 @@
+"""The paper's own workload: distributed TREE round for exemplar clustering.
+
+Production-scale cell used in the dry-run/roofline alongside the LM cells:
+512 machines (devices) x capacity 65_536 items x d=1024 features,
+eval subsample 8_192, k=256.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SubmodConfig:
+    k: int = 256
+    capacity: int = 65_536
+    n_eval: int = 8_192
+    d: int = 1_024
+    algorithm: str = "greedy"
+
+
+CONFIG = SubmodConfig()

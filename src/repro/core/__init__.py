@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution: horizontally scalable submodular
+maximization (tree-based compression with beta-nice subprocedures)."""
+from repro.core.algorithms import (SelectResult, greedy, run_algorithm,
+                                   stochastic_greedy, threshold_greedy)
+from repro.core.baselines import (BaselineResult, centralized_greedy,
+                                  randgreedi, random_subset)
+from repro.core.constraints import (Intersection, Knapsack, PartitionMatroid,
+                                    Unconstrained)
+from repro.core.distributed import RoundResult, make_submod_mesh, run_round
+from repro.core.objectives import (ActiveSetSelection, ExemplarClustering,
+                                   FacilityLocation, WeightedCoverage)
+from repro.core.partition import balanced_partition, gather_partition, n_parts
+from repro.core.tree import TreeConfig, TreeResult, tree_maximize
+
+__all__ = [
+    "SelectResult", "greedy", "stochastic_greedy", "threshold_greedy",
+    "run_algorithm", "BaselineResult", "centralized_greedy", "randgreedi",
+    "random_subset", "Unconstrained", "Knapsack", "PartitionMatroid",
+    "Intersection", "RoundResult", "make_submod_mesh", "run_round",
+    "ActiveSetSelection", "ExemplarClustering", "FacilityLocation",
+    "WeightedCoverage", "balanced_partition", "gather_partition", "n_parts",
+    "TreeConfig", "TreeResult", "tree_maximize",
+]

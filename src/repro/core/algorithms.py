@@ -1,0 +1,202 @@
+"""β-nice single-machine algorithms (paper Def. 3.2), shape-static JAX.
+
+All algorithms operate on a ``(cap, d)`` item block ``T`` with a ``(cap,)``
+validity mask and return at most ``k`` selected block positions.  Shapes never
+depend on data, so every algorithm can be jit'd, vmapped over machines, and
+shard_mapped over the device mesh.
+
+β-niceness (established in the paper / its citations):
+  * :func:`greedy` — classic greedy with *consistent tie-breaking*
+    (``argmax`` → lowest index): **1-nice**.  Equals lazy greedy output.
+  * :func:`threshold_greedy` — Badanidiyuru & Vondrák descending-threshold
+    algorithm: **(1+2ε)-nice**.
+  * :func:`stochastic_greedy` — Mirzasoleiman et al. 2015; no β-nice proof,
+    used empirically (paper §4.4).
+
+TPU adaptation note (DESIGN.md §3): the paper runs *lazy* greedy per machine
+to cut oracle calls on CPUs.  On TPU, one greedy step evaluates all ``cap``
+marginal gains as a single MXU contraction (the exemplar_gains kernel), so
+plain greedy *is* the fast variant — priority queues would serialise the VPU.
+Lazy greedy (identical output) lives in :mod:`repro.core.reference` and is
+used for large centralized-baseline runs on CPU.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.constraints import Unconstrained
+
+NEG_INF = -1e30
+
+
+class SelectResult(NamedTuple):
+    """Result of a single-machine selection run."""
+
+    sel_idx: jax.Array    # (k,) int32 block positions, -1 where unused
+    sel_mask: jax.Array   # (k,) bool
+    value: jax.Array      # f(selected)
+    oracle_calls: jax.Array  # scalar int32 — number of marginal-gain evals
+
+
+def _tree_where(pred, a, b):
+    return jax.tree_util.tree_map(
+        lambda x, y: jnp.where(
+            jnp.reshape(pred, (1,) * x.ndim) if x.ndim else pred, x, y),
+        a, b)
+
+
+def _dummy_attrs(T: jax.Array) -> jax.Array:
+    return jnp.zeros((T.shape[0], 1), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# GREEDY — 1-nice
+# ---------------------------------------------------------------------------
+
+
+def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
+           constraint=None, attrs: jax.Array | None = None) -> SelectResult:
+    """Classic greedy with consistent (lowest-index) tie-breaking.
+
+    Supports any hereditary constraint; the cardinality bound is the loop
+    bound ``k`` (for pure cardinality problems pass ``constraint=None``).
+    """
+    cap = T.shape[0]
+    constraint = constraint or Unconstrained()
+    attrs = _dummy_attrs(T) if attrs is None else attrs
+
+    def step(carry, _):
+        state, cstate, avail, calls = carry
+        cand = avail & constraint.feasible(cstate, attrs)
+        gains = obj.gains(state, T, cand)
+        best = jnp.argmax(gains)                       # lowest index on ties
+        ok = gains[best] > NEG_INF / 2                 # any candidate at all?
+        new_state = obj.update(state, T, best)
+        state = _tree_where(ok, new_state, state)
+        cstate = _tree_where(ok, constraint.update(cstate, attrs, best), cstate)
+        avail = avail & ~(ok & (jnp.arange(cap) == best))
+        calls = calls + jnp.sum(cand.astype(jnp.int32))
+        idx = jnp.where(ok, best.astype(jnp.int32), jnp.int32(-1))
+        return (state, cstate, avail, calls), (idx, ok)
+
+    init = (obj.init_state(T, mask), constraint.init_state(), mask,
+            jnp.int32(0))
+    (state, _, _, calls), (sel_idx, sel_mask) = jax.lax.scan(
+        step, init, None, length=k)
+    return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
+
+
+# ---------------------------------------------------------------------------
+# STOCHASTIC GREEDY (lazier-than-lazy) — paper §4.4 subprocedure
+# ---------------------------------------------------------------------------
+
+
+def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
+                      key: jax.Array, *, eps: float = 0.5) -> SelectResult:
+    """Each step draws a uniform random candidate subset of size
+    s = ⌈(cap/k)·ln(1/ε)⌉ and takes its best element.
+
+    For row-wise objectives the gain evaluation is restricted to the sampled
+    rows (a genuinely smaller MXU contraction); otherwise gains are computed
+    masked-full (same semantics, SIMD-style).
+    """
+    import math
+
+    cap = T.shape[0]
+    s = min(cap, max(1, math.ceil(cap / k * math.log(1.0 / eps))))
+    rowwise = getattr(obj, "rowwise_gains", False)
+
+    def step(carry, key_t):
+        state, avail, calls = carry
+        # uniform random s-subset of available positions:
+        scores = jax.random.uniform(key_t, (cap,))
+        scores = jnp.where(avail, scores, 2.0)        # unavailable sink to end
+        _, sub_idx = jax.lax.top_k(-scores, s)        # s smallest scores
+        sub_avail = avail[sub_idx]
+        if rowwise:
+            g = obj.gains(state, T[sub_idx], sub_avail)
+        else:
+            g = obj.gains(state, T, avail)[sub_idx]
+            g = jnp.where(sub_avail, g, NEG_INF)
+        b = jnp.argmax(g)
+        best = sub_idx[b]
+        ok = g[b] > NEG_INF / 2
+        state = _tree_where(ok, obj.update(state, T, best), state)
+        avail = avail & ~(ok & (jnp.arange(cap) == best))
+        calls = calls + jnp.sum(sub_avail.astype(jnp.int32))
+        return (state, avail, calls), (jnp.where(ok, best.astype(jnp.int32),
+                                                 jnp.int32(-1)), ok)
+
+    keys = jax.random.split(key, k)
+    init = (obj.init_state(T, mask), mask, jnp.int32(0))
+    (state, _, calls), (sel_idx, sel_mask) = jax.lax.scan(step, init, keys)
+    return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
+
+
+# ---------------------------------------------------------------------------
+# THRESHOLD GREEDY (Badanidiyuru & Vondrák 2014) — (1+2ε)-nice
+# ---------------------------------------------------------------------------
+
+
+def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
+                     eps: float = 0.1) -> SelectResult:
+    """Descending thresholds τ = d_max·(1-ε)^l down to (ε/2k)·d_max; one
+    sequential pass per threshold adding every item whose current marginal
+    gain meets τ (stopping at k items)."""
+    import math
+
+    cap = T.shape[0]
+    n_levels = max(1, math.ceil(math.log(2.0 * k / eps) / eps))
+
+    state0 = obj.init_state(T, mask)
+    g0 = obj.gains(state0, T, mask)
+    d_max = jnp.maximum(jnp.max(g0), 1e-12)
+
+    def gain_at(state, i):
+        if getattr(obj, "rowwise_gains", False):
+            return obj.gains(state, T[i][None, :], jnp.ones((1,), bool))[0]
+        return obj.gains(state, T, jnp.ones((cap,), bool))[i]
+
+    def item_pass(i, carry):
+        state, avail, count, calls, sel_idx, tau = carry
+        g = gain_at(state, i)
+        take = avail[i] & (count < k) & (g >= tau)
+        state = _tree_where(take, obj.update(state, T, i), state)
+        sel_idx = jnp.where(take, sel_idx.at[count].set(i), sel_idx)
+        count = count + take.astype(jnp.int32)
+        avail = avail & ~(take & (jnp.arange(cap) == i))
+        return state, avail, count, calls + avail[i].astype(jnp.int32), sel_idx, tau
+
+    def level(l, carry):
+        state, avail, count, calls, sel_idx = carry
+        tau = d_max * (1.0 - eps) ** l.astype(jnp.float32)
+        state, avail, count, calls, sel_idx, _ = jax.lax.fori_loop(
+            0, cap, item_pass, (state, avail, count, calls, sel_idx, tau))
+        return state, avail, count, calls, sel_idx
+
+    sel_idx = jnp.full((k,), -1, jnp.int32)
+    state, _, count, calls, sel_idx = jax.lax.fori_loop(
+        0, n_levels, level,
+        (state0, mask, jnp.int32(0), jnp.int32(cap), sel_idx))
+    sel_mask = jnp.arange(k) < count
+    return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+# ---------------------------------------------------------------------------
+
+
+def run_algorithm(name: str, obj, T, mask, k, *, key=None, eps=0.5,
+                  constraint=None, attrs=None) -> SelectResult:
+    if name == "greedy":
+        return greedy(obj, T, mask, k, constraint=constraint, attrs=attrs)
+    if name == "stochastic_greedy":
+        assert key is not None, "stochastic_greedy needs a PRNG key"
+        return stochastic_greedy(obj, T, mask, k, key, eps=eps)
+    if name == "threshold_greedy":
+        return threshold_greedy(obj, T, mask, k, eps=eps)
+    raise ValueError(f"unknown algorithm {name!r}")

@@ -1,0 +1,66 @@
+"""Baselines the paper compares against (§4.3): centralized GREEDY,
+two-round RandGreedI (Barbosa et al. 2015a), and RANDOM-k."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import algorithms, partition as part_lib
+
+
+class BaselineResult(NamedTuple):
+    sel_rows: jax.Array
+    sel_mask: jax.Array
+    value: jax.Array
+
+
+def centralized_greedy(obj, data: jax.Array, k: int) -> BaselineResult:
+    """GREEDY on the full ground set (μ ≥ n regime; 1 - 1/e)."""
+    n = data.shape[0]
+    res = algorithms.greedy(obj, data, jnp.ones((n,), bool), k)
+    safe = jnp.maximum(res.sel_idx, 0)
+    rows = jnp.where(res.sel_mask[:, None], data[safe], 0.0)
+    return BaselineResult(rows, res.sel_mask, res.value)
+
+
+def random_subset(obj, data: jax.Array, k: int, key: jax.Array) -> BaselineResult:
+    idx = jax.random.choice(key, data.shape[0], (k,), replace=False)
+    rows = data[idx]
+    mask = jnp.ones((k,), bool)
+    return BaselineResult(rows, mask, obj.evaluate(rows, mask))
+
+
+def randgreedi(obj, data: jax.Array, k: int, m: int,
+               key: jax.Array) -> BaselineResult:
+    """Two-round RandGreedI: random partition to m machines, GREEDY(k) each,
+    GREEDY on the union of partial solutions; return the best of the final
+    solution and the best partial solution ((1-1/e)/2 expected)."""
+    n, d = data.shape
+    cap = math.ceil(n / m)
+    part = part_lib.balanced_partition(key, n, m, cap=cap)
+    blocks, bmask = part_lib.gather_partition(data, part)
+
+    def solve(T, msk):
+        res = algorithms.greedy(obj, T, msk, k)
+        safe = jnp.maximum(res.sel_idx, 0)
+        rows = jnp.where(res.sel_mask[:, None], T[safe], 0.0)
+        return rows, res.sel_mask, jnp.where(jnp.any(res.sel_mask),
+                                             res.value, -jnp.inf)
+
+    rows, smask, vals = jax.vmap(solve)(blocks, bmask)        # (m, k, d)
+    union_rows = rows.reshape(m * k, d)
+    union_mask = smask.reshape(m * k)
+    res = algorithms.greedy(obj, union_rows, union_mask, k)
+    safe = jnp.maximum(res.sel_idx, 0)
+    final_rows = jnp.where(res.sel_mask[:, None], union_rows[safe], 0.0)
+
+    i = jnp.argmax(vals)
+    use_final = res.value >= vals[i]
+    sel_rows = jnp.where(use_final, final_rows, rows[i])
+    sel_mask = jnp.where(use_final, res.sel_mask, smask[i])
+    return BaselineResult(sel_rows, sel_mask, jnp.maximum(res.value, vals[i]))

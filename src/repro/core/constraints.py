@@ -1,0 +1,125 @@
+"""Hereditary constraints (paper §3.2).
+
+A constraint ℐ is *hereditary* iff S ∈ ℐ implies every subset of S ∈ ℐ.
+Theorem 3.5 shows Algorithm 1 with GREEDY achieves α/r for any hereditary ℐ.
+
+Interface (shape-static, jit-friendly), operating on a per-item attribute
+array ``attrs`` of shape (cap, a) carried alongside the item block:
+
+    cstate = c.init_state()
+    feas   = c.feasible(cstate, attrs)   # (cap,) bool: may item be added NOW?
+    cstate = c.update(cstate, attrs, idx)
+
+Cardinality is implicit in the greedy loop bound; the classes below add
+knapsack and partition-matroid families (and their intersection, which is
+again hereditary).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Unconstrained:
+    """Only the cardinality bound of the greedy loop applies."""
+
+    def tree_flatten(self):
+        return (), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls()
+
+    def init_state(self):
+        return jnp.float32(0.0)
+
+    def feasible(self, cstate, attrs):
+        return jnp.ones((attrs.shape[0],), bool)
+
+    def update(self, cstate, attrs, idx):
+        return cstate
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Knapsack:
+    """Σ_{i∈S} w_i ≤ budget, with w_i = attrs[i, col]."""
+
+    budget: float
+    col: int = 0
+
+    def tree_flatten(self):
+        return (), (self.budget, self.col)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux)
+
+    def init_state(self):
+        return jnp.float32(0.0)  # weight used so far
+
+    def feasible(self, cstate, attrs):
+        return cstate + attrs[:, self.col] <= self.budget + 1e-6
+
+    def update(self, cstate, attrs, idx):
+        return cstate + attrs[idx, self.col]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class PartitionMatroid:
+    """≤ caps[g] items from each group g; group id = attrs[i, col] (int)."""
+
+    caps: tuple[int, ...]
+    col: int = 0
+
+    def tree_flatten(self):
+        return (), (self.caps, self.col)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*aux)
+
+    def init_state(self):
+        return jnp.zeros((len(self.caps),), jnp.int32)
+
+    def feasible(self, cstate, attrs):
+        gid = attrs[:, self.col].astype(jnp.int32)
+        caps = jnp.asarray(self.caps, jnp.int32)
+        return cstate[gid] < caps[gid]
+
+    def update(self, cstate, attrs, idx):
+        gid = attrs[idx, self.col].astype(jnp.int32)
+        return cstate.at[gid].add(1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Intersection:
+    """Intersection of hereditary constraints is hereditary."""
+
+    parts: tuple[Any, ...]
+
+    def tree_flatten(self):
+        return (self.parts,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def init_state(self):
+        return tuple(p.init_state() for p in self.parts)
+
+    def feasible(self, cstate, attrs):
+        feas = jnp.ones((attrs.shape[0],), bool)
+        for p, s in zip(self.parts, cstate):
+            feas = feas & p.feasible(s, attrs)
+        return feas
+
+    def update(self, cstate, attrs, idx):
+        return tuple(p.update(s, attrs, idx) for p, s in zip(self.parts, cstate))

@@ -1,0 +1,71 @@
+"""Balanced random partitioning via the paper's virtual-location scheme (§3).
+
+"To partition N items to L parts, assign each part ⌈N/L⌉ virtual free
+locations; pick items one by one and place each in a location chosen
+uniformly at random among all available locations."
+
+Placing items one-by-one into uniformly random available slots induces a
+uniformly random injection of items into the L·⌈N/L⌉ slots — equivalently:
+draw a uniform permutation of all slots and map item j to slot perm⁻¹(j).
+That formulation is shape-static and collective-friendly, so it is what both
+the serial and the distributed drivers use.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Partition(NamedTuple):
+    idx: jax.Array   # (L, cap) int32 — item index per slot, -1 for empty
+    mask: jax.Array  # (L, cap) bool
+
+
+def n_parts(n_items: int, capacity: int) -> int:
+    """m_t = ⌈|A_t| / μ⌉ (Algorithm 1, line 7)."""
+    return max(1, math.ceil(n_items / capacity))
+
+
+def balanced_partition(key: jax.Array, n_items: int, L: int,
+                       cap: int | None = None) -> Partition:
+    """Partition items {0..n_items-1} into L parts of ≤ ⌈N/L⌉ ≤ cap slots."""
+    per = math.ceil(n_items / L)
+    if cap is not None:
+        assert per <= cap, f"capacity violated: ⌈{n_items}/{L}⌉={per} > μ={cap}"
+        per = cap  # fixed-width blocks; extra slots stay empty (masked)
+    n_slots = L * per
+    perm = jax.random.permutation(key, n_slots)
+    slot_item = jnp.where(perm < n_items, perm, -1).astype(jnp.int32)
+    idx = slot_item.reshape(L, per)
+    return Partition(idx, idx >= 0)
+
+
+def scatter_rows(items: jax.Array, item_mask: jax.Array, key: jax.Array,
+                 L: int, cap: int) -> tuple[jax.Array, jax.Array]:
+    """Randomly place masked rows of ``items`` into an (L, cap, d) buffer.
+
+    Used between tree rounds: the ≤ n valid rows of ``items`` (n = leading
+    dim) are assigned uniformly at random to the L·cap slots; invalid rows
+    land on slots that stay masked, preserving uniformity of valid rows by
+    symmetry.  Requires L·cap ≥ n.
+    """
+    n, d = items.shape
+    n_slots = L * cap
+    assert n_slots >= n, (n_slots, n)
+    perm = jax.random.permutation(key, n_slots)
+    slots = perm[:n]                                   # slot of each item row
+    buf = jnp.zeros((n_slots, d), items.dtype).at[slots].set(items)
+    bmask = jnp.zeros((n_slots,), bool).at[slots].set(item_mask)
+    return buf.reshape(L, cap, d), bmask.reshape(L, cap)
+
+
+def gather_partition(data: jax.Array, part: Partition) -> tuple[jax.Array, jax.Array]:
+    """Materialise (L, cap, d) item blocks from a (n, d) dataset."""
+    safe = jnp.maximum(part.idx, 0)
+    blocks = data[safe]
+    blocks = jnp.where(part.mask[..., None], blocks, 0.0)
+    return blocks, part.mask

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the compute hot-spots, with pure-jnp oracles.
+Public API: repro.kernels.ops (padding + dispatch wrappers)."""

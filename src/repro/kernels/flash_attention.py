@@ -1,0 +1,109 @@
+"""Blocked online-softmax attention (Pallas, TPU target) with GQA.
+
+The LM-substrate hot spot: training/prefill attention for the assigned
+architectures.  Classic flash pattern adapted to TPU: the KV axis is the
+sequential minor grid dimension; running max / normaliser / accumulator live
+in VMEM scratch across KV steps, so the (S, T) logit matrix never exists in
+HBM.  GQA is expressed through the K/V index maps (query head h reads KV head
+h // group) — no repeat/materialisation of KV heads.
+
+Grid: (B, H, S/bq, T/bk).  Causal masking uses global positions with a
+(T - S) offset so the same kernel serves training (S == T) and incremental
+decode (S == 1, T == cache length).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30  # python float: jnp scalars would be captured consts in the kernel
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+            *, scale: float, causal: bool, bq: int, bk: int,
+            seq_q: int, seq_kv: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+    nkv = pl.num_programs(3)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, _NEG)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = (seq_kv - seq_q) + i * bq + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, bk), 0)
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(kpos <= qpos, s, _NEG)
+
+    m_prev = m_scr[...]                             # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_scr[...] = alpha * acc_scr[...] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == nkv - 1)
+    def _finalize():
+        l = l_scr[...]
+        o = acc_scr[...] / jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "bq", "bk", "interpret"))
+def flash_attention_pallas(
+    q: jax.Array,  # (B, H, S, D), S % bq == 0
+    k: jax.Array,  # (B, Hkv, T, D), T % bk == 0
+    v: jax.Array,  # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    group = H // Hkv
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+        seq_q=S, seq_kv=T)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // bq, T // bk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,148 @@
+"""Public jit'd wrappers for every kernel: pad → dispatch → slice.
+
+Dispatch policy (``impl``):
+  * ``"auto"``   — compiled Pallas on TPU; pure-jnp reference elsewhere
+                   (this CPU container lowers the reference path; the Pallas
+                   path is validated with interpret=True in tests).
+  * ``"ref"``    — force the pure-jnp oracle (:mod:`repro.kernels.ref`).
+  * ``"pallas"`` — force Pallas, interpret=True off-TPU so it still runs.
+
+The wrappers own the padding contract so kernels can assume exact tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.exemplar_gains import exemplar_gains_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rbf_kernel import rbf_kernel_pallas
+from repro.kernels.wkv6 import wkv6_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_pallas(impl: str) -> bool:
+    if impl == "auto":
+        return _on_tpu()
+    if impl == "pallas":
+        return True
+    if impl == "ref":
+        return False
+    raise ValueError(f"unknown impl {impl!r}")
+
+
+def _interpret() -> bool:
+    return not _on_tpu()
+
+
+def _pad_rows(x: jax.Array, mult: int, value: float = 0.0) -> jax.Array:
+    n = x.shape[0]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+
+
+def pairwise_sqdist(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """(n, d), (m, d) -> (n, m). Always the reference (XLA fuses this fine)."""
+    return ref.pairwise_sqdist(X, Y)
+
+
+def exemplar_gains(
+    X: jax.Array,
+    E: jax.Array,
+    cur_min: jax.Array,
+    *,
+    impl: str = "auto",
+    bn: int = 256,
+    bm: int = 256,
+    compute_dtype=None,
+) -> jax.Array:
+    """Marginal gains for exemplar clustering. See kernels/exemplar_gains.py."""
+    if not _use_pallas(impl):
+        return ref.exemplar_gains(X, E, cur_min, compute_dtype=compute_dtype)
+    n, m = X.shape[0], E.shape[0]
+    bn = min(bn, max(8, n))
+    bm = min(bm, max(8, m))
+    Xp = _pad_rows(X, bn)
+    Ep = _pad_rows(E, bm)
+    cmp_ = _pad_rows(cur_min, bm)  # zero-pad ⇒ padded columns contribute 0
+    raw = exemplar_gains_pallas(Xp, Ep, cmp_, bn=bn, bm=bm,
+                                interpret=_interpret())
+    return raw[:n] / m
+
+
+def rbf_kernel(
+    X: jax.Array,
+    Y: jax.Array,
+    h: float,
+    *,
+    impl: str = "auto",
+    bn: int = 256,
+    bm: int = 256,
+) -> jax.Array:
+    """RBF kernel matrix exp(-||x-y||²/h²). See kernels/rbf_kernel.py."""
+    if not _use_pallas(impl):
+        return ref.rbf_kernel(X, Y, h)
+    n, m = X.shape[0], Y.shape[0]
+    bn = min(bn, max(8, n))
+    bm = min(bm, max(8, m))
+    Kp = rbf_kernel_pallas(_pad_rows(X, bn), _pad_rows(Y, bm), h=float(h),
+                           bn=bn, bm=bm, interpret=_interpret())
+    return Kp[:n, :m]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_valid_len=None,
+    impl: str = "auto",
+    bq: int = 128,
+    bk: int = 128,
+) -> jax.Array:
+    """Attention with GQA broadcast. See kernels/flash_attention.py.
+
+    kv_valid_len (decode against a partially filled cache) routes to the
+    reference path: decode attention is a memory-bound gather, not the
+    flash kernel's target (train/prefill).
+    """
+    if kv_valid_len is not None or not _use_pallas(impl):
+        return ref.flash_attention(q, k, v, causal=causal, scale=scale,
+                                   kv_valid_len=kv_valid_len)
+    S, T = q.shape[2], k.shape[2]
+    bq = min(bq, S)
+    bk = min(bk, T)
+    assert S % bq == 0 and T % bk == 0, "pad sequence to block multiple"
+    return flash_attention_pallas(q, k, v, causal=causal, scale=scale,
+                                  bq=bq, bk=bk, interpret=_interpret())
+
+
+def wkv6(
+    r: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    u: jax.Array,
+    *,
+    impl: str = "auto",
+    bt: int = 128,
+) -> jax.Array:
+    """RWKV-6 WKV recurrence. See kernels/wkv6.py."""
+    if not _use_pallas(impl):
+        return ref.wkv6(r, k, v, w, u)
+    T = r.shape[2]
+    bt = min(bt, T)
+    assert T % bt == 0, "pad time to block multiple"
+    return wkv6_pallas(r, k, v, w, u, bt=bt, interpret=_interpret())

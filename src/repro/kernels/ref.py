@@ -1,0 +1,135 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each Pallas kernel is validated against
+the function of the same name here (tests/test_kernels.py sweeps shapes and
+dtypes with ``assert_allclose``).  They are also the production implementation
+on backends without Pallas support (this CPU container).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(X: jax.Array, Y: jax.Array) -> jax.Array:
+    """(n, d), (m, d) -> (n, m) squared euclidean distances."""
+    x2 = jnp.sum(X * X, axis=-1, keepdims=True)          # (n, 1)
+    y2 = jnp.sum(Y * Y, axis=-1, keepdims=True).T        # (1, m)
+    d2 = x2 + y2 - 2.0 * (X @ Y.T)
+    return jnp.maximum(d2, 0.0)
+
+
+def exemplar_gains(X: jax.Array, E: jax.Array, cur_min: jax.Array,
+                   compute_dtype=None) -> jax.Array:
+    """Marginal gains of the exemplar-clustering objective.
+
+    gains[i] = (1/m) * sum_j max(0, cur_min[j] - ||X[i] - E[j]||^2)
+
+    X: (n, d) candidates, E: (m, d) eval set, cur_min: (m,).
+    compute_dtype=bfloat16 halves the d2-tile HBM traffic (§Perf); the
+    contraction still accumulates fp32 (preferred_element_type).
+    """
+    if compute_dtype is not None:
+        Xc, Ec = X.astype(compute_dtype), E.astype(compute_dtype)
+        x2 = jnp.sum(X.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+        e2 = jnp.sum(E.astype(jnp.float32) ** 2, axis=-1, keepdims=True).T
+        xy = jax.lax.dot_general(Xc, Ec, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(x2 + e2 - 2.0 * xy, 0.0)
+    else:
+        d2 = pairwise_sqdist(X, E)                        # (n, m)
+    contrib = jnp.maximum(cur_min[None, :] - d2, 0.0)
+    return jnp.sum(contrib, axis=-1) / E.shape[0]
+
+
+def rbf_kernel(X: jax.Array, Y: jax.Array, h: float) -> jax.Array:
+    """K[i, j] = exp(-||x_i - y_j||^2 / h^2)  (paper §4.2, h=0.5)."""
+    return jnp.exp(-pairwise_sqdist(X, Y) / (h * h))
+
+
+def flash_attention(
+    q: jax.Array,  # (B, H, S, D)
+    k: jax.Array,  # (B, Hkv, T, D)
+    v: jax.Array,  # (B, Hkv, T, D)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    kv_valid_len: jax.Array | int | None = None,
+) -> jax.Array:
+    """Reference attention with GQA head-group broadcasting.
+
+    kv_valid_len: only keys with position < kv_valid_len participate (decode
+    against a fixed-size, partially filled cache buffer).
+    """
+    B, H, S, D = q.shape
+    Hkv = k.shape[1]
+    T = k.shape[2]
+    if scale is None:
+        scale = 1.0 / (D**0.5)
+    G = H // Hkv
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def on_chunk(q_chunk, q_off):
+        """q_chunk: (B, Hkv, G, Sc, D) grouped — no KV head repeat."""
+        Sc = q_chunk.shape[3]
+        logits = jnp.einsum("bkgsd,bktd->bkgst", q_chunk, kf) * scale
+        kpos = jnp.arange(T)[None, :]
+        if causal:
+            qpos = q_off + jnp.arange(Sc)[:, None] + (T - S)
+            logits = jnp.where(kpos <= qpos, logits, -1e30)
+        if kv_valid_len is not None:
+            logits = jnp.where(kpos < kv_valid_len, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bkgst,bktd->bkgsd", probs, vf)
+
+    qg = q.astype(jnp.float32).reshape(B, Hkv, G, S, D)
+    # blocked over queries when the (S, T) logit plane would be large —
+    # keeps the lowered module's live memory O(S·chunk) like the TPU kernel
+    CHUNK = 1024
+    if S > CHUNK and S % CHUNK == 0:
+        qc = qg.reshape(B, Hkv, G, S // CHUNK, CHUNK, D).transpose(
+            3, 0, 1, 2, 4, 5)
+        # recompute probs in backward (flash-attention memory behaviour)
+        chunk_fn = jax.checkpoint(on_chunk, prevent_cse=False)
+        def body(off, qck):
+            return off + CHUNK, chunk_fn(qck, off)
+        _, oc = jax.lax.scan(body, jnp.int32(0), qc)
+        o = oc.transpose(1, 2, 3, 0, 4, 5).reshape(B, H, S, D)
+    else:
+        o = on_chunk(qg, 0).reshape(B, H, S, D)
+    return o.astype(q.dtype)
+
+
+def wkv6(
+    r: jax.Array,  # (B, H, T, Dk)
+    k: jax.Array,  # (B, H, T, Dk)
+    v: jax.Array,  # (B, H, T, Dv)
+    w: jax.Array,  # (B, H, T, Dk)  decay in (0, 1), data-dependent (RWKV-6 "Finch")
+    u: jax.Array,  # (H, Dk)        per-head bonus
+) -> jax.Array:
+    """RWKV-6 WKV recurrence (sequential oracle).
+
+      y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t)
+      S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    """
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+
+    def head_scan(r_h, k_h, v_h, w_h, u_h):
+        def step(S, inp):
+            r_t, k_t, v_t, w_t = inp
+            kv = k_t[:, None] * v_t[None, :]                 # (Dk, Dv)
+            y = r_t @ (S + u_h[:, None] * kv)                # (Dv,)
+            S = w_t[:, None] * S + kv
+            return S, y
+
+        S0 = jnp.zeros((Dk, Dv), jnp.float32)
+        _, ys = jax.lax.scan(step, S0, (r_h, k_h, v_h, w_h))
+        return ys
+
+    fn = jax.vmap(jax.vmap(head_scan, in_axes=(0, 0, 0, 0, 0)),
+                  in_axes=(0, 0, 0, 0, None))
+    return fn(r.astype(jnp.float32), k.astype(jnp.float32),
+              v.astype(jnp.float32), w.astype(jnp.float32),
+              u.astype(jnp.float32)).astype(r.dtype)

@@ -1,0 +1,246 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: device count locks at first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+        [--multi-pod | --single-pod | --both] [--out reports/dryrun.json]
+
+For each cell this lowers the real train/prefill/decode step with fully
+sharded abstract inputs on the production mesh, compiles it, and records
+memory_analysis / cost_analysis / collective traffic — the inputs to
+EXPERIMENTS.md §Dry-run and §Roofline.  Also lowers the paper's own workload
+(distributed TREE round over all 512 devices) as the `submod-tree` cell.
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import SHAPES, cells_for
+from repro.launch import specs as specs_lib
+from repro.launch.hlo_analyzer import analyze
+from repro.launch.mesh import make_production_mesh
+from repro.models import get_model
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+
+def _step_fn(cfg, shape, opt_cfg):
+    model = get_model(cfg)
+    if shape.kind == "train":
+        tstep = ts_lib.make_train_step(cfg, opt_cfg)
+        return lambda state, batch: tstep(state, batch)
+    if shape.kind == "prefill":
+        def prefill_step(params, tokens, embeds=None):
+            B = tokens.shape[0]
+            extra = cfg.frontend_tokens if cfg.family == "vlm" else 0
+            cache = model.init_cache(cfg, B, shape.seq_len + extra)
+            return model.prefill(params, cfg, tokens, cache, embeds=embeds)
+        return prefill_step
+
+    def decode(params, cache, tokens):
+        return model.decode_step(params, cfg, cache, tokens)
+    return decode
+
+
+def dryrun_cell(arch: str, shape_name: str, multi_pod: bool,
+                overrides: dict | None = None) -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    opt_cfg = opt_lib.OptConfig(moment_dtype=cfg.moment_dtype)
+    specs = specs_lib.input_specs(cfg, shape, mesh, opt_cfg=opt_cfg)
+    fn = _step_fn(cfg, shape, opt_cfg)
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            lowered = jax.jit(fn, donate_argnums=(0,)).lower(
+                specs["state"], specs["batch"])
+        elif shape.kind == "prefill":
+            args = [specs["params"], specs["tokens"]]
+            if cfg.frontend:
+                args.append(specs["embeds"])
+            lowered = jax.jit(fn).lower(*args)
+        else:
+            lowered = jax.jit(fn, donate_argnums=(1,)).lower(
+                specs["params"], specs["cache"], specs["tokens"])
+        t1 = time.time()
+        compiled = lowered.compile()
+    t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    hlo = analyze(compiled.as_text())   # trip-count-aware; PER DEVICE
+    n_dev = mesh.devices.size
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind,
+        "n_devices": int(n_dev),
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        # memory_analysis is PER-DEVICE for SPMD modules
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "out_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes": int(mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes
+                          - mem.alias_size_in_bytes),
+        "flops_per_dev": float(hlo["flops"]),
+        "bytes_per_dev": float(hlo["hbm_bytes"]),
+        "collective_bytes_per_dev": hlo["collectives"],
+        "unknown_trip_loops": hlo["unknown_trip_loops"],
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    return rec
+
+
+def dryrun_submod(multi_pod: bool, alg: str = "greedy",
+                  score_dtype=None) -> dict:
+    """The paper's own cell: one distributed TREE round, 512 machines."""
+    from repro.configs.paper_submod import CONFIG as scfg
+    from repro.core import distributed as dist
+    from repro.core.objectives import ExemplarClustering
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    # machines axis = all devices flattened
+    import numpy as np
+    flat_mesh = jax.sharding.Mesh(mesh.devices.reshape(-1), ("machines",))
+    M, cap, d = n_dev, scfg.capacity, scfg.d
+    sh = lambda spec: NamedSharding(flat_mesh, spec)
+    blocks = jax.ShapeDtypeStruct((M, cap, d), jnp.float32,
+                                  sharding=sh(P("machines")))
+    bmask = jax.ShapeDtypeStruct((M, cap), bool, sharding=sh(P("machines")))
+    keys = jax.ShapeDtypeStruct((M, 2), jnp.uint32, sharding=sh(P("machines")))
+    dead = jax.ShapeDtypeStruct((M,), bool, sharding=sh(P("machines")))
+    obj = ExemplarClustering(
+        jax.ShapeDtypeStruct((scfg.n_eval, d), jnp.float32, sharding=sh(P())),
+        score_dtype=score_dtype)
+
+    local = functools.partial(dist._round_local, k=scfg.k,
+                              alg=alg, eps=0.5)
+    fn = jax.shard_map(local, mesh=flat_mesh,
+                       in_specs=(P(), P("machines"), P("machines"),
+                                 P("machines"), P("machines")),
+                       out_specs=(P("machines"),) * 4, check_vma=False)
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(obj, blocks, bmask, keys, dead)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    hlo = analyze(compiled.as_text())
+    variant = alg + ("_bf16" if score_dtype else "")
+    return {
+        "arch": f"submod-tree[{variant}]",
+        "shape": f"mu{cap}_k{scfg.k}_d{d}",
+        "mesh": "2x16x16" if multi_pod else "16x16", "kind": "submod",
+        "n_devices": int(n_dev),
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "arg_bytes": int(mem.argument_size_in_bytes),
+        "out_bytes": int(mem.output_size_in_bytes),
+        "temp_bytes": int(mem.temp_size_in_bytes),
+        "alias_bytes": int(mem.alias_size_in_bytes),
+        "peak_bytes": int(mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + mem.temp_size_in_bytes),
+        "flops_per_dev": float(hlo["flops"]),
+        "bytes_per_dev": float(hlo["hbm_bytes"]),
+        "collective_bytes_per_dev": hlo["collectives"],
+        "unknown_trip_loops": hlo["unknown_trip_loops"],
+        "params": 0, "active_params": 0,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default="reports/dryrun.json")
+    ap.add_argument("--skip-submod", action="store_true")
+    ap.add_argument("--only-submod", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (perf experiments)")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in getattr(args, "set"):
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            v = {"true": True, "false": False}.get(v.lower(), v)
+        overrides[k] = v
+
+    archs = [] if args.only_submod else (
+        [args.arch] if args.arch else ARCH_IDS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = [args.shape] if args.shape else cells_for(cfg)
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch} × {shape_name} × {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = dryrun_cell(arch, shape_name, mp,
+                                      overrides=overrides)
+                    records.append(rec)
+                    print(f"PASS {tag}: peak/dev="
+                          f"{rec['peak_bytes']/2**30:.2f}GiB "
+                          f"flops/dev={rec['flops_per_dev']:.3e} "
+                          f"coll/dev={rec['collective_bytes_per_dev']['total']/2**30:.3f}GiB "
+                          f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)",
+                          flush=True)
+                except Exception as e:
+                    failures.append({"cell": tag, "error": str(e)})
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+
+    if not args.skip_submod and not args.arch:
+        variants = [("greedy", None), ("greedy", "bfloat16"),
+                    ("stochastic_greedy", None)]
+        for mp in meshes:
+            for alg, sd in variants:
+                try:
+                    rec = dryrun_submod(mp, alg=alg, score_dtype=sd)
+                    records.append(rec)
+                    print(f"PASS {rec['arch']} × {rec['mesh']}: "
+                          f"peak/dev={rec['peak_bytes']/2**30:.2f}GiB "
+                          f"mem_s={rec['bytes_per_dev']/819e9:.3f} "
+                          f"compute_s={rec['flops_per_dev']/197e12:.4f}",
+                          flush=True)
+                except Exception as e:
+                    failures.append({"cell": f"submod[{alg}] × {mp}",
+                                     "error": str(e)})
+                    print(f"FAIL submod-tree[{alg}]: {e}", flush=True)
+                    traceback.print_exc()
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"records": records, "failures": failures}, f, indent=1)
+    print(f"\n{len(records)} cells passed, {len(failures)} failed "
+          f"-> {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

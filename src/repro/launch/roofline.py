@@ -1,0 +1,132 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh) cell, from the trip-count-aware HLO analysis of the
+compiled SPMD module (all quantities PER DEVICE):
+
+  compute    = flops_per_dev / PEAK_FLOPS            [s]
+  memory     = hbm_bytes_per_dev / HBM_BW            [s]
+  collective = collective_link_bytes_per_dev / ICI_BW [s]
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI
+(we charge the per-device aggregate against one link's 50 GB/s: conservative
+for sliced all-reduces that use several links, honest for the common case).
+
+MODEL_FLOPS (analytic, per device):
+  train : 6·N·D_tokens (+2·N·D if no remat correction needed — we report the
+          ratio against HLO flops which catches remat/redundancy)
+  decode/prefill: 2·N·D_tokens
+MoE archs use N_active.  `useful = MODEL_FLOPS / HLO_FLOPS`.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s effective per chip
+
+KIND_FLOP_FACTOR = {"train": 6.0, "prefill": 2.0, "decode": 2.0}
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    kind: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops_per_dev: float
+    useful_ratio: float
+    peak_gib: float
+    step_s: float                    # max of the three terms
+    roofline_frac: float             # compute_s / step_s  (≤ 1)
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s:.3e} | {self.memory_s:.3e} | "
+                f"{self.collective_s:.3e} | **{self.bound}** | "
+                f"{self.useful_ratio:.2f} | {self.peak_gib:.1f} | "
+                f"{self.roofline_frac:.2%} |")
+
+
+def tokens_for(shape_name: str) -> float:
+    from repro.configs.base import SHAPES
+    s = SHAPES.get(shape_name)
+    if s is None:
+        return 0.0
+    if s.kind == "decode":
+        return float(s.global_batch)             # one token per sequence
+    return float(s.global_batch * s.seq_len)
+
+
+def analyze_record(rec: dict) -> RooflineRow:
+    n_dev = rec["n_devices"]
+    compute_s = rec["flops_per_dev"] / PEAK_FLOPS
+    memory_s = rec["bytes_per_dev"] / HBM_BW
+    coll = rec["collective_bytes_per_dev"].get("total", 0.0)
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+
+    if rec["kind"] == "submod":
+        model_flops = 0.0
+        useful = float("nan")
+    else:
+        factor = KIND_FLOP_FACTOR[rec["kind"]]
+        n_active = rec["active_params"]
+        model_flops = factor * n_active * tokens_for(rec["shape"]) / n_dev
+        useful = model_flops / max(rec["flops_per_dev"], 1.0)
+
+    step = max(compute_s, memory_s, collective_s, 1e-12)
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        kind=rec["kind"], compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, bound=bound,
+        model_flops_per_dev=model_flops, useful_ratio=useful,
+        peak_gib=rec["peak_bytes"] / 2**30,
+        step_s=step, roofline_frac=compute_s / step)
+
+
+HEADER = ("| arch | shape | mesh | compute s | memory s | collective s | "
+          "bound | useful | peak GiB | roofline frac |\n"
+          "|---|---|---|---|---|---|---|---|---|---|")
+
+
+def render_table(records: list[dict], mesh: str | None = "16x16") -> str:
+    rows = [analyze_record(r) for r in records
+            if mesh is None or r["mesh"] == mesh]
+    return "\n".join([HEADER] + [r.row() for r in rows])
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", default="reports/dryrun_baseline.json")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    with open(args.inp) as f:
+        data = json.load(f)
+    print(render_table(data["records"],
+                       None if args.mesh == "all" else args.mesh))
+    rows = [analyze_record(r) for r in data["records"]
+            if r["mesh"] == "16x16"]
+    lm = [r for r in rows if r.kind != "submod"]
+    worst = sorted(lm, key=lambda r: r.roofline_frac)[:5]
+    print("\nWorst roofline fraction (hillclimb candidates):")
+    for r in worst:
+        print(f"  {r.arch} × {r.shape}: {r.roofline_frac:.2%} ({r.bound})")
+    coll = sorted(lm, key=lambda r: -(r.collective_s / r.step_s))[:5]
+    print("Most collective-bound:")
+    for r in coll:
+        print(f"  {r.arch} × {r.shape}: coll {r.collective_s:.2e}s / "
+              f"step {r.step_s:.2e}s")
+
+
+if __name__ == "__main__":
+    main()

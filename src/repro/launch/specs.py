@@ -1,0 +1,117 @@
+"""Abstract input specs (ShapeDtypeStruct + sharding) for every dry-run cell.
+
+No device allocation ever happens here: parameters, optimizer state, caches
+and batches are all ShapeDtypeStructs; `jit.lower()` consumes them directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding as shd
+from repro.models import get_model
+from repro.train import optimizer as opt_lib
+from repro.train import train_step as ts_lib
+
+
+def _named(mesh, shape, spec):
+    return NamedSharding(mesh, shd.fit_spec(shape, spec, dict(mesh.shape)))
+
+
+def _with_shardings(abstract: Any, mesh, spec_fn) -> Any:
+    def one(path, leaf):
+        names = tuple(getattr(p, "key", getattr(p, "name", str(p)))
+                      for p in path)
+        return jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=_named(mesh, leaf.shape, spec_fn(names, leaf.shape)))
+    return jax.tree_util.tree_map_with_path(one, abstract)
+
+
+def _param_spec_fn(names, shape):
+    return shd.param_spec(names, shape)
+
+
+def _cache_spec_fn(names, shape):
+    """KV caches: batch over (pod, data); heads or T over model; states:
+    heads over model.  Scalars replicated."""
+    name = names[-1] if names else ""
+    nd = len(shape)
+    if name in ("k", "v", "xk", "xv") and nd == 5:   # (L,B,Kv,T,hd)
+        return (None, shd.BATCH, None, "model", None)
+    if name == "state" and nd == 5:                  # rwkv (L,B,H,hd,hd)
+        return (None, shd.BATCH, "model", None, None)
+    if name == "state" and nd == 6:                  # jamba (P,n,B,H,ds,hd)
+        return (None, None, shd.BATCH, "model", None, None)
+    if name == "conv" and nd == 5:                   # (P,n,B,W-1,d_in)
+        return (None, None, shd.BATCH, None, "model")
+    if name in ("shift_t", "shift_c") and nd == 4:   # (L,B,1,d)
+        return (None, shd.BATCH, None, None)
+    return (None,) * nd
+
+
+def abstract_params(cfg, mesh=None):
+    model = get_model(cfg)
+    ab = jax.eval_shape(functools.partial(model.init_params, cfg),
+                        jax.random.PRNGKey(0))
+    return _with_shardings(ab, mesh, _param_spec_fn) if mesh else ab
+
+
+def abstract_train_state(cfg, opt_cfg, mesh=None):
+    ab = jax.eval_shape(
+        functools.partial(ts_lib.init_train_state, cfg, opt_cfg),
+        jax.random.PRNGKey(0))
+    return _with_shardings(ab, mesh, _param_spec_fn) if mesh else ab
+
+
+def abstract_cache(cfg, B, T, mesh=None):
+    model = get_model(cfg)
+    extra = cfg.frontend_tokens if cfg.family == "vlm" else 0
+    ab = jax.eval_shape(functools.partial(model.init_cache, cfg, B, T + extra))
+    return _with_shardings(ab, mesh, _cache_spec_fn) if mesh else ab
+
+
+def input_specs(cfg, shape, mesh, *, opt_cfg=None) -> dict:
+    """Abstract inputs for one (arch × shape) cell.
+
+    train:   {"state", "batch"}             for train_step(state, batch)
+    prefill: {"params", "tokens", "embeds"} for prefill_step
+    decode:  {"params", "cache", "tokens"}  for decode_step
+    """
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = _named(mesh, (B, S), (shd.BATCH, None))
+    out: dict[str, Any] = {}
+
+    def emb_specs(S_emb):
+        P_ = cfg.frontend_tokens if cfg.family == "vlm" else S_emb
+        return jax.ShapeDtypeStruct(
+            (B, P_, cfg.d_model), jnp.float32,
+            sharding=_named(mesh, (B, P_, cfg.d_model),
+                            (shd.BATCH, None, None)))
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or opt_lib.OptConfig(moment_dtype=cfg.moment_dtype)
+        out["state"] = abstract_train_state(cfg, opt_cfg, mesh)
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                                sharding=tok_sh)}
+        if cfg.frontend:
+            batch["embeds"] = emb_specs(S)
+        out["batch"] = batch
+    elif shape.kind == "prefill":
+        out["params"] = abstract_params(cfg, mesh)
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32,
+                                             sharding=tok_sh)
+        if cfg.frontend:
+            out["embeds"] = emb_specs(S)
+    else:  # decode: one new token against a seq_len cache
+        out["params"] = abstract_params(cfg, mesh)
+        out["cache"] = abstract_cache(cfg, B, S, mesh)
+        out["tokens"] = jax.ShapeDtypeStruct(
+            (B, 1), jnp.int32, sharding=_named(mesh, (B, 1),
+                                               (shd.BATCH, None)))
+    return out

@@ -1,0 +1,4 @@
+"""LM substrate: model zoo for the 10 assigned architectures."""
+from repro.models.registry import get_model
+
+__all__ = ["get_model"]

@@ -1,0 +1,140 @@
+"""Whisper-style encoder-decoder backbone (audio frontend is a STUB:
+``input_specs`` provides precomputed frame embeddings per the assignment).
+
+Encoder: non-causal self-attention stack over frame embeddings.
+Decoder: causal self-attention + cross-attention to encoder output + MLP.
+Serving: decoder self-KV cache + cross-KV computed once at prefill.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import BATCH, shard
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 8)
+    Le, Ld, d = cfg.encoder_layers, cfg.n_layers, cfg.d_model
+    return {
+        "emb": L.dense_init(ks[0], (cfg.padded_vocab, d), in_axis=-1),
+        "enc_pos": 0.02 * jax.random.normal(ks[1], (8192, d)),  # interp > 8k
+        "encoder": {
+            "attn": L.attention_params(ks[2], cfg, Le),
+            "mlp": L.mlp_params(ks[3], cfg, Le),
+        },
+        "decoder": {
+            "attn": L.attention_params(ks[4], cfg, Ld),
+            "cross": L.attention_params(ks[5], cfg, Ld, cross=True),
+            "mlp": L.mlp_params(ks[6], cfg, Ld),
+        },
+        "enc_ln": jnp.zeros((d,), jnp.float32),
+        "final_ln": jnp.zeros((d,), jnp.float32),
+        "head": L.dense_init(ks[7], (d, cfg.padded_vocab)),
+    }
+
+
+def encode(params, cfg, frames):
+    """frames: (B, S_enc, d) stub frontend output (conv-downsampled mel)."""
+    S = frames.shape[1]
+    pos = params["enc_pos"]
+    if S > pos.shape[0]:
+        reps = -(-S // pos.shape[0])
+        pos = jnp.tile(pos, (reps, 1))
+    h = shard(L.cast(frames) + L.cast(pos[:S])[None], BATCH, None, None)
+
+    def body(h, pl):
+        a, _ = L.attention(pl["attn"], h, cfg, mode="train", causal=False)
+        h = h + a
+        return h + L.mlp(pl["mlp"], h, cfg), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, L.cast_stacks(params["encoder"]))
+    return L.rms_norm(h, params["enc_ln"], cfg.norm_eps)
+
+
+def _decoder_block(cfg, h, pl, enc_out, mode="train", caches=None,
+                   cache_pos=None):
+    self_c = cross_c = None
+    if caches is not None:
+        self_c = {"k": caches["k"], "v": caches["v"]}
+        cross_c = {"k": caches["xk"], "v": caches["xv"]}
+    a, nself = L.attention(pl["attn"], h, cfg, mode=mode, cache=self_c,
+                           cache_pos=cache_pos)
+    h = h + a
+    if mode == "decode":
+        x, _ = L.attention(pl["cross"], h, cfg, mode="cross_decode",
+                           cache=cross_c,
+                           kv_valid_len=caches.get("enc_len"))
+        ncross = cross_c
+    else:
+        x, ncross = L.attention(pl["cross"], h, cfg,
+                                mode="prefill" if caches is not None
+                                else "train",
+                                kv_src=enc_out, cache=cross_c, cache_pos=0)
+    h = h + x
+    h = h + L.mlp(pl["mlp"], h, cfg)
+    return h, nself, ncross
+
+
+def forward(params, cfg, tokens, embeds=None):
+    """Training: teacher-forced decode over `tokens` given `embeds` frames."""
+    assert embeds is not None, "enc-dec needs frame embeddings"
+    enc_out = encode(params, cfg, embeds)
+    h = shard(L.cast(params["emb"])[tokens], BATCH, None, None)
+
+    def body(h, pl):
+        h, _, _ = _decoder_block(cfg, h, pl, enc_out)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, L.cast_stacks(params["decoder"]))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return shard(L.cast(h) @ L.cast(params["head"]), BATCH, None, "model")
+
+
+def init_cache(cfg, B, T, dtype=jnp.bfloat16, enc_len=None):
+    Ld = cfg.n_layers
+    enc_len = enc_len or T
+    kv = (Ld, B, cfg.n_kv_heads, T, cfg.hd)
+    xkv = (Ld, B, cfg.n_kv_heads, enc_len, cfg.hd)
+    return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+            "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype),
+            "enc_len": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def _run_cached(params, cfg, cache, tokens, enc_out, mode):
+    h = shard(L.cast(params["emb"])[tokens], BATCH, None, None)
+
+    def body(h, xs):
+        pl, ck, cv, cxk, cxv = xs
+        caches = {"k": ck, "v": cv, "xk": cxk, "xv": cxv,
+                  "enc_len": cache["enc_len"]}
+        h, nself, ncross = _decoder_block(cfg, h, pl, enc_out, mode=mode,
+                                          caches=caches,
+                                          cache_pos=cache["pos"])
+        return h, (nself["k"], nself["v"], ncross["k"], ncross["v"])
+
+    h, (nk, nv, nxk, nxv) = jax.lax.scan(
+        body, h, (L.cast_stacks(params["decoder"]), cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    h = L.rms_norm(h[:, -1:] if mode == "prefill" else h,
+                   params["final_ln"], cfg.norm_eps)
+    logits = L.cast(h) @ L.cast(params["head"])
+    return logits, {"k": nk, "v": nv, "xk": nxk, "xv": nxv,
+                    "enc_len": cache["enc_len"],
+                    "pos": cache["pos"] + tokens.shape[1]}
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    enc_out = encode(params, cfg, embeds)
+    cache = dict(cache, enc_len=jnp.int32(embeds.shape[1]))
+    return _run_cached(params, cfg, cache, tokens, enc_out, "prefill")
+
+
+def decode_step(params, cfg, cache, tokens):
+    return _run_cached(params, cfg, cache, tokens, None, "decode")

@@ -1,0 +1,212 @@
+"""Jamba-style hybrid: Mamba + attention 1:7 interleave, MoE every other layer.
+
+Layer layout per period of `attn_period` (=8) layers:
+  indices 0..6 → Mamba mixer, index 7 → GQA attention;
+  odd indices → MoE FFN (16e top-2), even → dense FFN.
+The model scans over *periods* (homogeneous param stacks), with the 8-layer
+period body unrolled — HLO stays compact (9 period iterations for 72 layers).
+
+Mamba layers use the SSD/Mamba-2 scalar-per-head-decay linear-attention
+formulation evaluated with the chunked-GLA path (TPU adaptation, DESIGN.md
+§3): h_t = a_t·h_{t-1} + k_t^T v_t with a_t = exp(-softplus(dt_t)·exp(A_log)).
+d_state = 16 (Mamba-1's state width, per the Jamba paper).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import BATCH, shard
+
+CONV_W = 4
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.hd          # mamba heads
+    return d_in, H, cfg.ssm_state_dim
+
+
+def mamba_params(key, cfg, n: int) -> dict:
+    d = cfg.d_model
+    d_in, H, ds = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "ln": jnp.zeros((n, d), jnp.float32),
+        "in_proj": L.stack_init(ks[0], n, (d, 2 * d_in)),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (n, CONV_W, d_in)),
+        "w_bc": L.stack_init(ks[2], n, (d_in, 2 * H * ds)),   # B, C proj
+        "w_dt": L.stack_init(ks[3], n, (d_in, H)),
+        "dt_bias": jnp.zeros((n, H), jnp.float32),
+        "A_log": jnp.zeros((n, H), jnp.float32),
+        "D": jnp.ones((n, H), jnp.float32),
+        "out_proj": {"wo": L.stack_init(ks[4], n, (d_in, d))},
+    }
+
+
+def _mamba(pl, cfg, x, conv_cache=None, state=None, chunk=64):
+    B, S, d = x.shape
+    d_in, H, ds = _dims(cfg)
+    hd = cfg.hd
+    h = L.rms_norm(x, pl["ln"], cfg.norm_eps)
+    xz = L.cast(h) @ L.cast(pl["in_proj"])
+    xp, z = xz[..., :d_in], xz[..., d_in:]
+    xp, new_conv = L.conv1d_causal(xp, pl["conv_w"], cache=conv_cache)
+    xp = jax.nn.silu(xp)
+    xp = shard(xp, BATCH, None, "model")
+
+    bc = xp @ L.cast(pl["w_bc"])
+    b = bc[..., :H * ds].reshape(B, S, H, ds).transpose(0, 2, 1, 3)   # k-like
+    c = bc[..., H * ds:].reshape(B, S, H, ds).transpose(0, 2, 1, 3)   # q-like
+    v = xp.reshape(B, S, H, hd).transpose(0, 2, 1, 3)                 # v
+    dt = jax.nn.softplus((xp @ L.cast(pl["w_dt"])).astype(jnp.float32)
+                         + pl["dt_bias"])                             # (B,S,H)
+    a_log = -dt * jnp.exp(pl["A_log"])                                # ≤ 0
+    w_log = jnp.broadcast_to(
+        a_log.transpose(0, 2, 1)[..., None], (B, H, S, ds))
+    # discretised input scale: dt folded into v (SSD convention)
+    v = v * dt.transpose(0, 2, 1)[..., None].astype(v.dtype)
+
+    if state is None:
+        if S % chunk:
+            pad = chunk - S % chunk
+            b, c, v, w_log = (jnp.pad(y, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                              for y in (b, c, v, w_log))
+        y, new_state = L.gla_chunked(c, b, v, w_log, None, chunk=chunk)
+        y = y[:, :, :S]
+    else:
+        y, new_state = L.gla_step(c[:, :, 0], b[:, :, 0], v[:, :, 0],
+                                  jnp.exp(w_log[:, :, 0]), None, state)
+        y = y[:, :, None, :]
+
+    y = y.transpose(0, 2, 1, 3).reshape(B, S, d_in)
+    y = y + xp * jnp.repeat(pl["D"], hd)[None, None, :]
+    y = y * jax.nn.silu(z)
+    out = L.cast(y) @ L.cast(pl["out_proj"]["wo"])
+    return shard(out, BATCH, None, None), new_conv, new_state
+
+
+def init_params(cfg, key):
+    assert cfg.n_layers % cfg.attn_period == 0
+    P = cfg.n_layers // cfg.attn_period          # periods
+    per = cfg.attn_period
+    n_mamba = per - 1
+    n_moe = per // cfg.moe_period
+    n_dense = per - n_moe
+    ks = jax.random.split(key, 8)
+    return {
+        "emb": L.dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), in_axis=-1),
+        "periods": {
+            "mamba": jax.vmap(lambda k: mamba_params(k, cfg, n_mamba))(
+                jax.random.split(ks[1], P)),
+            "attn": jax.vmap(lambda k: L.attention_params(k, cfg, 1))(
+                jax.random.split(ks[2], P)),
+            "moe": jax.vmap(lambda k: L.moe_params(k, cfg, n_moe))(
+                jax.random.split(ks[3], P)),
+            "mlp": jax.vmap(lambda k: L.mlp_params(k, cfg, n_dense))(
+                jax.random.split(ks[4], P)),
+        },
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": L.dense_init(ks[5], (cfg.d_model, cfg.padded_vocab)),
+    }
+
+
+def _slice_layer(tree, i):
+    return jax.tree_util.tree_map(lambda x: x[i], tree)
+
+
+def _period(cfg, h, pp, mode="train", caches=None, cache_pos=None):
+    """One period: unrolled attn_period layers. caches: dict of per-period
+    cache slices (attention kv + mamba conv/state stacks)."""
+    per = cfg.attn_period
+    new_caches = {"k": None, "v": None, "conv": [], "state": []}
+    mi = di = ei = 0
+    for i in range(per):
+        if i == per - 1:      # attention layer
+            cl = None
+            if caches is not None:
+                cl = {"k": caches["k"], "v": caches["v"]}
+            a, nc = L.attention(_slice_layer(pp["attn"], 0), h, cfg,
+                                mode=mode if caches is not None else "train",
+                                cache=cl, cache_pos=cache_pos)
+            h = h + a
+            if nc is not None:
+                new_caches["k"], new_caches["v"] = nc["k"], nc["v"]
+        else:                 # mamba layer
+            pm = _slice_layer(pp["mamba"], mi)
+            cc = caches["conv"][mi] if caches is not None else None
+            st = caches["state"][mi] if (caches is not None
+                                         and mode == "decode") else None
+            a, nconv, nstate = _mamba(pm, cfg, h, conv_cache=cc, state=st)
+            h = h + a
+            new_caches["conv"].append(nconv)
+            new_caches["state"].append(nstate)
+            mi += 1
+        if (i % cfg.moe_period) == cfg.moe_period - 1:
+            h = h + L.moe(_slice_layer(pp["moe"], ei), h, cfg)
+            ei += 1
+        else:
+            h = h + L.mlp(_slice_layer(pp["mlp"], di), h, cfg)
+            di += 1
+    return h, new_caches
+
+
+def forward(params, cfg, tokens, embeds=None):
+    h = shard(L.cast(params["emb"])[tokens], BATCH, None, None)
+
+    def body(h, pp):
+        h, _ = _period(cfg, h, pp)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, L.cast_stacks(params["periods"]))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    return shard(L.cast(h) @ L.cast(params["head"]), BATCH, None, "model")
+
+
+def init_cache(cfg, B, T, dtype=jnp.bfloat16):
+    P = cfg.n_layers // cfg.attn_period
+    n_mamba = cfg.attn_period - 1
+    d_in, H, ds = _dims(cfg)
+    return {
+        "k": jnp.zeros((P, B, cfg.n_kv_heads, T, cfg.hd), dtype),
+        "v": jnp.zeros((P, B, cfg.n_kv_heads, T, cfg.hd), dtype),
+        "conv": jnp.zeros((P, n_mamba, B, CONV_W - 1, d_in), dtype),
+        "state": jnp.zeros((P, n_mamba, B, H, ds, cfg.hd), jnp.float32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _run_cached(params, cfg, cache, tokens, mode):
+    h = shard(L.cast(params["emb"])[tokens], BATCH, None, None)
+    n_mamba = cfg.attn_period - 1
+
+    def body(h, xs):
+        pp, ck, cv, cconv, cstate = xs
+        caches = {"k": ck, "v": cv,
+                  "conv": [cconv[i] for i in range(n_mamba)],
+                  "state": [cstate[i] for i in range(n_mamba)]}
+        h, nc = _period(cfg, h, pp, mode=mode, caches=caches,
+                        cache_pos=cache["pos"])
+        nconv = jnp.stack([c.astype(cconv.dtype) for c in nc["conv"]])
+        nstate = jnp.stack(nc["state"])   # chunked path also returns states
+        return h, (nc["k"], nc["v"], nconv, nstate)
+
+    h, (nk, nv, nconv, nstate) = jax.lax.scan(
+        body, h, (L.cast_stacks(params["periods"]), cache["k"], cache["v"],
+                  cache["conv"], cache["state"]))
+    h = L.rms_norm(h[:, -1:] if mode == "prefill" else h,
+                   params["final_ln"], cfg.norm_eps)
+    logits = L.cast(h) @ L.cast(params["head"])
+    return logits, {"k": nk, "v": nv, "conv": nconv, "state": nstate,
+                    "pos": cache["pos"] + tokens.shape[1]}
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    return _run_cached(params, cfg, cache, tokens, "prefill")
+
+
+def decode_step(params, cfg, cache, tokens):
+    return _run_cached(params, cfg, cache, tokens, "decode")

@@ -1,0 +1,455 @@
+"""Shared LM building blocks (pure-JAX, shape-static, GSPMD-shardable).
+
+Everything is a pure function of (params, inputs).  Parameters for scanned
+stacks carry a leading layer dim; the per-layer functions here see unstacked
+leaves.  Activation sharding goes through repro.sharding.shard (no-op without
+an ambient mesh, divisibility fallback on small archs).
+
+Compute dtype is bf16 (params are fp32 masters, cast at use); numerics-
+critical reductions (norms, softmax, attention accumulation, SSM states) are
+fp32 — standard production mixed precision.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.sharding import BATCH, shard
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+def h_spec(cfg):
+    """Residual-stream sharding between blocks (§Perf iteration):
+    'seq' = Megatron-SP (activations S-sharded over 'model'; TP all-reduces
+    become reduce-scatter + all-gather and per-device activation memory
+    drops ~16x), 'hidden' = d-sharded, 'replicated' = classic Megatron."""
+    mode = getattr(cfg, "activation_sharding", "replicated")
+    return {
+        "replicated": (BATCH, None, None),
+        "seq": (BATCH, "model", None),
+        "hidden": (BATCH, None, "model"),
+    }[mode]
+
+
+def cast_stacks(tree):
+    """Cast stacked weight matrices (ndim ≥ 3) to the compute dtype BEFORE
+    the layer scan.  The FSDP all-gather then moves bf16, not fp32 masters —
+    §Perf iteration: halves all-gather bytes and stops XLA from hoisting a
+    fp32 gather of the whole stack out of the loop (norm scales and other
+    small 1D/2D leaves stay fp32)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(COMPUTE_DTYPE)
+        if (x.ndim >= 3 and x.dtype == jnp.float32) else x, tree)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, in_axis=-2):
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            / math.sqrt(max(fan_in, 1)))
+
+
+def stack_init(key, L, shape, in_axis=-2):
+    return dense_init(key, (L, *shape), in_axis=in_axis)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * (1.0 + scale)).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd), positions: (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / MQA / qk-norm / KV cache)
+# ---------------------------------------------------------------------------
+
+
+def attention_params(key, cfg, L: int, cross: bool = False) -> dict:
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": stack_init(ks[0], L, (d, H * hd)),
+        "wk": stack_init(ks[1], L, (d, Kv * hd)),
+        "wv": stack_init(ks[2], L, (d, Kv * hd)),
+        "wo": stack_init(ks[3], L, (H * hd, d)),
+        "ln": jnp.zeros((L, d), jnp.float32),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.zeros((L, hd), jnp.float32)
+        p["k_norm"] = jnp.zeros((L, hd), jnp.float32)
+    return p
+
+
+def attention(p: dict, x: jax.Array, cfg, *, mode: str = "train",
+              causal: bool = True, use_rope: bool = True,
+              cache: Optional[dict] = None, cache_pos=None,
+              kv_src: Optional[jax.Array] = None,
+              kv_valid_len=None,
+              ) -> tuple[jax.Array, Optional[dict]]:
+    """Pre-norm attention block. Returns (residual_delta, new_cache).
+
+    mode:
+      "train"        — fresh K/V, no cache.
+      "prefill"      — fresh K/V, attend them, and write into cache[0:S].
+      "decode"       — write K/V at cache_pos, attend cache with a
+                        kv_valid_len = cache_pos + S mask.
+      "cross_decode" — attend an already-filled cross-attention cache.
+    kv_src: cross-attention source (enc-dec); disables rope & causality.
+    cache: {"k": (B, Kv, T, hd), "v": ...}.
+    """
+    B, S, d = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    src = h if kv_src is None else cast(kv_src)
+    is_cross = kv_src is not None or mode == "cross_decode"
+
+    # decode: keep q head-replicated so the T-sharded cache never moves —
+    # logits are T-sharded and the combine is a small psum (DESIGN.md §6)
+    q_head_spec = None if mode in ("decode", "cross_decode") else "model"
+    q = shard((cast(h) @ cast(p["wq"])).reshape(B, S, H, hd),
+              BATCH, None, q_head_spec, None)
+    k = v = None
+    if mode != "cross_decode":
+        Skv = src.shape[1]
+        k = (src @ cast(p["wk"])).reshape(B, Skv, Kv, hd)
+        v = (src @ cast(p["wv"])).reshape(B, Skv, Kv, hd)
+
+    if cfg.qk_norm and "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        if k is not None:
+            k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+
+    if use_rope and not is_cross:
+        base = jnp.int32(0) if cache_pos is None else cache_pos
+        qpos = jnp.broadcast_to(
+            base + jnp.arange(S)[None, :].astype(jnp.int32), (B, S))
+        q = rope(q, qpos, cfg.rope_theta)
+        kbase = jnp.int32(0) if mode == "prefill" else base
+        kpos = jnp.broadcast_to(
+            kbase + jnp.arange(k.shape[1])[None, :].astype(jnp.int32),
+            (B, k.shape[1]))
+        k = rope(k, kpos, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and k is not None:
+        wpos = jnp.int32(0) if mode == "prefill" else cache_pos
+        new_cache = {
+            "k": jax.lax.dynamic_update_slice(
+                cache["k"], k.transpose(0, 2, 1, 3).astype(cache["k"].dtype),
+                (0, 0, wpos, 0)),
+            "v": jax.lax.dynamic_update_slice(
+                cache["v"], v.transpose(0, 2, 1, 3).astype(cache["v"].dtype),
+                (0, 0, wpos, 0)),
+        }
+    elif cache is not None:
+        new_cache = cache
+
+    qh = q.transpose(0, 2, 1, 3)                                # (B, H, S, hd)
+    if mode in ("train", "prefill"):
+        kk, vv = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+        o = kops.flash_attention(qh, kk, vv, causal=causal and not is_cross)
+    elif mode == "decode":
+        kk, vv = new_cache["k"], new_cache["v"]
+        o = kops.flash_attention(qh, kk, vv, causal=False,
+                                 kv_valid_len=cache_pos + S)
+    elif mode == "cross_decode":
+        o = kops.flash_attention(qh, cache["k"], cache["v"], causal=False,
+                                 kv_valid_len=kv_valid_len)
+    else:
+        raise ValueError(mode)
+    o = o.transpose(0, 2, 1, 3).reshape(B, S, H * hd)
+    out = cast(o) @ cast(p["wo"])
+    return shard(out, *h_spec(cfg)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_params(key, cfg, L: int, ff: Optional[int] = None) -> dict:
+    d = cfg.d_model
+    ff = ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": stack_init(ks[0], L, (d, ff)),
+        "w_up": stack_init(ks[1], L, (d, ff)),
+        "w_down": stack_init(ks[2], L, (ff, d)),
+        "ln": jnp.zeros((L, d), jnp.float32),
+    }
+
+
+def _act(x, kind: str):
+    return jax.nn.gelu(x) if kind == "gelu" else jax.nn.silu(x)
+
+
+def mlp(p: dict, x: jax.Array, cfg) -> jax.Array:
+    h = cast(rms_norm(x, p["ln"], cfg.norm_eps))
+    g = shard(_act(h @ cast(p["w_gate"]), cfg.gate_fn),
+              BATCH, None, "model")
+    u = shard(h @ cast(p["w_up"]), BATCH, None, "model")
+    out = (g * u) @ cast(p["w_down"])
+    return shard(out, *h_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# MoE with capacity-based dispatch (sort formulation, shape-static)
+# ---------------------------------------------------------------------------
+
+
+def moe_params(key, cfg, L: int) -> dict:
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": stack_init(ks[0], L, (d, E)) * 0.02 * math.sqrt(d),
+        "experts": {
+            "w_gate": stack_init(ks[1], L, (E, d, ff)),
+            "w_up": stack_init(ks[2], L, (E, d, ff)),
+            "w_down": stack_init(ks[3], L, (E, ff, d)),
+        },
+        "ln": jnp.zeros((L, d), jnp.float32),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(ks[4], cfg, L, ff=cfg.n_shared_experts * ff)
+        del p["shared"]["ln"]  # share the block norm
+    return p
+
+
+def _dispatch_group(hf, top_w, top_e, E: int, K: int, C: int):
+    """Capacity dispatch for ONE token group (sort formulation).
+    hf: (N, d); returns (buf (E, C, d), ts, ws, keep, slot)."""
+    N, d = hf.shape
+    e_flat = top_e.reshape(-1)                                   # (N·K,)
+    w_flat = top_w.reshape(-1)
+    t_flat = jnp.repeat(jnp.arange(N, dtype=jnp.int32), K)
+    order = jnp.argsort(e_flat, stable=True)
+    es, ts, ws = e_flat[order], t_flat[order], w_flat[order]
+    counts = jnp.bincount(es, length=E)
+    starts = jnp.concatenate([jnp.zeros((1,), counts.dtype),
+                              jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(N * K, dtype=jnp.int32) - starts[es].astype(jnp.int32)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, es * C + pos_in_e, E * C)             # E*C = trash
+    buf = jnp.zeros((E * C + 1, d), COMPUTE_DTYPE).at[slot].set(hf[ts])
+    return buf[:E * C].reshape(E, C, d), ts, ws, keep, slot
+
+
+def _combine_group(out, ts, ws, keep, slot, N: int):
+    E, C, d = out.shape
+    out_flat = out.reshape(E * C, d)
+    contrib = jnp.where(keep[:, None], out_flat[jnp.minimum(slot, E * C - 1)]
+                        * ws[:, None].astype(COMPUTE_DTYPE), 0.0)
+    return jnp.zeros((N, d), COMPUTE_DTYPE).at[ts].add(contrib)
+
+
+def _onehot_masks(top_w, top_e, E: int, K: int, C: int):
+    """GShard dispatch/combine masks for one token group.
+    top_w/top_e: (g, K). Returns dispatch (g, E, C) {0,1} bf16 and
+    combine (g, E, C) with router weights."""
+    g = top_e.shape[0]
+    e_flat = top_e.reshape(-1)                                    # (g·K,)
+    oh = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)               # (g·K, E)
+    pos = jnp.cumsum(oh, axis=0) - oh                             # rank per e
+    pos_t = jnp.take_along_axis(pos, e_flat[:, None], axis=1)[:, 0]
+    keep = pos_t < C
+    disp = (jax.nn.one_hot(e_flat, E, dtype=COMPUTE_DTYPE)[:, :, None]
+            * jax.nn.one_hot(jnp.minimum(pos_t, C - 1), C,
+                             dtype=COMPUTE_DTYPE)[:, None, :]
+            * keep[:, None, None].astype(COMPUTE_DTYPE))          # (g·K,E,C)
+    disp = disp.reshape(g, K, E, C)
+    comb = disp * top_w[..., None, None].astype(COMPUTE_DTYPE)
+    return disp.sum(1), comb.sum(1)                               # (g, E, C)
+
+
+def moe(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Top-k routed experts + optional always-on shared experts.
+
+    Default path (§Perf iteration 4): GShard one-hot dispatch over small
+    token groups — dispatch/combine are einsums against (g, E, C) masks, so
+    GSPMD never partitions a scatter (the sort/scatter formulations paid
+    196+ GiB/dev of fp32+u32 all-reduce per step on deepseek-moe train_4k;
+    see EXPERIMENTS.md §Perf).  Expert matmuls shard E over 'model' (EP);
+    the only collective left is the inherent EP combine psum of (g, t, d).
+    `moe_impl="sort"` keeps the vmapped sort/scatter variant for comparison.
+    """
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    hc = cast(h)
+
+    logits = (hc @ cast(p["router"])).astype(jnp.float32)        # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, K)                       # (B, S, K)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    we = p["experts"]
+    if cfg.moe_impl == "sort":
+        C = int(cfg.moe_capacity_factor * S * K / E)
+        C = max(4, -(-C // 4) * 4)
+        buf, ts, ws, keep, slot = jax.vmap(
+            functools.partial(_dispatch_group, E=E, K=K, C=C))(
+                hc, top_w, top_e)
+        buf = shard(buf, BATCH, "model", None, None)             # (B,E,C,d)
+        gate = _act(jnp.einsum("becd,edf->becf", buf, cast(we["w_gate"])),
+                    cfg.gate_fn)
+        up = jnp.einsum("becd,edf->becf", buf, cast(we["w_up"]))
+        out = jnp.einsum("becf,efd->becd",
+                         shard(gate * up, BATCH, "model", None, None),
+                         cast(we["w_down"]))
+        y = jax.vmap(functools.partial(_combine_group, N=S))(
+            out, ts, ws, keep, slot)
+        y = y.reshape(B, S, d)
+    else:
+        gsz = min(cfg.moe_group_size, S) if S > 1 else min(
+            cfg.moe_group_size, B)
+        flat = hc.reshape(-1, d)                                  # (B·S, d)
+        N = flat.shape[0]
+        G = max(1, N // gsz)
+        gsz = N // G
+        assert G * gsz == N, (N, gsz)
+        xg = flat.reshape(G, gsz, d)
+        C = int(cfg.moe_capacity_factor * gsz * K / E)
+        C = max(4, -(-C // 4) * 4)
+        disp, comb = jax.vmap(
+            functools.partial(_onehot_masks, E=E, K=K, C=C))(
+                top_w.reshape(G, gsz, K), top_e.reshape(G, gsz, K))
+        disp = shard(disp, BATCH, None, "model", None)            # (G,g,E,C)
+        buf = shard(jnp.einsum("gtec,gtd->gecd", disp, xg),
+                    BATCH, "model", None, None)                   # (G,E,C,d)
+        gate = _act(jnp.einsum("gecd,edf->gecf", buf, cast(we["w_gate"])),
+                    cfg.gate_fn)
+        up = jnp.einsum("gecd,edf->gecf", buf, cast(we["w_up"]))
+        out = jnp.einsum("gecf,efd->gecd",
+                         shard(gate * up, BATCH, "model", None, None),
+                         cast(we["w_down"]))                      # (G,E,C,d)
+        y = jnp.einsum("gtec,gecd->gtd", comb, out).reshape(B, S, d)
+
+    if "shared" in p:
+        sp = p["shared"]
+        g = _act(hc @ cast(sp["w_gate"]), cfg.gate_fn)
+        u = hc @ cast(sp["w_up"])
+        y = y + (shard(g * u, BATCH, None, "model")
+                 @ cast(sp["w_down"])).reshape(B, S, d)
+
+    return shard(y, *h_spec(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated-linear-attention (serves RWKV-6 WKV and Jamba's Mamba layers)
+# ---------------------------------------------------------------------------
+
+
+def gla_chunked(r, k, v, w_log, u=None, *, chunk: int = 64):
+    """Chunkwise-parallel evaluation of
+        y_t = r_t @ (S_{t-1} + diag(u) k_t^T v_t);  S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    with per-channel log-decay w_log = log w ∈ (-inf, 0].
+
+    Shapes: (B, H, T, Dk) for r/k/w_log, (B, H, T, Dv) for v, (H, Dk) for u.
+    TPU adaptation (DESIGN.md §3): intra-chunk work is a masked matmul (MXU),
+    inter-chunk state is a short scan — the T-step recurrence never appears.
+    Exponent ratios are clamped to ±30 (negligible-contribution regime).
+    """
+    B, H, T, Dk = r.shape
+    Dv = v.shape[-1]
+    assert T % chunk == 0, (T, chunk)
+    nc = T // chunk
+    f32 = jnp.float32
+
+    def to_chunks(x):
+        return x.reshape(B, H, nc, chunk, x.shape[-1]).astype(f32)
+
+    rc, kc, vc, wc = map(to_chunks, (r, k, v, w_log))
+    L = jnp.cumsum(wc, axis=3)                      # inclusive ∑ log w
+    Lend = L[:, :, :, -1:, :]                       # (B,H,nc,1,Dk)
+
+    q_in = rc * jnp.exp(L - wc)                     # decay chunk-start → t-1
+    k_in = kc * jnp.exp(jnp.clip(-L, -30.0, 30.0))
+    k_out = kc * jnp.exp(Lend - L)                  # decay t → chunk end
+
+    scores = jnp.einsum("bhcik,bhcjk->bhcij", q_in, k_in)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), -1)
+    scores = jnp.where(mask, scores, 0.0)
+    if u is not None:
+        diag = jnp.einsum("bhcik,hk,bhcik->bhci", rc,
+                          u.astype(f32), kc)
+        scores = scores + jax.vmap(jnp.diag)(
+            diag.reshape(-1, chunk)).reshape(scores.shape)
+    y_intra = jnp.einsum("bhcij,bhcjv->bhciv", scores, vc)
+
+    # inter-chunk scan over nc states (B,H,Dk,Dv)
+    kv_out = jnp.einsum("bhcjk,bhcjv->bhckv", k_out, vc)
+    decay_all = jnp.exp(Lend[:, :, :, 0, :])        # (B,H,nc,Dk)
+
+    def scan_body(S, inp):
+        dec, kv, q_i = inp                          # (B,H,Dk) (B,H,Dk,Dv) (B,H,chunk,Dk)
+        y = jnp.einsum("bhik,bhkv->bhiv", q_i, S)
+        S = dec[..., None] * S + kv
+        return S, y
+
+    S0 = jnp.zeros((B, H, Dk, Dv), f32)
+    xs = (decay_all.transpose(2, 0, 1, 3), kv_out.transpose(2, 0, 1, 3, 4),
+          q_in.transpose(2, 0, 1, 3, 4))
+    S_fin, y_inter = jax.lax.scan(scan_body, S0, xs)
+    y_inter = y_inter.transpose(1, 2, 0, 3, 4)      # (B,H,nc,chunk,Dv)
+
+    y = (y_intra + y_inter).reshape(B, H, T, Dv)
+    return y.astype(r.dtype), S_fin
+
+
+def gla_step(r, k, v, w, u, state):
+    """Single-token recurrent step (decode). r/k/w: (B,H,Dk), v: (B,H,Dv),
+    u: (H,Dk) or None, state: (B,H,Dk,Dv) fp32."""
+    f32 = jnp.float32
+    r, k, v, w = (x.astype(f32) for x in (r, k, v, w))
+    kv = k[..., :, None] * v[..., None, :]
+    bonus = u.astype(f32)[None, :, :, None] * kv if u is not None else 0.0
+    y = jnp.einsum("bhk,bhkv->bhv", r, state + bonus)
+    new_state = w[..., :, None] * state + kv
+    return y, new_state
+
+
+def conv1d_causal(x: jax.Array, w: jax.Array, cache=None):
+    """Depthwise causal conv, width W. x: (B,S,d), w: (W,d).
+    cache: (B, W-1, d) trailing context for decode."""
+    W = w.shape[0]
+    if cache is not None:
+        xx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = xx[:, -(W - 1):, :] if W > 1 else cache
+    else:
+        xx = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+        new_cache = None
+    out = sum(xx[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out, new_cache

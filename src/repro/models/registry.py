@@ -1,0 +1,25 @@
+"""Model registry: ModelConfig.family → implementation module.
+
+Uniform API (all pure functions):
+  init_params(cfg, key)                      -> params pytree
+  forward(params, cfg, tokens, embeds=None)  -> (B, S', V) logits (train)
+  init_cache(cfg, B, T)                      -> serving cache pytree
+  prefill(params, cfg, tokens, cache, embeds=None) -> (logits, cache)
+  decode_step(params, cfg, cache, tokens)    -> (logits, cache)
+"""
+from __future__ import annotations
+
+import types
+
+from repro.models import encdec, hybrid, rwkv, transformer
+
+
+def get_model(cfg) -> types.ModuleType:
+    return {
+        "dense": transformer,
+        "moe": transformer,
+        "vlm": transformer,
+        "ssm": rwkv,
+        "hybrid": hybrid,
+        "encdec": encdec,
+    }[cfg.family]

@@ -1,0 +1,132 @@
+"""Decoder-only transformer LM — serves the dense, moe, and vlm families.
+
+Layers are scanned (`lax.scan` over stacked params) with optional remat so
+the 88-layer archs lower to a compact HLO.  The vlm family prepends
+`frontend_tokens` precomputed patch embeddings (frontend is a stub per the
+assignment); the loss driver masks the image positions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.sharding import BATCH, shard
+
+
+def init_params(cfg, key):
+    ks = jax.random.split(key, 5)
+    Lz = cfg.n_layers
+    p = {
+        "emb": L.dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), in_axis=-1),
+        "attn": L.attention_params(ks[1], cfg, Lz),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        "head": L.dense_init(ks[2], (cfg.d_model, cfg.padded_vocab)),
+    }
+    if cfg.is_moe:
+        p["moe"] = L.moe_params(ks[3], cfg, Lz)
+    else:
+        p["mlp"] = L.mlp_params(ks[3], cfg, Lz)
+    return p
+
+
+def _block(cfg, h, pl, mode="train", cache_l=None, cache_pos=None):
+    from jax.ad_checkpoint import checkpoint_name
+    name = (checkpoint_name if cfg.remat_policy != "full"
+            else (lambda x, _: x))
+    a, new_cache = L.attention(pl["attn"], h, cfg, mode=mode,
+                               cache=cache_l, cache_pos=cache_pos)
+    h = h + name(a, "blk_attn")
+    if cfg.is_moe:
+        h = h + name(L.moe(pl["moe"], h, cfg), "blk_ffn")
+    else:
+        h = h + name(L.mlp(pl["mlp"], h, cfg), "blk_ffn")
+    return h, new_cache
+
+
+def _embed(params, cfg, tokens, embeds):
+    x = L.cast(params["emb"])[tokens]                   # (B, S, d)
+    if embeds is not None:                              # vlm: prepend patches
+        x = jnp.concatenate([L.cast(embeds), x], axis=1)
+    return shard(x, *L.h_spec(cfg))
+
+
+def forward(params, cfg, tokens, embeds=None):
+    """Full-sequence causal forward (training / prefill). Returns logits."""
+    h = _embed(params, cfg, tokens, embeds)
+    block_params = L.cast_stacks(
+        {"attn": params["attn"],
+         ("moe" if cfg.is_moe else "mlp"):
+             params["moe" if cfg.is_moe else "mlp"]})
+
+    def body(h, pl):
+        h, _ = _block(cfg, h, pl)
+        return h, None
+
+    if cfg.remat:
+        if cfg.remat_policy == "block_outs":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "blk_attn", "blk_ffn")
+        elif cfg.remat_policy == "block_outs_offload":
+            policy = jax.checkpoint_policies.save_and_offload_only_these_names(
+                names_which_can_be_saved=[],
+                names_which_can_be_offloaded=["blk_attn", "blk_ffn"],
+                offload_src="device", offload_dst="pinned_host")
+        else:
+            policy = None
+        body = jax.checkpoint(body, prevent_cse=False, policy=policy)
+    h, _ = jax.lax.scan(body, h, block_params)
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = L.cast(h) @ L.cast(params["head"])
+    return shard(logits, BATCH, None, "model")
+
+
+def init_cache(cfg, B, T, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, B, cfg.n_kv_heads, T, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg, tokens, cache, embeds=None):
+    """Run the prompt through the model, filling the KV cache."""
+    h = _embed(params, cfg, tokens, embeds)
+    S = h.shape[1]
+    block_params = L.cast_stacks(
+        {"attn": params["attn"],
+         ("moe" if cfg.is_moe else "mlp"):
+             params["moe" if cfg.is_moe else "mlp"]})
+
+    def body(h, xs):
+        pl, ck, cv = xs
+        h, nc = _block(cfg, h, pl, mode="prefill",
+                       cache_l={"k": ck, "v": cv}, cache_pos=0)
+        return h, (nc["k"], nc["v"])
+
+    h, (nk, nv) = jax.lax.scan(body, h, (block_params, cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = L.cast(h[:, -1:]) @ L.cast(params["head"])
+    return logits, {"k": nk, "v": nv, "pos": jnp.int32(S)}
+
+
+def decode_step(params, cfg, cache, tokens):
+    """One token per sequence (B, 1) against the KV cache."""
+    h = _embed(params, cfg, tokens, None)
+    block_params = L.cast_stacks(
+        {"attn": params["attn"],
+         ("moe" if cfg.is_moe else "mlp"):
+             params["moe" if cfg.is_moe else "mlp"]})
+
+    def body(h, xs):
+        pl, ck, cv = xs
+        h, nc = _block(cfg, h, pl, mode="decode",
+                       cache_l={"k": ck, "v": cv}, cache_pos=cache["pos"])
+        return h, (nc["k"], nc["v"])
+
+    h, (nk, nv) = jax.lax.scan(body, h, (block_params, cache["k"], cache["v"]))
+    h = L.rms_norm(h, params["final_ln"], cfg.norm_eps)
+    logits = L.cast(h) @ L.cast(params["head"])
+    return (shard(logits, BATCH, None, "model"),
+            {"k": nk, "v": nv, "pos": cache["pos"] + 1})

@@ -1,0 +1,1 @@
+"""serve subpackage."""

@@ -1,0 +1,44 @@
+"""Serving: batched prefill + decode drivers over the uniform model API."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+
+
+def make_serve_fns(cfg, cache_len: int):
+    """Returns (prefill_fn, decode_fn) jittable closures for one arch."""
+    model = get_model(cfg)
+
+    def prefill_fn(params, tokens, embeds=None):
+        B = tokens.shape[0]
+        extra = cfg.frontend_tokens if cfg.family == "vlm" else 0
+        cache = model.init_cache(cfg, B, cache_len + extra)
+        return model.prefill(params, cfg, tokens, cache, embeds=embeds)
+
+    def decode_fn(params, cache, tokens):
+        return model.decode_step(params, cfg, cache, tokens)
+
+    return prefill_fn, decode_fn
+
+
+def greedy_generate(cfg, params, prompt: jax.Array, n_new: int,
+                    cache_len: Optional[int] = None, embeds=None):
+    """Greedy decoding of n_new tokens for a (B, S) prompt batch."""
+    model = get_model(cfg)
+    B, S = prompt.shape
+    cache_len = cache_len or (S + n_new)
+    prefill_fn, decode_fn = make_serve_fns(cfg, cache_len)
+    logits, cache = jax.jit(prefill_fn)(params, prompt, embeds)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+    out = [tok]
+    dstep = jax.jit(decode_fn)
+    for _ in range(n_new - 1):
+        logits, cache = dstep(params, cache, tok)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,97 @@
+"""Generic LM train step: microbatched grad accumulation + AdamW.
+
+Works for every registered architecture through the uniform model API.
+Distribution is GSPMD: the caller lowers this function under a mesh with
+parameter/batch shardings from repro.sharding; gradient reductions across
+(pod, data) and TP collectives are inserted by the partitioner.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_model
+from repro.train import optimizer as opt_lib
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array,
+            loss_mask: Optional[jax.Array] = None,
+            vocab_size: Optional[int] = None) -> jax.Array:
+    """Next-token CE. logits: (B, S', V) with S' = S + prefix; labels are
+    tokens shifted left (prefix positions are unsupervised).  vocab_size
+    masks padded-vocab logits out of the partition function."""
+    B, Sp, V = logits.shape
+    S = tokens.shape[1]
+    off = Sp - S
+    lg = logits[:, off:Sp - 1 + off][:, :S - 1].astype(jnp.float32)
+    if vocab_size is not None and vocab_size < V:
+        lg = jnp.where(jnp.arange(V) < vocab_size, lg, -1e30)
+    labels = tokens[:, 1:]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if loss_mask is not None:
+        m = loss_mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def init_train_state(cfg, opt_cfg: opt_lib.OptConfig, key) -> dict:
+    model = get_model(cfg)
+    params = model.init_params(cfg, key)
+    return {"params": params, "opt": opt_lib.init_opt_state(opt_cfg, params)}
+
+
+def make_train_step(cfg, opt_cfg: opt_lib.OptConfig):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    batch: {"tokens": (B, S) int32, optional "embeds": (B, P, d)}.
+    Grad accumulation: B is split into cfg.microbatches along dim 0 and
+    scanned, accumulating fp32 grads (activation memory / B trade)."""
+    model = get_model(cfg)
+    n_micro = max(cfg.microbatches, 1)
+
+    def loss_fn(params, tokens, embeds):
+        logits = model.forward(params, cfg, tokens, embeds=embeds)
+        return lm_loss(logits, tokens, vocab_size=cfg.vocab_size)
+
+    def train_step(state, batch):
+        tokens = batch["tokens"]
+        embeds = batch.get("embeds")
+        B = tokens.shape[0]
+        assert B % n_micro == 0, (B, n_micro)
+
+        grad_fn = jax.value_and_grad(loss_fn)
+
+        if n_micro == 1:
+            loss, grads = grad_fn(state["params"], tokens, embeds)
+        else:
+            tok_mb = tokens.reshape(n_micro, B // n_micro, *tokens.shape[1:])
+            emb_mb = (embeds.reshape(n_micro, B // n_micro, *embeds.shape[1:])
+                      if embeds is not None else None)
+
+            def acc(carry, xs):
+                loss_acc, gacc = carry
+                t = xs[0]
+                e = xs[1] if embeds is not None else None
+                loss, g = grad_fn(state["params"], t, e)
+                gacc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (loss_acc + loss, gacc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state["params"])
+            xs = (tok_mb,) if embeds is None else (tok_mb, emb_mb)
+            (loss, grads), _ = jax.lax.scan(acc, (jnp.float32(0.0), g0), xs)
+            loss = loss / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, grads)
+
+        params, opt_state, aux = opt_lib.apply_updates(
+            opt_cfg, state["params"], grads, state["opt"])
+        metrics = {"loss": loss, **aux}
+        return {"params": params, "opt": opt_state}, metrics
+
+    return train_step

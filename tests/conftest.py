@@ -1,0 +1,14 @@
+import os
+import sys
+
+# tests see ONE device (the dry-run sets its own 512-device flag in a
+# separate process); make the src layout importable without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,35 @@
+"""Data-selection stage (the paper's technique inside the LM pipeline)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ExemplarClustering, random_subset
+from repro.data.selection import (SelectionConfig, mean_pool_embeddings,
+                                  select_coreset)
+
+
+def test_select_coreset_valid_and_better_than_random():
+    rng = np.random.default_rng(0)
+    centers = rng.standard_normal((10, 16)).astype(np.float32) * 3
+    feats = (centers[rng.integers(0, 10, 800)]
+             + 0.3 * rng.standard_normal((800, 16)).astype(np.float32))
+    feats = jnp.asarray(feats)
+    sel_cfg = SelectionConfig(k=10, capacity=120, n_eval=256, seed=0)
+    idx, res = select_coreset(feats, sel_cfg)
+    assert len(idx) == 10 and len(set(idx.tolist())) == 10
+    assert 0 <= idx.min() and idx.max() < 800
+    # coreset beats random under the same objective
+    ev = feats[jax.random.choice(jax.random.PRNGKey(0), 800, (256,),
+                                 replace=False)]
+    obj = ExemplarClustering(ev)
+    rnd = random_subset(obj, feats, 10, jax.random.PRNGKey(1))
+    val_sel = float(obj.evaluate(feats[jnp.asarray(idx)],
+                                 jnp.ones((10,), bool)))
+    assert val_sel > float(rnd.value)
+
+
+def test_mean_pool_embeddings_shape():
+    params = {"emb": jnp.ones((100, 32))}
+    toks = jnp.zeros((4, 7), jnp.int32)
+    out = mean_pool_embeddings(params, toks)
+    assert out.shape == (4, 32)

@@ -1,0 +1,53 @@
+"""Sharding rules: divisibility fallback, param placement, batch specs."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import fit_spec, param_spec, shard
+
+MESH = {"pod": 2, "data": 16, "model": 16}
+
+
+def test_fit_spec_divisible():
+    assert fit_spec((256, 4096), ("data", "model"), MESH) == \
+        P("data", "model")
+
+
+def test_fit_spec_fallback_drops_nondivisible():
+    # 6 heads cannot shard over 16 — falls back to replication
+    assert fit_spec((6, 64), ("model", None), MESH) == P(None, None)
+    # batch 1 cannot shard over (pod, data)
+    assert fit_spec((1, 128), (("pod", "data"), None), MESH) == P(None, None)
+    # batch 32 shards over pod*data=32
+    assert fit_spec((32, 128), (("pod", "data"), None), MESH) == \
+        P(("pod", "data"), None)
+    # batch 16: prefix fallback to pod only? pod=2 divides 16 -> ("pod",)
+    assert fit_spec((16, 128), (("pod", "data"), None), MESH)[0] is not None
+
+
+def test_fit_spec_missing_axis_ignored():
+    # single-pod mesh has no 'pod' axis
+    mesh = {"data": 16, "model": 16}
+    assert fit_spec((256, 128), (("pod", "data"), None), mesh) == \
+        P("data", None)
+
+
+def test_param_spec_rules():
+    assert param_spec(("emb",), (50304, 2048)) == ("data", None)
+    assert param_spec(("head",), (2048, 50304)) == (None, "model")
+    assert param_spec(("attn", "wq"), (4, 2048, 4096)) == \
+        (None, "data", "model")
+    assert param_spec(("attn", "wo"), (4, 4096, 2048)) == \
+        (None, "model", "data")
+    assert param_spec(("moe", "experts", "w_gate"), (4, 64, 2048, 1408)) == \
+        (None, "model", None, "data")
+    assert param_spec(("moe", "experts", "w_down"), (4, 64, 1408, 2048)) == \
+        (None, "model", "data", None)
+    assert param_spec(("ln",), (4, 2048)) == (None, None)
+
+
+def test_shard_noop_without_mesh():
+    x = jnp.ones((8, 8))
+    y = shard(x, "data", None)   # no ambient mesh -> identity
+    assert (y == x).all()

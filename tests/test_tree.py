@@ -1,0 +1,129 @@
+"""Algorithm 1 (TREE-BASED COMPRESSION): bounds, capacity, regimes,
+fault tolerance, checkpoint/restart, and the paper's approximation factor."""
+import itertools
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExemplarClustering, WeightedCoverage, TreeConfig,
+                        centralized_greedy, make_submod_mesh, randgreedi,
+                        tree_maximize)
+
+
+def _setup(n=600, d=8, ne=128, seed=0):
+    r = np.random.default_rng(seed)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    E = data[r.choice(n, ne, replace=False)]
+    return jnp.asarray(data), ExemplarClustering(jnp.asarray(E))
+
+
+def test_round_bound_proposition_3_1():
+    data, obj = _setup()
+    for mu in (20, 40, 100, 300):
+        cfg = TreeConfig(k=8, capacity=mu, seed=1)
+        res = tree_maximize(obj, data, cfg)
+        assert res.rounds <= cfg.round_bound(len(data)) + 1, (mu, res.rounds)
+        # machines per round shrink by ≥ μ/k per round (Prop 3.1 mechanics)
+        for m0, m1 in zip(res.machines_per_round, res.machines_per_round[1:]):
+            assert m1 <= max(1, int(np.ceil(m0 * cfg.k / mu)))
+
+
+def test_capacity_mu_geq_n_equals_centralized():
+    data, obj = _setup(n=300)
+    cfg = TreeConfig(k=10, capacity=300, seed=0)
+    res = tree_maximize(obj, data, cfg)
+    cg = centralized_greedy(obj, data, 10)
+    np.testing.assert_allclose(res.value, float(cg.value), rtol=1e-5)
+    assert res.rounds == 1
+
+
+def test_capacity_sqrt_nk_matches_two_round_regime():
+    data, obj = _setup(n=500)
+    k = 10
+    # +k absorbs ceil-rounding so m0·k ≤ μ strictly (paper's regime boundary)
+    mu = int(np.ceil(np.sqrt(500 * k))) + k
+    cfg = TreeConfig(k=k, capacity=mu, seed=2)
+    res = tree_maximize(obj, data, cfg)
+    assert res.rounds == 2
+    cg = centralized_greedy(obj, data, k)
+    assert res.value >= 0.9 * float(cg.value)
+
+
+def test_approximation_factor_1_over_2r_vs_bruteforce():
+    """Thm 3.3 with GREEDY (β=1): E[f(S)] ≥ f(OPT)/(2r). Deterministic check
+    on several seeds of a coverage instance with exact OPT."""
+    r = np.random.default_rng(11)
+    n, U, k = 18, 12, 3
+    inc = (r.random((n, U)) < 0.3).astype(np.float32)
+    w = jnp.asarray(r.random(U).astype(np.float32))
+    obj = WeightedCoverage(w)
+    T = jnp.asarray(inc)
+    opt = max(float(obj.evaluate(T[jnp.asarray(c)], jnp.ones((k,), bool)))
+              for c in itertools.combinations(range(n), k))
+    for seed in range(5):
+        cfg = TreeConfig(k=k, capacity=6, seed=seed)   # forces multi-round
+        res = tree_maximize(obj, T, cfg)
+        rounds = res.rounds
+        assert res.value >= opt / (2 * rounds) - 1e-6, (seed, res.value, opt)
+
+
+def test_oracle_calls_scale_O_nk():
+    data, obj = _setup(n=600)
+    k = 8
+    cfg = TreeConfig(k=k, capacity=60, seed=3)
+    res = tree_maximize(obj, data, cfg)
+    # first round dominates: ~ k·n evals; multi-round adds ≤ k·(mk) per round
+    assert res.oracle_calls <= 3 * k * 600, res.oracle_calls
+
+
+def test_failure_injection_graceful():
+    data, obj = _setup(n=600, seed=4)
+    cfg = TreeConfig(k=8, capacity=60, seed=4)
+    healthy = tree_maximize(obj, data, cfg)
+    failed = tree_maximize(obj, data, cfg, fail_machines={0: [0, 1, 2]})
+    cg = centralized_greedy(obj, data, 8)
+    # run completes and stays within a modest factor of the healthy run
+    assert failed.value >= 0.8 * healthy.value
+    assert failed.value >= 0.5 * float(cg.value)
+
+
+def test_checkpoint_restart_resumes_not_restarts():
+    data, obj = _setup(n=500, seed=5)
+    with tempfile.TemporaryDirectory() as td:
+        cfg = TreeConfig(k=8, capacity=60, seed=5, checkpoint_dir=td)
+        full = tree_maximize(obj, data, cfg)
+        # resume from the final checkpoint: best solution is preserved
+        cfg_r = TreeConfig(k=8, capacity=60, seed=5, checkpoint_dir=td,
+                           resume=True)
+        resumed = tree_maximize(obj, data, cfg_r)
+        assert resumed.value >= full.value - 1e-6
+        # restart continues from the checkpointed round (≤ 1 extra round on
+        # the tiny final set), never from scratch on V
+        assert resumed.rounds <= full.rounds + 1
+        assert resumed.machines_per_round[0] == 1  # resumed set fits 1 machine
+
+
+def test_mesh_equals_serial():
+    data, obj = _setup(n=400, seed=6)
+    cfg = TreeConfig(k=8, capacity=50, seed=6)
+    serial = tree_maximize(obj, data, cfg)
+    mesh = tree_maximize(obj, data, cfg, mesh=make_submod_mesh())
+    np.testing.assert_allclose(serial.value, mesh.value, rtol=1e-6)
+
+
+def test_mu_must_exceed_k():
+    with pytest.raises(AssertionError):
+        TreeConfig(k=10, capacity=10)
+
+
+def test_stochastic_subprocedure():
+    data, obj = _setup(n=500, seed=7)
+    cfg = TreeConfig(k=8, capacity=60, seed=7, algorithm="stochastic_greedy",
+                     eps=0.2)
+    res = tree_maximize(obj, data, cfg)
+    cg = centralized_greedy(obj, data, 8)
+    assert res.value >= 0.8 * float(cg.value)
