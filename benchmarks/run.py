@@ -7,10 +7,18 @@
   fig2ef   — large-scale, stochastic subprocedure         (paper Fig 2 e-f)
   ft       — failure/straggler degradation                (beyond paper)
   kernels  — kernel micro-benchmarks + traffic models
+
+Suites that return a dict contribute to ``BENCH_PR1.json`` (repo root) —
+the start of the cross-PR perf trajectory record.
 """
 import argparse
+import json
+import os
 import sys
 import time
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "BENCH_PR1.json")
 
 
 def main() -> None:
@@ -32,13 +40,34 @@ def main() -> None:
         "ft": fault_tolerance_bench.run,
         "kernels": kernel_bench.run,
     }
+    measured: dict = {}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
         t0 = time.perf_counter()
         print(f"# --- {name} ---", flush=True)
-        fn(quick=quick)
+        out = fn(quick=quick)
+        if isinstance(out, dict):
+            measured[name] = out
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+    if measured:
+        # never let a quick run clobber a recorded full-size trajectory point
+        if quick and os.path.exists(BENCH_JSON):
+            try:
+                with open(BENCH_JSON) as f:
+                    if json.load(f).get("quick") is False:
+                        print(f"# kept full-size {os.path.normpath(BENCH_JSON)}"
+                              " (quick run does not overwrite)", flush=True)
+                        return
+            except (OSError, ValueError):
+                pass
+        import jax
+        record = {"pr": 1, "quick": quick,
+                  "backend": jax.default_backend(), "suites": measured}
+        with open(BENCH_JSON, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"# wrote {os.path.normpath(BENCH_JSON)}", flush=True)
 
 
 if __name__ == '__main__':

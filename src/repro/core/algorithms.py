@@ -57,13 +57,37 @@ def _dummy_attrs(T: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _fusable(obj, constraint, attrs) -> bool:
+    """May the fused single-launch selection replace the step-wise scan?"""
+    return (getattr(obj, "rowwise_gains", False)
+            and hasattr(obj, "fused_select")
+            and (constraint is None or isinstance(constraint, Unconstrained))
+            and attrs is None)
+
+
 def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
-           constraint=None, attrs: jax.Array | None = None) -> SelectResult:
+           constraint=None, attrs: jax.Array | None = None,
+           fused: bool | None = None) -> SelectResult:
     """Classic greedy with consistent (lowest-index) tie-breaking.
 
     Supports any hereditary constraint; the cardinality bound is the loop
     bound ``k`` (for pure cardinality problems pass ``constraint=None``).
+
+    ``fused=None`` (auto) routes unconstrained selection through the
+    objective's ``fused_select`` hook when it exposes one — the whole k-step
+    loop runs as one fused kernel launch (kernels/greedy_select.py), with
+    output bit-identical to the step-wise scan, tie-breaking included.
+    ``fused=False`` forces the scan; ``fused=True`` asserts the fast path.
     """
+    if fused is None:
+        fused = _fusable(obj, constraint, attrs)
+    if fused:
+        assert _fusable(obj, constraint, attrs), (
+            "fused=True needs a rowwise objective with a fused_select hook "
+            "and no constraint/attrs")
+        sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k)
+        return SelectResult(sel_idx, sel_mask, value, calls)
+
     cap = T.shape[0]
     constraint = constraint or Unconstrained()
     attrs = _dummy_attrs(T) if attrs is None else attrs
@@ -115,10 +139,13 @@ def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
         scores = jax.random.uniform(key_t, (cap,))
         scores = jnp.where(avail, scores, 2.0)        # unavailable sink to end
         _, sub_idx = jax.lax.top_k(-scores, s)        # s smallest scores
-        sub_avail = avail[sub_idx]
         if rowwise:
+            # ascending indices ⇒ the T[sub_idx] gather walks memory forward
+            sub_idx = jnp.sort(sub_idx)
+            sub_avail = avail[sub_idx]
             g = obj.gains(state, T[sub_idx], sub_avail)
         else:
+            sub_avail = avail[sub_idx]
             g = obj.gains(state, T, avail)[sub_idx]
             g = jnp.where(sub_avail, g, NEG_INF)
         b = jnp.argmax(g)
@@ -162,13 +189,16 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
 
     def item_pass(i, carry):
         state, avail, count, calls, sel_idx, tau = carry
+        # the marginal-gain oracle fires for every still-available item, so
+        # count it from availability *before* the take flips the bit
+        calls = calls + avail[i].astype(jnp.int32)
         g = gain_at(state, i)
         take = avail[i] & (count < k) & (g >= tau)
         state = _tree_where(take, obj.update(state, T, i), state)
         sel_idx = jnp.where(take, sel_idx.at[count].set(i), sel_idx)
         count = count + take.astype(jnp.int32)
         avail = avail & ~(take & (jnp.arange(cap) == i))
-        return state, avail, count, calls + avail[i].astype(jnp.int32), sel_idx, tau
+        return state, avail, count, calls, sel_idx, tau
 
     def level(l, carry):
         state, avail, count, calls, sel_idx = carry
@@ -178,9 +208,11 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
         return state, avail, count, calls, sel_idx
 
     sel_idx = jnp.full((k,), -1, jnp.int32)
+    # the d_max pass above evaluated one gain per *valid* item, not per slot
+    init_calls = jnp.sum(mask.astype(jnp.int32))
     state, _, count, calls, sel_idx = jax.lax.fori_loop(
         0, n_levels, level,
-        (state0, mask, jnp.int32(0), jnp.int32(cap), sel_idx))
+        (state0, mask, jnp.int32(0), init_calls, sel_idx))
     sel_mask = jnp.arange(k) < count
     return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
 
@@ -191,9 +223,11 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
 
 
 def run_algorithm(name: str, obj, T, mask, k, *, key=None, eps=0.5,
-                  constraint=None, attrs=None) -> SelectResult:
+                  constraint=None, attrs=None,
+                  fused: bool | None = None) -> SelectResult:
     if name == "greedy":
-        return greedy(obj, T, mask, k, constraint=constraint, attrs=attrs)
+        return greedy(obj, T, mask, k, constraint=constraint, attrs=attrs,
+                      fused=fused)
     if name == "stochastic_greedy":
         assert key is not None, "stochastic_greedy needs a PRNG key"
         return stochastic_greedy(obj, T, mask, k, key, eps=eps)

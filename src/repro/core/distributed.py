@@ -25,6 +25,15 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import algorithms
 
+if hasattr(jax, "shard_map"):                       # jax ≥ 0.6
+    _shard_map = jax.shard_map
+else:                                               # jax 0.4.x fallback
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def _shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=check_vma)
+
 
 class RoundResult(NamedTuple):
     sol_rows: jax.Array   # (M, k, d)
@@ -83,7 +92,7 @@ def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
     ndev = mesh.devices.size
     assert M % ndev == 0, f"M={M} must divide over {ndev} devices"
     spec = P("machines")
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(P(), spec, spec, spec, spec),
         out_specs=(spec, spec, spec, spec),

@@ -85,6 +85,28 @@ class ExemplarClustering:
     def value(self, state) -> jax.Array:
         return state["base"] - jnp.mean(state["cur_min"])
 
+    # -- fused selection hook (algorithms.greedy fast path) ---------------
+    def fused_select(self, T: jax.Array, mask: jax.Array, k: int):
+        """Whole k-step greedy in one fused kernel launch.
+
+        Bit-identical to the step-wise greedy scan (lowest-index ties,
+        value, oracle-call count) — see kernels/greedy_select.py.  Returns
+        ``(sel_idx, sel_mask, value, oracle_calls)``.
+        """
+        import jax.numpy as _jnp
+        cd = _jnp.bfloat16 if self.score_dtype == "bfloat16" else None
+        state = self.init_state(T, mask)
+        sel_idx, cur_min = kops.greedy_select(
+            T, self.eval_set, state["cur_min"], mask, k, compute_dtype=cd)
+        # step t evaluates one gain per still-available candidate, and a step
+        # succeeds iff any candidate remains — both closed-form in n_avail.
+        n_avail = jnp.sum(mask.astype(jnp.int32))
+        t = jnp.arange(k, dtype=jnp.int32)
+        sel_mask = t < n_avail
+        calls = jnp.sum(jnp.maximum(n_avail - t, 0))
+        value = state["base"] - jnp.mean(cur_min)
+        return sel_idx, sel_mask, value, calls
+
     # -- set-function oracle (for cross-machine comparison / tests) ------
     def evaluate(self, S: jax.Array, s_mask: jax.Array) -> jax.Array:
         """f(S) for a (m, d) block of selected rows with validity mask."""
@@ -136,7 +158,6 @@ class ActiveSetSelection:
             "r": 1.0 + diag,
             "logdet": jnp.float32(0.0),
             "step": jnp.int32(0),
-            "T": T,
         }
 
     def gains(self, state, T: jax.Array, mask: jax.Array) -> jax.Array:
@@ -157,7 +178,6 @@ class ActiveSetSelection:
             "r": r,
             "logdet": state["logdet"] + jnp.log(r_s),
             "step": state["step"] + 1,
-            "T": state["T"],
         }
 
     def value(self, state) -> jax.Array:

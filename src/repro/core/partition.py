@@ -12,6 +12,7 @@ the serial and the distributed drivers use.
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple
 
@@ -60,6 +61,36 @@ def scatter_rows(items: jax.Array, item_mask: jax.Array, key: jax.Array,
     slots = perm[:n]                                   # slot of each item row
     buf = jnp.zeros((n_slots, d), items.dtype).at[slots].set(items)
     bmask = jnp.zeros((n_slots,), bool).at[slots].set(item_mask)
+    return buf.reshape(L, cap, d), bmask.reshape(L, cap)
+
+
+@functools.partial(jax.jit, static_argnames=("L", "cap"))
+def repartition_rows(rows: jax.Array, mask: jax.Array, key: jax.Array,
+                     L: int, cap: int) -> tuple[jax.Array, jax.Array]:
+    """Device-resident, shape-static equivalent of
+
+        valid = np.flatnonzero(mask); scatter_rows(rows[valid], ones, key, L, cap)
+
+    i.e. the between-rounds repartition of the tree driver, without the
+    host round-trip.  Bit-identical output for the same ``key``: the valid
+    rows are compacted to the front *in index order* (matching flatnonzero)
+    by a stable sort, so compacted row j still lands on slot ``perm[j]``.
+    Requires L·cap ≥ Σmask (the driver's choice of L guarantees it); any
+    rows dropped by the static truncation are masked-invalid by that bound.
+    """
+    N, d = rows.shape
+    n_slots = L * cap
+    order = jnp.argsort(~mask, stable=True)        # valid first, index order
+    rows_c, mask_c = rows[order], mask[order]
+    if n_slots >= N:
+        rows_c = jnp.pad(rows_c, ((0, n_slots - N), (0, 0)))
+        mask_c = jnp.pad(mask_c, ((0, n_slots - N),))
+    else:
+        rows_c, mask_c = rows_c[:n_slots], mask_c[:n_slots]
+    perm = jax.random.permutation(key, n_slots)
+    buf = jnp.zeros((n_slots, d), rows.dtype).at[perm].set(
+        jnp.where(mask_c[:, None], rows_c, 0))
+    bmask = jnp.zeros((n_slots,), bool).at[perm].set(mask_c)
     return buf.reshape(L, cap, d), bmask.reshape(L, cap)
 
 

@@ -8,6 +8,15 @@ Host-level driver around :mod:`repro.core.distributed`:
   until |A_t| ≤ μ, then solve the final block on one machine.
 
 Production features beyond the pseudo-code:
+  * **device-resident rounds** (default): the candidate rows A_t, the
+    repartition (:func:`repro.core.partition.repartition_rows`), and the
+    best-solution tracking all stay on device between rounds — the only
+    values that cross the device→host boundary inside the round loop are
+    scalars (|A_t| for the next round's machine count, and the per-round
+    best value for logging).  Round boundaries therefore never serialize
+    on array transfers.  The legacy host-NumPy loop is kept as
+    ``host_rounds=True`` (bit-identical output; used by tests and as the
+    checkpoint-compatibility reference).
   * round-level checkpointing (A_t is ≤ m_t·k rows — restartable at any
     round boundary; `checkpoint_dir=` + `resume=True`),
   * failure injection (`fail_machines`: solutions dropped, run continues),
@@ -73,6 +82,25 @@ class TreeResult:
     round_values: list[float]   # best machine value per round
 
 
+# ---------------------------------------------------------------------------
+# host-boundary helpers — the ONLY device→host crossings of the round loop.
+# Tests monkeypatch / guard these to certify the loop is device-resident.
+# ---------------------------------------------------------------------------
+
+
+def _host_scalar(x) -> float:
+    """Pull a 0-d device value to host (round-loop sanctioned crossing)."""
+    assert jnp.ndim(x) == 0, f"round loop may only transfer scalars, got {jnp.shape(x)}"
+    with jax.transfer_guard_device_to_host("allow"):
+        return float(x)
+
+
+def _host_array(x) -> np.ndarray:
+    """Bulk device→host pull — final result + checkpoint writes only."""
+    with jax.transfer_guard_device_to_host("allow"):
+        return np.asarray(x)
+
+
 def _ckpt_path(d: str) -> str:
     return os.path.join(d, "tree_round.npz")
 
@@ -86,6 +114,47 @@ def _save_round(d: str, round_idx: int, rows, mask, best_rows, best_mask,
     os.replace(tmp, _ckpt_path(d))  # atomic — crash-safe
 
 
+def _dispatch_round(obj, blocks, bmask, kalg, t, cfg: TreeConfig, mesh,
+                    fail_machines) -> RoundResult:
+    """Mesh-pad the machine axis, split keys, apply failure injection and
+    solve one round.  Shared verbatim by the device-resident and legacy
+    host drivers — their bit-identity depends on this staying one copy."""
+    M = blocks.shape[0]
+    if mesh is not None:
+        ndev = mesh.devices.size
+        Mp = math.ceil(M / ndev) * ndev
+        if Mp != M:
+            blocks = jnp.pad(blocks, ((0, Mp - M), (0, 0), (0, 0)))
+            bmask = jnp.pad(bmask, ((0, Mp - M), (0, 0)))
+            M = Mp
+
+    keys = jax.random.split(kalg, M)
+    dead = np.zeros((M,), bool)
+    for mid in fail_machines.get(t, []):
+        if mid < M:
+            dead[mid] = True
+
+    if mesh is not None:
+        blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask, keys)
+
+    return run_round(obj, blocks, bmask, keys, k=cfg.k, alg=cfg.algorithm,
+                     eps=cfg.eps, dead_mask=jnp.asarray(dead), mesh=mesh)
+
+
+@jax.jit
+def _fold_round(res_rows, res_mask, res_vals, res_calls,
+                best_rows, best_mask, best_val, total_calls):
+    """Device-side best-solution tracking (old host argmax, jitted)."""
+    i_best = jnp.argmax(res_vals)                  # lowest index on ties
+    v_best = res_vals[i_best]
+    improved = v_best > best_val
+    best_rows = jnp.where(improved, res_rows[i_best], best_rows)
+    best_mask = jnp.where(improved, res_mask[i_best], best_mask)
+    best_val = jnp.where(improved, v_best, best_val)
+    total_calls = total_calls + jnp.sum(res_calls)
+    return best_rows, best_mask, best_val, total_calls, v_best
+
+
 def tree_maximize(
     obj,
     data: jax.Array,            # (n, d) ground set V
@@ -93,14 +162,111 @@ def tree_maximize(
     *,
     mesh=None,
     fail_machines: dict[int, list[int]] | None = None,  # round -> dead ids
+    host_rounds: bool = False,
 ) -> TreeResult:
-    """Run Algorithm 1. With ``mesh``, machines shard over devices."""
+    """Run Algorithm 1. With ``mesh``, machines shard over devices.
+
+    Default is the device-resident round loop; ``host_rounds=True`` selects
+    the legacy NumPy-between-rounds driver (identical results, kept as the
+    comparison baseline).
+    """
+    if host_rounds:
+        return _tree_maximize_host(obj, data, cfg, mesh=mesh,
+                                   fail_machines=fail_machines)
+
     n, d = data.shape
     mu, k = cfg.capacity, cfg.k
     key = jax.random.PRNGKey(cfg.seed)
     fail_machines = fail_machines or {}
 
     # --- round 0 input: the full ground set, randomly partitioned ---------
+    start_round = 0
+    best_rows = jnp.zeros((k, d), jnp.float32)
+    best_mask = jnp.zeros((k,), bool)
+    best_val = jnp.float32(-jnp.inf)
+    total_calls = jnp.int32(0)
+    rows_in: jax.Array | None = None    # carry between rounds (device rows)
+    mask_in: jax.Array | None = None
+    n_items = n
+
+    if cfg.resume and cfg.checkpoint_dir and os.path.exists(
+            _ckpt_path(cfg.checkpoint_dir)):
+        ck = np.load(_ckpt_path(cfg.checkpoint_dir))
+        start_round = int(ck["round"])
+        rows_in, mask_in = jnp.asarray(ck["rows"]), jnp.asarray(ck["mask"])
+        best_rows, best_mask = jnp.asarray(ck["best_rows"]), jnp.asarray(ck["best_mask"])
+        best_val = jnp.float32(float(ck["best_val"]))
+        total_calls = jnp.int32(int(ck["calls"]))
+
+    machines_per_round: list[int] = []
+    round_values: list[float] = []
+    r_bound = cfg.round_bound_exact(n)
+    t = start_round
+
+    while True:
+        key, kpart, kalg = jax.random.split(key, 3)
+        if t != 0:
+            n_items = int(_host_scalar(jnp.sum(mask_in.astype(jnp.int32))))
+        L = part_lib.n_parts(n_items, mu)
+
+        # ---- partition A_t into L balanced parts (virtual-location) ------
+        if t == 0:
+            part = part_lib.balanced_partition(kpart, n, L, cap=mu)
+            blocks, bmask = part_lib.gather_partition(data, part)
+        else:
+            blocks, bmask = part_lib.repartition_rows(
+                rows_in, mask_in, kpart, L, mu)
+
+        machines_per_round.append(blocks.shape[0])
+        res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
+                              fail_machines)
+
+        best_rows, best_mask, best_val, total_calls, v_best = _fold_round(
+            res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
+            best_rows, best_mask, best_val, total_calls)
+        round_values.append(_host_scalar(v_best))
+
+        # ---- union of partial solutions = next A (stays on device) -------
+        rows_in = res.sol_rows.reshape(-1, d)
+        mask_in = res.sol_mask.reshape(-1)
+        t += 1
+
+        if cfg.checkpoint_dir:
+            _save_round(cfg.checkpoint_dir, t, _host_array(rows_in),
+                        _host_array(mask_in), _host_array(best_rows),
+                        _host_array(best_mask),
+                        _host_scalar(best_val), int(_host_scalar(total_calls)))
+
+        if L == 1:        # that was the final single-machine round
+            break
+        assert t <= r_bound + 1, (
+            f"round bound violated: {t} > {r_bound} (Prop 3.1)")
+
+    return TreeResult(
+        sel_rows=_host_array(best_rows), sel_mask=_host_array(best_mask),
+        value=_host_scalar(best_val), rounds=t,
+        oracle_calls=int(_host_scalar(total_calls)),
+        machines_per_round=machines_per_round, round_values=round_values)
+
+
+# ---------------------------------------------------------------------------
+# legacy host-NumPy round loop — bit-identical reference for the device path
+# ---------------------------------------------------------------------------
+
+
+def _tree_maximize_host(
+    obj,
+    data: jax.Array,
+    cfg: TreeConfig,
+    *,
+    mesh=None,
+    fail_machines: dict[int, list[int]] | None = None,
+) -> TreeResult:
+    n, d = data.shape
+    mu, k = cfg.capacity, cfg.k
+    key = jax.random.PRNGKey(cfg.seed)
+    fail_machines = fail_machines or {}
+
     start_round = 0
     best_rows = np.zeros((k, d), np.float32)
     best_mask = np.zeros((k,), bool)
@@ -141,30 +307,9 @@ def tree_maximize(
             blocks, bmask = part_lib.scatter_rows(
                 items, jnp.ones((len(valid),), bool), kpart, L, mu)
 
-        M = blocks.shape[0]
-        machines_per_round.append(M)
-
-        # pad machine count to the mesh size so the machine axis shards
-        if mesh is not None:
-            ndev = mesh.devices.size
-            Mp = math.ceil(M / ndev) * ndev
-            if Mp != M:
-                blocks = jnp.pad(blocks, ((0, Mp - M), (0, 0), (0, 0)))
-                bmask = jnp.pad(bmask, ((0, Mp - M), (0, 0)))
-                M = Mp
-
-        keys = jax.random.split(kalg, M)
-        dead = np.zeros((M,), bool)
-        for mid in fail_machines.get(t, []):
-            if mid < M:
-                dead[mid] = True
-
-        if mesh is not None:
-            blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask, keys)
-
-        res: RoundResult = run_round(
-            obj, blocks, bmask, keys, k=k, alg=cfg.algorithm, eps=cfg.eps,
-            dead_mask=jnp.asarray(dead), mesh=mesh)
+        machines_per_round.append(blocks.shape[0])
+        res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
+                              fail_machines)
 
         vals = np.asarray(res.values)
         calls = int(np.asarray(res.oracle_calls).sum())

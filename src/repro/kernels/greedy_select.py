@@ -1,0 +1,174 @@
+"""Persistent-state fused greedy-selection megakernel (Pallas, TPU target).
+
+## Fused selection
+
+The step-wise greedy oracle launches one :mod:`exemplar_gains` kernel per
+selected item: every launch re-streams the candidate block ``X`` and the
+eval set ``E`` from HBM, and the subsequent ``cur_min`` refresh streams ``E``
+again — 2k full passes over the operands for a k-item selection, O(k·n·m)
+HBM traffic when the distance tiles spill.  This kernel runs the *entire*
+k-step greedy in a single launch:
+
+  * ``X``, ``E``, ``cur_min`` and the availability mask are loaded into VMEM
+    once (constant-index blocks — Pallas fetches them a single time and they
+    stay resident for the whole grid),
+  * the per-step gains contraction ``-2·X_blk Eᵀ`` runs on the MXU against
+    the resident operands,
+  * the cross-block argmax is carried in an SMEM scratch accumulator
+    (strict ``>`` keeps the lowest index on ties, matching the step-wise
+    tie-breaking exactly),
+  * the winner's ``cur_min`` refresh and availability clear are applied in
+    VMEM before the next step begins.
+
+HBM traffic drops from O(k·n·m) to O((n + m)·d + k·n): the operands cross
+HBM once, and per step only the (k, 1) selection scalar leaves the core.
+The FLOP count is unchanged (the MXU re-contracts resident tiles), so the
+kernel moves the memory roofline, not the compute roofline — which is the
+binding constraint for this oracle (see PERF.md).
+
+Grid: ``(k, n/bn)`` — steps major, candidate row blocks minor.  TPU grid
+iteration is sequential, so scratch state (``cur_min``, availability, the
+argmax accumulator) persists across blocks and steps.
+
+Capacity contract (enforced by ``ops._greedy_select_fits_vmem``): ``X`` and
+``E`` must fit VMEM simultaneously (n·d + m·d fp32 words + one (bn, m)
+gains tile).  For per-machine blocks of the tree driver (n = μ, m = |E|,
+both a few thousand) this holds comfortably; oversized ``auto`` problems
+are dispatched to the pure-jnp fused reference instead.
+
+Padding contract: candidate rows are zero-padded with availability 0 (never
+selected); ``E`` rows and ``cur_min`` are zero-padded so padded eval columns
+contribute ``max(0 - ||x||², 0) = 0`` exactly.  The gains normalisation uses
+the *unpadded* eval-set size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30  # python float — jnp scalars would be captured consts in-kernel
+
+
+def _kernel(x_ref, e_ref, cm0_ref, av0_ref, sel_ref, cmout_ref,
+            cm_s, av_s, bv_s, bi_s, *, bn: int, m_true: int,
+            compute_dtype):
+    s = pl.program_id(0)
+    i = pl.program_id(1)
+    nb = pl.num_programs(1)
+    ns = pl.num_programs(0)
+
+    @pl.when((s == 0) & (i == 0))
+    def _init():
+        cm_s[...] = cm0_ref[...]
+        av_s[...] = av0_ref[...]
+
+    # ---- gains for candidate block i against the resident eval set -------
+    x = x_ref[pl.ds(i * bn, bn), :]                      # (bn, d)
+    e = e_ref[...]                                       # (mp, d)
+    if compute_dtype is not None:
+        xc, ec = x.astype(compute_dtype), e.astype(compute_dtype)
+    else:
+        xc, ec = x.astype(jnp.float32), e.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    ef = e.astype(jnp.float32)
+    x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)        # (bn, 1)
+    e2 = jnp.sum(ef * ef, axis=-1, keepdims=True).T      # (1, mp)
+    xy = jax.lax.dot_general(xc, ec, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(x2 + e2 - 2.0 * xy, 0.0)            # (bn, mp)
+    cm = cm_s[...]                                       # (1, mp)
+    g = jnp.sum(jnp.maximum(cm - d2, 0.0), axis=-1,
+                keepdims=True) / m_true                  # (bn, 1)
+    av = av_s[pl.ds(i * bn, bn), :]                      # (bn, 1)
+    g = jnp.where(av > 0, g, NEG_INF)
+
+    # ---- cross-block argmax via scratch accumulator ----------------------
+    bmax = jnp.max(g)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bn, 1), 0)
+    barg = jnp.min(jnp.where(g == bmax, rows, bn))       # lowest index on ties
+    gidx = i * bn + barg
+
+    @pl.when(i == 0)
+    def _first():
+        bv_s[0] = bmax
+        bi_s[0] = gidx
+
+    better = (i != 0) & (bmax > bv_s[0])                 # strict: low block wins
+
+    @pl.when(better)
+    def _acc():
+        bv_s[0] = bmax
+        bi_s[0] = gidx
+
+    # ---- end of step: commit winner, refresh state in VMEM ---------------
+    @pl.when(i == nb - 1)
+    def _finish():
+        bi = bi_s[0]
+        ok = bv_s[0] > NEG_INF / 2
+        xs = x_ref[pl.ds(bi, 1), :].astype(jnp.float32)  # (1, d) winner row
+        d2b = jnp.sum((ef - xs) ** 2, axis=-1,
+                      keepdims=True).T                   # (1, mp) — objective's
+        cur = cm_s[...]                                  # difference form
+        cm_s[...] = jnp.where(ok, jnp.minimum(cur, d2b), cur)
+        av_cur = av_s[pl.ds(bi, 1), :]
+        av_s[pl.ds(bi, 1), :] = jnp.where(ok, jnp.zeros_like(av_cur), av_cur)
+        sel_ref[0, 0] = jnp.where(ok, bi, jnp.int32(-1))
+
+        @pl.when(s == ns - 1)
+        def _flush():
+            cmout_ref[...] = cm_s[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bn", "m_true", "compute_dtype",
+                                    "interpret"))
+def greedy_select_pallas(
+    X: jax.Array,        # (n, d) candidates — n % bn == 0 (wrapper pads)
+    E: jax.Array,        # (mp, d) eval set — zero-padded rows
+    cur_min: jax.Array,  # (mp,)            — zero-padded
+    avail: jax.Array,    # (n,) float32 1/0 — padded rows 0
+    *,
+    k: int,
+    bn: int = 256,
+    m_true: int | None = None,
+    compute_dtype=None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    n, d = X.shape
+    mp = E.shape[0]
+    m_true = mp if m_true is None else m_true
+    assert n % bn == 0, (n, bn)
+    grid = (k, n // bn)
+
+    kern = functools.partial(_kernel, bn=bn, m_true=m_true,
+                             compute_dtype=compute_dtype)
+    sel, cm = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, d), lambda s, i: (0, 0)),   # X resident
+            pl.BlockSpec((mp, d), lambda s, i: (0, 0)),  # E resident
+            pl.BlockSpec((1, mp), lambda s, i: (0, 0)),  # cur_min seed
+            pl.BlockSpec((n, 1), lambda s, i: (0, 0)),   # availability seed
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda s, i: (s, 0)),   # per-step selection
+            pl.BlockSpec((1, mp), lambda s, i: (0, 0)),  # final cur_min
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((k, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, mp), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, mp), jnp.float32),            # running cur_min
+            pltpu.VMEM((n, 1), jnp.float32),             # availability
+            pltpu.SMEM((1,), jnp.float32),               # best value so far
+            pltpu.SMEM((1,), jnp.int32),                 # best index so far
+        ],
+        interpret=interpret,
+    )(X, E, cur_min[None, :], avail[:, None])
+    return sel[:, 0], cm[0]

@@ -8,6 +8,24 @@ Dispatch policy (``impl``):
   * ``"pallas"`` — force Pallas, interpret=True off-TPU so it still runs.
 
 The wrappers own the padding contract so kernels can assume exact tiling.
+
+## Fused selection
+
+:func:`greedy_select` is the one *multi-step* kernel in this package: it runs
+an entire k-item exemplar-clustering greedy selection in a single launch
+(see kernels/greedy_select.py).  Its dispatch adds one rule on top of the
+policy above: the Pallas path additionally requires the candidate block and
+eval set to fit VMEM together (``(n + m)·d`` fp32 words plus one ``(bn, m)``
+gains tile — see ``_greedy_select_fits_vmem``); oversized ``auto`` problems
+take the pure-jnp fused reference instead.  Both impls are bit-identical to
+the step-wise greedy, lowest-index tie-breaking included, so β-niceness
+guarantees transfer unchanged.  Scope of that contract: exact within an
+impl family (ref-vs-ref, certified by tests; interpret-vs-ref likewise).
+On TPU hardware the step-wise oracle reduces over ``bm``-tiles
+(exemplar_gains) while the megakernel reduces whole rows, so *exactly*
+tied gains could in principle resolve differently there — same class of
+last-ulp caveat as any reduction-order change, and the kernel_bench
+equality assert doubles as the canary.
 """
 from __future__ import annotations
 
@@ -16,6 +34,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.exemplar_gains import exemplar_gains_pallas
+from repro.kernels.greedy_select import greedy_select_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_kernel import rbf_kernel_pallas
 from repro.kernels.wkv6 import wkv6_pallas
@@ -78,6 +97,65 @@ def exemplar_gains(
     raw = exemplar_gains_pallas(Xp, Ep, cmp_, bn=bn, bm=bm,
                                 interpret=_interpret())
     return raw[:n] / m
+
+
+# VMEM budget for the fused selection kernel's resident operands: 16 MB/core
+# minus headroom for the (bn, m) gains tile, availability and accumulators.
+_GREEDY_SELECT_VMEM_BUDGET = 12 * 1024 * 1024
+
+
+def _greedy_select_fits_vmem(n: int, m: int, d: int, bn: int) -> bool:
+    resident = (n * d + m * d + m + n) * 4        # X, E, cur_min, avail fp32
+    tile = bn * m * 4                             # one gains tile
+    return resident + tile <= _GREEDY_SELECT_VMEM_BUDGET
+
+
+def greedy_select(
+    X: jax.Array,
+    E: jax.Array,
+    cur_min: jax.Array,
+    mask: jax.Array,
+    k: int,
+    *,
+    impl: str = "auto",
+    bn: int = 256,
+    bm: int = 128,
+    compute_dtype=None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused k-step greedy selection for exemplar clustering.
+
+    Returns ``(sel_idx, cur_min_out)`` — see kernels/greedy_select.py.
+    Bit-identical (ties included) to running the step-wise greedy with
+    ``ExemplarClustering`` on the same impl family.
+
+    The Pallas megakernel keeps X and E resident in VMEM, so ``auto``
+    additionally requires them to fit (:func:`_greedy_select_fits_vmem`);
+    oversized problems take the reference path (XLA hoists the step-
+    invariant contraction, so it degrades gracefully rather than erroring).
+    ``impl="pallas"`` overrides the capacity check (tests, experiments).
+    """
+    oversized = not _greedy_select_fits_vmem(X.shape[0], E.shape[0],
+                                             X.shape[1], bn)
+    if not _use_pallas(impl) or (impl == "auto" and oversized):
+        return ref.greedy_select(X, E, cur_min, mask, k,
+                                 compute_dtype=compute_dtype)
+    n, m = X.shape[0], E.shape[0]
+    bn = min(bn, max(8, n))
+    bm = min(bm, max(8, m))
+    Xp = _pad_rows(X, bn)
+    avp = _pad_rows(mask.astype(jnp.float32), bn)
+    Ep = _pad_rows(E, bm)
+    cmp_ = _pad_rows(cur_min, bm)  # zero-pad ⇒ padded columns contribute 0
+    # score with the dtype the step-wise oracle would actually use in this
+    # environment: exemplar_gains' pallas branch (TPU) always contracts
+    # fp32, while its ref branch (interpret testing) honors compute_dtype —
+    # diverging from the baseline here would let near-tied gains select
+    # different items and void the bit-identity contract
+    cd = None if _on_tpu() else (
+        None if compute_dtype is None else jnp.dtype(compute_dtype).name)
+    sel, cm = greedy_select_pallas(Xp, Ep, cmp_, avp, k=k, bn=bn, m_true=m,
+                                   compute_dtype=cd, interpret=_interpret())
+    return sel, cm[:m]
 
 
 def rbf_kernel(

@@ -133,10 +133,11 @@ def dryrun_submod(multi_pod: bool, alg: str = "greedy",
 
     local = functools.partial(dist._round_local, k=scfg.k,
                               alg=alg, eps=0.5)
-    fn = jax.shard_map(local, mesh=flat_mesh,
-                       in_specs=(P(), P("machines"), P("machines"),
-                                 P("machines"), P("machines")),
-                       out_specs=(P("machines"),) * 4, check_vma=False)
+    from repro.core.distributed import _shard_map
+    fn = _shard_map(local, mesh=flat_mesh,
+                    in_specs=(P(), P("machines"), P("machines"),
+                              P("machines"), P("machines")),
+                    out_specs=(P("machines"),) * 4, check_vma=False)
     t0 = time.time()
     lowered = jax.jit(fn).lower(obj, blocks, bmask, keys, dead)
     t1 = time.time()

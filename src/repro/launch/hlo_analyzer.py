@@ -115,8 +115,13 @@ def _split_computations(text: str) -> list[Computation]:
                         break
                 if depth >= 1:
                     ops_txt += ch
-        operands = [t.strip().lstrip("%") for t in ops_txt.split(",")
-                    if t.strip() and not t.strip()[0].isdigit()]
+        # this XLA's text inlines operand types — `dot(f32[64,64]{1,0} %a,
+        # ...)` — so comma-splitting breaks inside brackets; %-refs are the
+        # reliable handle, with the comma heuristic kept for %-less dialects
+        operands = re.findall(r"%([\w\.\-]+)", ops_txt)
+        if not operands:
+            operands = [t.strip().lstrip("%") for t in ops_txt.split(",")
+                        if t.strip() and not t.strip()[0].isdigit()]
         op = Op(name, kind, _shape_bytes(rtxt), line, operands)
         cur.ops.append(op)
         cur.table[name] = op.result_bytes

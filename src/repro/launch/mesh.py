@@ -6,7 +6,16 @@ device state — the dry-run sets XLA_FLAGS before any jax initialisation.
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:                                    # jax ≥ 0.5 explicit-sharding API
+    from jax.sharding import AxisType
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {"axis_types": (AxisType.Auto,) * n_axes}
+except ImportError:                     # jax 0.4.x: all axes are Auto already
+
+    def _axis_kwargs(n_axes: int) -> dict:
+        return {}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -15,11 +24,10 @@ def make_production_mesh(*, multi_pod: bool = False):
     DP (params replicated across pods, gradient all-reduce over DCI)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for multi-device tests (host platform device count)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+                         **_axis_kwargs(2))

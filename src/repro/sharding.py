@@ -44,13 +44,23 @@ def fit_spec(shape: Sequence[int], spec: Sequence[Any],
     return P(*[_fit_names(d, s, mesh_shape) for d, s in zip(shape, spec)])
 
 
+def _ambient_mesh_shape() -> dict[str, int] | None:
+    """Axis sizes of the ambient mesh, or None when no mesh is set."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):   # jax ≥ 0.5
+        am = jax.sharding.get_abstract_mesh()
+        return None if am.empty else dict(am.shape)
+    from jax._src import mesh as _mesh_lib           # jax 0.4.x: `with mesh:`
+    pm = _mesh_lib.thread_resources.env.physical_mesh
+    return None if pm.empty else dict(pm.shape)
+
+
 def shard(x: jax.Array, *spec) -> jax.Array:
     """with_sharding_constraint with divisibility fallback; no-op w/o mesh."""
-    am = jax.sharding.get_abstract_mesh()
-    if am.empty:
+    mesh_shape = _ambient_mesh_shape()
+    if mesh_shape is None:
         return x
     return jax.lax.with_sharding_constraint(
-        x, fit_spec(x.shape, spec, dict(am.shape)))
+        x, fit_spec(x.shape, spec, mesh_shape))
 
 
 # ---------------------------------------------------------------------------

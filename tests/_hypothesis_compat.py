@@ -1,0 +1,28 @@
+"""Import shim: run hypothesis property tests when the package exists,
+degrade to skipping *only those tests* when it doesn't (this container has
+no hypothesis wheel) — the plain parametrized tests in the same modules
+still run and count.
+
+Usage:  from _hypothesis_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:  # pragma: no cover - depends on environment
+    import pytest as _pytest
+
+    def given(*_a, **_k):
+        # keep the original function (parametrize stacked on top still sees
+        # its argnames); the skip mark fires before fixture resolution, so
+        # strategy-filled params never get looked up as fixtures
+        def deco(fn):
+            return _pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()

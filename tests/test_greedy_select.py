@@ -1,0 +1,317 @@
+"""Fused greedy-selection megakernel + device-resident tree rounds.
+
+Certifies the two PR-1 contracts:
+  * the fused k-step selection (ref and Pallas interpret) is *bit-identical*
+    to the step-wise greedy scan — indices (ties included), value bits,
+    oracle-call counts — so β-niceness guarantees transfer unchanged;
+  * the device-resident tree round loop moves no per-round arrays to host
+    (scalars only) and reproduces the legacy host loop exactly.
+Plus regression pins for the satellite fixes (threshold_greedy accounting,
+stochastic_greedy sorted sampling).
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ExemplarClustering, TreeConfig, WeightedCoverage,
+                        greedy, stochastic_greedy, threshold_greedy,
+                        tree_maximize)
+from repro.core.algorithms import NEG_INF
+from repro.core import tree as tree_mod
+from repro.core import partition as part_lib
+from repro.kernels import ops, ref
+
+
+def _setup(n, m, d, seed=0, frac_valid=1.0):
+    r = np.random.default_rng(seed)
+    T = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+    E = jnp.asarray(r.standard_normal((m, d)).astype(np.float32))
+    mask = jnp.asarray(r.random(n) < frac_valid) if frac_valid < 1.0 \
+        else jnp.ones((n,), bool)
+    return T, E, mask
+
+
+# ---------------------------------------------------------------------------
+# fused greedy — bit-exactness vs the step-wise scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,m,d,k", [(64, 32, 8, 8), (100, 37, 9, 12),
+                                     (33, 17, 5, 40), (256, 128, 16, 32)])
+@pytest.mark.parametrize("score_dtype", [None, "bfloat16"])
+def test_fused_ref_bit_identical_to_stepwise(n, m, d, k, score_dtype):
+    T, E, mask = _setup(n, m, d, seed=n + k)
+    obj = ExemplarClustering(E, score_dtype=score_dtype)
+    step = greedy(obj, T, mask, k, fused=False)
+    fus = greedy(obj, T, mask, k, fused=True)
+    assert np.array_equal(np.asarray(step.sel_idx), np.asarray(fus.sel_idx))
+    assert np.array_equal(np.asarray(step.sel_mask), np.asarray(fus.sel_mask))
+    # value and call count are *bitwise* equal, not just allclose
+    assert np.asarray(step.value).tobytes() == np.asarray(fus.value).tobytes()
+    assert int(step.oracle_calls) == int(fus.oracle_calls)
+
+
+def test_fused_auto_selected_for_rowwise_unconstrained():
+    T, E, mask = _setup(50, 20, 6)
+    obj = ExemplarClustering(E)
+    auto = greedy(obj, T, mask, 5)            # fused=None → auto
+    fus = greedy(obj, T, mask, 5, fused=True)
+    assert np.array_equal(np.asarray(auto.sel_idx), np.asarray(fus.sel_idx))
+
+
+def test_fused_handles_duplicate_rows_ties_to_lowest_index():
+    # identical rows ⇒ exactly tied gains at step 0; both paths must take
+    # the lowest block position
+    r = np.random.default_rng(3)
+    base = r.standard_normal((20, 4)).astype(np.float32)
+    T = jnp.asarray(np.concatenate([base[5:6], base]))   # row 0 == row 6
+    E = jnp.asarray(r.standard_normal((16, 4)).astype(np.float32))
+    mask = jnp.ones((21,), bool)
+    obj = ExemplarClustering(E)
+    step = greedy(obj, T, mask, 6, fused=False)
+    fus = greedy(obj, T, mask, 6, fused=True)
+    assert np.array_equal(np.asarray(step.sel_idx), np.asarray(fus.sel_idx))
+
+
+def test_fused_exhausts_candidates_like_stepwise():
+    # k > number of valid items: trailing steps select nothing (-1) and
+    # call counting stops
+    T, E, mask = _setup(12, 8, 4, seed=9)
+    mask = mask.at[5:].set(False)             # 5 valid items, k = 9
+    obj = ExemplarClustering(E)
+    step = greedy(obj, T, mask, 9, fused=False)
+    fus = greedy(obj, T, mask, 9, fused=True)
+    assert np.array_equal(np.asarray(step.sel_idx), np.asarray(fus.sel_idx))
+    assert np.array_equal(np.asarray(step.sel_mask), np.asarray(fus.sel_mask))
+    assert int(step.oracle_calls) == int(fus.oracle_calls)
+    assert np.asarray(fus.sel_idx)[5:].tolist() == [-1] * 4
+
+
+@pytest.mark.parametrize("n,m,d,k,bn", [(64, 32, 8, 8, 16), (100, 37, 9, 12, 32),
+                                        (48, 48, 16, 48, 48), (96, 24, 5, 7, 8)])
+@pytest.mark.parametrize("score_dtype", [None, "bfloat16"])
+def test_pallas_megakernel_bit_identical_interpret(n, m, d, k, bn, score_dtype):
+    """Pallas (interpret=True) fused kernel vs the step-wise scan: same
+    bits across caps, blockings and score dtypes — incl. cross-block
+    argmax tie-breaking and the padded-row/column contract."""
+    T, E, mask = _setup(n, m, d, seed=n * k, frac_valid=0.85)
+    obj = ExemplarClustering(E, score_dtype=score_dtype)
+    step = greedy(obj, T, mask, k, fused=False)
+    st0 = obj.init_state(T, mask)
+    cd = jnp.bfloat16 if score_dtype == "bfloat16" else None
+    sel, cm = ops.greedy_select(T, E, st0["cur_min"], mask, k,
+                                impl="pallas", bn=bn, compute_dtype=cd)
+    assert np.array_equal(np.asarray(step.sel_idx), np.asarray(sel))
+    val = st0["base"] - jnp.mean(cm)
+    assert np.asarray(step.value).tobytes() == np.asarray(val).tobytes()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_ref_matches_stepwise_for_input_dtype(dtype):
+    # candidate rows stored in reduced precision: both paths run the same
+    # promotion sequence, so outputs still agree exactly
+    T, E, mask = _setup(60, 30, 8, seed=21)
+    T = T.astype(dtype)
+    obj = ExemplarClustering(E)
+    step = greedy(obj, T, mask, 10, fused=False)
+    fus = greedy(obj, T, mask, 10, fused=True)
+    assert np.array_equal(np.asarray(step.sel_idx), np.asarray(fus.sel_idx))
+    assert np.asarray(step.value).tobytes() == np.asarray(fus.value).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# device-resident tree rounds
+# ---------------------------------------------------------------------------
+
+
+def _tree_setup(n=600, d=8, ne=128, seed=0):
+    r = np.random.default_rng(seed)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    E = data[r.choice(n, ne, replace=False)]
+    return jnp.asarray(data), ExemplarClustering(jnp.asarray(E))
+
+
+@pytest.mark.parametrize("mu", [20, 60, 200])
+def test_device_rounds_identical_to_host_rounds(mu):
+    data, obj = _tree_setup()
+    cfg = TreeConfig(k=8, capacity=mu, seed=1)
+    dev = tree_maximize(obj, data, cfg)
+    host = tree_maximize(obj, data, cfg, host_rounds=True)
+    assert dev.value == host.value
+    assert dev.rounds == host.rounds
+    assert dev.oracle_calls == host.oracle_calls
+    assert dev.machines_per_round == host.machines_per_round
+    assert dev.round_values == host.round_values
+    np.testing.assert_array_equal(dev.sel_rows, host.sel_rows)
+    np.testing.assert_array_equal(dev.sel_mask, host.sel_mask)
+
+
+def test_device_rounds_identical_under_failures():
+    data, obj = _tree_setup(seed=4)
+    cfg = TreeConfig(k=8, capacity=60, seed=4)
+    fails = {0: [0, 1, 2], 1: [0]}
+    dev = tree_maximize(obj, data, cfg, fail_machines=fails)
+    host = tree_maximize(obj, data, cfg, fail_machines=fails, host_rounds=True)
+    assert dev.value == host.value and dev.oracle_calls == host.oracle_calls
+
+
+def test_repartition_rows_matches_host_scatter():
+    """Device repartition == flatnonzero-compact + scatter_rows, bitwise."""
+    r = np.random.default_rng(7)
+    rows = jnp.asarray(r.standard_normal((40, 5)).astype(np.float32))
+    mask = jnp.asarray(r.random(40) < 0.7)
+    key = jax.random.PRNGKey(13)
+    L, cap = 3, 12
+    assert int(mask.sum()) <= L * cap
+    got_b, got_m = part_lib.repartition_rows(rows, mask, key, L, cap)
+    valid = np.flatnonzero(np.asarray(mask))
+    want_b, want_m = part_lib.scatter_rows(
+        jnp.asarray(np.asarray(rows)[valid]),
+        jnp.ones((len(valid),), bool), key, L, cap)
+    np.testing.assert_array_equal(np.asarray(got_b), np.asarray(want_b))
+    np.testing.assert_array_equal(np.asarray(got_m), np.asarray(want_m))
+
+
+def test_round_loop_transfers_scalars_only(monkeypatch):
+    """No per-round A_t host transfer: every device→host crossing inside
+    tree_maximize is either a 0-d scalar or one of the ≤2 final-result
+    pulls — independent of the number of rounds."""
+    scalar_calls, array_shapes = [], []
+    orig_scalar, orig_array = tree_mod._host_scalar, tree_mod._host_array
+
+    def spy_scalar(x):
+        scalar_calls.append(jnp.shape(x))
+        return orig_scalar(x)
+
+    def spy_array(x):
+        array_shapes.append(jnp.shape(x))
+        return orig_array(x)
+
+    monkeypatch.setattr(tree_mod, "_host_scalar", spy_scalar)
+    monkeypatch.setattr(tree_mod, "_host_array", spy_array)
+
+    data, obj = _tree_setup()
+    cfg = TreeConfig(k=8, capacity=30, seed=2)      # no checkpoint_dir
+    # any unsanctioned transfer (e.g. an np.asarray on A_t) raises here
+    with jax.transfer_guard_device_to_host("disallow"):
+        res = tree_maximize(obj, data, cfg)
+    assert res.rounds >= 3                          # multi-round run
+    assert all(s == () for s in scalar_calls)
+    # final TreeResult materialisation only: best_rows + best_mask
+    assert len(array_shapes) == 2, array_shapes
+    assert array_shapes == [(8, data.shape[1]), (8,)]
+
+
+def test_checkpoint_restart_on_device_path():
+    import tempfile
+    data, obj = _tree_setup(n=500, seed=5)
+    with tempfile.TemporaryDirectory() as td:
+        cfg = TreeConfig(k=8, capacity=60, seed=5, checkpoint_dir=td)
+        full = tree_maximize(obj, data, cfg)
+        cfg_r = TreeConfig(k=8, capacity=60, seed=5, checkpoint_dir=td,
+                           resume=True)
+        resumed = tree_maximize(obj, data, cfg_r)
+        assert resumed.value >= full.value - 1e-6
+        assert resumed.machines_per_round[0] == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+
+def test_threshold_greedy_call_accounting_hand_computed():
+    """Disjoint-coverage instance, every quantity derivable by hand.
+
+    Items cover disjoint universe elements with weights (4, 2, 1) ⇒ marginal
+    gains are constant (4, 2, 1).  k=2, eps=0.5 ⇒ 5 threshold levels
+    τ = 4, 2, 1, 0.5, 0.25.
+
+      init pass (d_max):          3 evals (one per valid item)
+      level τ=4:   evals i=0,1,2  (+3 → 6), takes item 0
+      level τ=2:   evals i=1,2    (+2 → 8), takes item 1 → count = k
+      levels τ=1, .5, .25: item 2 still available → 1 eval each (+3 → 11)
+
+    The seed code started the counter at cap and skipped the eval of every
+    taken item (it read availability *after* the take), yielding 9.
+    """
+    w = jnp.asarray(np.array([4.0, 2.0, 1.0], np.float32))
+    inc = jnp.asarray(np.eye(3, dtype=np.float32))
+    obj = WeightedCoverage(w)
+    mask = jnp.ones((3,), bool)
+    eps = 0.5
+    n_levels = max(1, math.ceil(math.log(2.0 * 2 / eps) / eps))
+    assert n_levels == 5
+    res = threshold_greedy(obj, inc, mask, 2, eps=eps)
+    sel = np.asarray(res.sel_idx)[np.asarray(res.sel_mask)]
+    assert sel.tolist() == [0, 1]
+    assert int(res.oracle_calls) == 11, int(res.oracle_calls)
+
+
+def test_threshold_greedy_call_accounting_respects_mask():
+    """Masked-out items are never oracle-charged (seed init counted cap)."""
+    w = jnp.asarray(np.array([4.0, 2.0, 1.0], np.float32))
+    inc = jnp.asarray(np.eye(3, dtype=np.float32))
+    obj = WeightedCoverage(w)
+    mask = jnp.asarray([True, False, True])
+    # valid gains (4, 1): init 2 evals; τ=4: i=0,2 (+2 → 4), takes 0;
+    # τ=2: i=2 (+1 → 5); τ=1: i=2 eval (+1 → 6), takes 2 → count = k;
+    # τ=.5, τ=.25: nothing available → +0.  Total 6.
+    res = threshold_greedy(obj, inc, mask, 2, eps=0.5)
+    sel = np.asarray(res.sel_idx)[np.asarray(res.sel_mask)]
+    assert sel.tolist() == [0, 2]
+    assert int(res.oracle_calls) == 6, int(res.oracle_calls)
+
+
+def test_stochastic_greedy_sorted_sampling_output_unchanged():
+    """Sorting the sampled indices before the gather must not change the
+    selection: same sample set ⇒ same best element (ties absent under
+    continuous data).  Reference below is the seed's unsorted step."""
+    T, E, mask = _setup(300, 64, 8, seed=5)
+    obj = ExemplarClustering(E)
+    k, eps, key = 10, 0.3, jax.random.PRNGKey(42)
+    res = stochastic_greedy(obj, T, mask, k, key, eps=eps)
+
+    # frozen copy of the seed implementation's rowwise step (unsorted gather)
+    cap = T.shape[0]
+    s = min(cap, max(1, math.ceil(cap / k * math.log(1.0 / eps))))
+
+    def step(carry, key_t):
+        state, avail, calls = carry
+        scores = jax.random.uniform(key_t, (cap,))
+        scores = jnp.where(avail, scores, 2.0)
+        _, sub_idx = jax.lax.top_k(-scores, s)
+        sub_avail = avail[sub_idx]
+        g = obj.gains(state, T[sub_idx], sub_avail)
+        b = jnp.argmax(g)
+        best = sub_idx[b]
+        ok = g[b] > NEG_INF / 2
+        new_state = obj.update(state, T, best)
+        state = jax.tree_util.tree_map(
+            lambda x, y: jnp.where(ok, x, y), new_state, state)
+        avail = avail & ~(ok & (jnp.arange(cap) == best))
+        calls = calls + jnp.sum(sub_avail.astype(jnp.int32))
+        return (state, avail, calls), jnp.where(ok, best.astype(jnp.int32),
+                                                jnp.int32(-1))
+
+    keys = jax.random.split(key, k)
+    init = (obj.init_state(T, mask), mask, jnp.int32(0))
+    (state, _, calls), sel_idx = jax.lax.scan(step, init, keys)
+    assert np.array_equal(np.asarray(res.sel_idx), np.asarray(sel_idx))
+    assert int(res.oracle_calls) == int(calls)
+    np.testing.assert_allclose(float(res.value), float(obj.value(state)),
+                               rtol=1e-6)
+
+
+def test_active_set_state_has_no_dead_entries():
+    """The (cap, d) item block must not ride along in every scan carry."""
+    from repro.core import ActiveSetSelection
+    T = jnp.zeros((10, 4))
+    obj = ActiveSetSelection(k_max=3)
+    state = obj.init_state(T, jnp.ones((10,), bool))
+    assert set(state) == {"C", "r", "logdet", "step"}
+    state = obj.update(state, T, jnp.int32(0))
+    assert set(state) == {"C", "r", "logdet", "step"}
