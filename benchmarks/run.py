@@ -7,9 +7,11 @@
   fig2ef   — large-scale, stochastic subprocedure         (paper Fig 2 e-f)
   ft       — failure/straggler degradation                (beyond paper)
   kernels  — kernel micro-benchmarks + traffic models
+  tree     — streaming-ingestion scaling sweep            (PR 2)
 
-Suites that return a dict contribute to ``BENCH_PR1.json`` (repo root) —
-the start of the cross-PR perf trajectory record.
+Suites that return a dict contribute to the cross-PR perf trajectory
+record: ``tree`` writes ``BENCH_PR2.json``; everything else goes to
+``BENCH_PR1.json`` (repo root).  ``--only tree`` is the PR 2 refresh.
 """
 import argparse
 import json
@@ -17,8 +19,9 @@ import os
 import sys
 import time
 
-BENCH_JSON = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          os.pardir, "BENCH_PR1.json")
+_ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
+BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
+BENCH_PR2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 
 
 def main() -> None:
@@ -31,7 +34,8 @@ def main() -> None:
 
     from benchmarks import (fault_tolerance_bench, fig2_capacity,
                             fig2_large_scale, kernel_bench,
-                            table1_complexity, table3_relative_error)
+                            table1_complexity, table3_relative_error,
+                            tree_scaling)
     suites = {
         "table1": table1_complexity.run,
         "table3": table3_relative_error.run,
@@ -39,8 +43,11 @@ def main() -> None:
         "fig2ef": fig2_large_scale.run,
         "ft": fault_tolerance_bench.run,
         "kernels": kernel_bench.run,
+        "tree": tree_scaling.run,
     }
-    measured: dict = {}
+    # suite → (trajectory file, PR tag); default is the PR-1 record
+    targets = {"tree": (BENCH_PR2_JSON, 2)}
+    measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:
             continue
@@ -51,23 +58,28 @@ def main() -> None:
             measured[name] = out
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s", flush=True)
 
-    if measured:
+    by_file: dict[str, tuple[int, dict]] = {}
+    for name, out in measured.items():
+        path, pr = targets.get(name, (BENCH_JSON, 1))
+        by_file.setdefault(path, (pr, {}))[1][name] = out
+
+    for path, (pr, suites_out) in by_file.items():
         # never let a quick run clobber a recorded full-size trajectory point
-        if quick and os.path.exists(BENCH_JSON):
+        if quick and os.path.exists(path):
             try:
-                with open(BENCH_JSON) as f:
+                with open(path) as f:
                     if json.load(f).get("quick") is False:
-                        print(f"# kept full-size {os.path.normpath(BENCH_JSON)}"
+                        print(f"# kept full-size {os.path.normpath(path)}"
                               " (quick run does not overwrite)", flush=True)
-                        return
+                        continue
             except (OSError, ValueError):
                 pass
         import jax
-        record = {"pr": 1, "quick": quick,
-                  "backend": jax.default_backend(), "suites": measured}
-        with open(BENCH_JSON, "w") as f:
+        record = {"pr": pr, "quick": quick,
+                  "backend": jax.default_backend(), "suites": suites_out}
+        with open(path, "w") as f:
             json.dump(record, f, indent=2)
-        print(f"# wrote {os.path.normpath(BENCH_JSON)}", flush=True)
+        print(f"# wrote {os.path.normpath(path)}", flush=True)
 
 
 if __name__ == '__main__':

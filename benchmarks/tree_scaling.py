@@ -1,0 +1,89 @@
+"""Streaming-ingestion scaling sweep (PR 2): n ≥ 10× the largest
+all-resident benchmark shape, under a bounded-device-memory assertion.
+
+The largest all-resident TREE benchmark is fig2ef (n = 50k quick / 200k
+full, held as one (n, d) device array).  Here the ground set exists only
+as pipeline-backed shards (``synthetic_sharded_source``) at 10× that n;
+round 0 streams machine blocks in waves of W, and we *assert* the peak
+device-resident candidate footprint stays below a budget the resident
+path necessarily blows — the paper's fixed-μ-while-n-grows regime.
+
+Record lands in ``BENCH_PR2.json`` via ``benchmarks/run.py --only tree``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import ExemplarClustering, TreeConfig, tree_maximize
+from repro.data.sources import synthetic_sharded_source
+
+DEVICE_ROW_BUDGET_BYTES = 4 * 1024 * 1024   # 4 MiB of fp32 candidate rows
+
+
+def _equivalence_probe(d: int, k: int, mu: int, wave: int) -> dict:
+    """Small-shape sanity: streaming == resident, bit for bit."""
+    src = synthetic_sharded_source(n=20_000, d=d, shard_rows=4_096, seed=1)
+    data = src.materialize()
+    obj = ExemplarClustering(jnp.asarray(data[:256]))
+    cfg = TreeConfig(k=k, capacity=mu, seed=0)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    streamed = tree_maximize(obj, src, cfg, wave_machines=wave)
+    assert streamed.value == resident.value, (streamed.value, resident.value)
+    assert np.array_equal(streamed.sel_rows, resident.sel_rows)
+    assert streamed.oracle_calls == resident.oracle_calls
+    return {"n": 20_000, "value": float(resident.value),
+            "bit_identical": True}
+
+
+def run(quick: bool = True):
+    # fig2ef's all-resident n is 50k quick / 200k full; we run 10×.
+    n = 500_000 if quick else 2_000_000
+    d, k, mu, wave = 16, 20, 1_000, 8
+    src = synthetic_sharded_source(n=n, d=d, shard_rows=50_000, seed=0)
+
+    rng = np.random.default_rng(0)
+    ev = src.gather(rng.choice(n, 256, replace=False))
+    obj = ExemplarClustering(jnp.asarray(ev))
+    cfg = TreeConfig(k=k, capacity=mu, seed=0)
+
+    print("tree: n,d,k,mu,wave,waves,peak_wave_rows,peak_wave_bytes,"
+          "resident_bytes,value,rounds,sec")
+    with Timer() as t:
+        res = tree_maximize(obj, src, cfg, wave_machines=wave)
+    ing = res.ingest
+    resident_bytes = n * d * 4
+
+    # bounded-device-memory guard: the wave footprint must fit a budget
+    # the all-resident (n, d) ground set cannot.
+    assert ing.peak_wave_rows <= wave * mu, (ing.peak_wave_rows, wave * mu)
+    assert ing.peak_wave_bytes <= DEVICE_ROW_BUDGET_BYTES, ing.peak_wave_bytes
+    assert resident_bytes > DEVICE_ROW_BUDGET_BYTES, (
+        "scaling shape no longer exceeds the device budget — grow n")
+
+    print(f"tree,{n},{d},{k},{mu},{wave},{ing.waves},{ing.peak_wave_rows},"
+          f"{ing.peak_wave_bytes},{resident_bytes},{res.value:.6f},"
+          f"{res.rounds},{t.s:.1f}")
+
+    probe = _equivalence_probe(d, k, mu=400, wave=4)
+    print(f"tree,equivalence-probe,n={probe['n']},bit_identical=True")
+
+    return {
+        "shape": {"n": n, "d": d, "k": k, "mu": mu, "wave_machines": wave},
+        "resident_reference_n": 50_000 if quick else 200_000,
+        "scale_factor_vs_resident": n / (50_000 if quick else 200_000),
+        "waves": ing.waves, "machines_round0": ing.total_machines,
+        "peak_wave_rows": ing.peak_wave_rows,
+        "peak_wave_bytes": ing.peak_wave_bytes,
+        "device_row_budget_bytes": DEVICE_ROW_BUDGET_BYTES,
+        "resident_bytes_model": resident_bytes,
+        "footprint_ratio": resident_bytes / ing.peak_wave_bytes,
+        "value": float(res.value), "rounds": res.rounds,
+        "oracle_calls": res.oracle_calls, "seconds": round(t.s, 1),
+        "equivalence_probe": probe,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -10,7 +10,9 @@ from repro.core.distributed import RoundResult, make_submod_mesh, run_round
 from repro.core.objectives import (ActiveSetSelection, ExemplarClustering,
                                    FacilityLocation, WeightedCoverage)
 from repro.core.partition import balanced_partition, gather_partition, n_parts
-from repro.core.tree import TreeConfig, TreeResult, tree_maximize
+from repro.core.sources import (ArraySource, ChunkedSource, GroundSetSource,
+                                as_source)
+from repro.core.tree import IngestStats, TreeConfig, TreeResult, tree_maximize
 
 __all__ = [
     "SelectResult", "greedy", "stochastic_greedy", "threshold_greedy",
@@ -19,5 +21,6 @@ __all__ = [
     "Intersection", "RoundResult", "make_submod_mesh", "run_round",
     "ActiveSetSelection", "ExemplarClustering", "FacilityLocation",
     "WeightedCoverage", "balanced_partition", "gather_partition", "n_parts",
-    "TreeConfig", "TreeResult", "tree_maximize",
+    "ArraySource", "ChunkedSource", "GroundSetSource", "as_source",
+    "IngestStats", "TreeConfig", "TreeResult", "tree_maximize",
 ]

@@ -1,0 +1,123 @@
+"""Ground-set sources — capacity-bounded access to the (n, d) item universe.
+
+The paper's premise is a *fixed* per-machine capacity μ while n grows
+without bound; an all-resident ``(n, d)`` device array is exactly the
+"capacity must grow with the data set" failure mode it attributes to
+GreeDi.  A :class:`GroundSetSource` abstracts how round-0 ingestion reaches
+item rows so the tree driver never has to materialize the full ground set
+on device:
+
+  * :class:`ArraySource` — in-memory array (device or host).  Random
+    access; wraps the legacy all-resident path.
+  * :class:`ChunkedSource` — a host iterator that can only be re-streamed
+    sequentially in fixed chunks (file readers, generators).  A gather
+    re-streams the chunks and picks out the requested rows, so host
+    memory stays O(chunk + request) — at the price of one pass per wave.
+  * ``repro.data.sources.ShardedSource`` — pipeline-backed shards with
+    per-shard lazy loaders; a gather touches only the shards that hold
+    requested rows.
+
+All sources expose ``n``/``d``/``dtype``, sequential ``iter_chunks()``,
+and ``gather(idx)`` (host int indices → ``(len(idx), d)`` rows).  Rows are
+returned by value; the caller owns masking of padding slots.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class GroundSetSource:
+    """Abstract capacity-bounded view of the ground set V (n items, d dims)."""
+
+    n: int
+    d: int
+    dtype: np.dtype
+
+    def iter_chunks(self, chunk_rows: int = 8192) -> Iterator[Tuple[int, np.ndarray]]:
+        """Yield ``(start, rows)`` covering items [0, n) in index order.
+
+        ``chunk_rows`` is advisory — sources with a native chunking (file
+        shards, pipeline batches) yield their own chunk boundaries.
+        """
+        raise NotImplementedError
+
+    def gather(self, idx: np.ndarray) -> np.ndarray:
+        """Rows for host int indices ``idx`` (any shape's flat order).
+
+        Default implementation re-streams :meth:`iter_chunks` and picks the
+        requested rows as they go by — O(n/chunk) chunk reads, but host
+        memory bounded by O(chunk_rows + len(idx)) rows.
+        """
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        out = np.zeros((idx.size, self.d), self.dtype)
+        for start, rows in self.iter_chunks():
+            hit = (idx >= start) & (idx < start + len(rows))
+            if hit.any():
+                out[hit] = rows[idx[hit] - start]
+        return out
+
+    def materialize(self) -> np.ndarray:
+        """Full (n, d) host array — tests/small references only."""
+        return np.concatenate([rows for _, rows in self.iter_chunks()], axis=0)
+
+
+class ArraySource(GroundSetSource):
+    """In-memory (n, d) array (jax device array or host numpy)."""
+
+    def __init__(self, data):
+        self._data = data
+        self.n, self.d = int(data.shape[0]), int(data.shape[1])
+        self.dtype = np.dtype(data.dtype)
+
+    def iter_chunks(self, chunk_rows: int = 8192):
+        for s in range(0, self.n, chunk_rows):
+            yield s, np.asarray(self._data[s:s + chunk_rows])
+
+    def gather(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        if isinstance(self._data, np.ndarray):
+            return self._data[idx]
+        return np.asarray(jnp.take(self._data, jnp.asarray(idx), axis=0))
+
+
+class ChunkedSource(GroundSetSource):
+    """Sequential host iterator source (no random access).
+
+    ``chunks_fn`` returns a *fresh* iterator of (rows,) chunks each call —
+    the stream is re-read once per gather, never held whole in memory.
+    """
+
+    def __init__(self, chunks_fn: Callable[[], Iterator[np.ndarray]],
+                 n: int, d: int, dtype=np.float32):
+        self._chunks_fn = chunks_fn
+        self.n, self.d = int(n), int(d)
+        self.dtype = np.dtype(dtype)
+
+    @classmethod
+    def from_array(cls, data, chunk_rows: int) -> "ChunkedSource":
+        """Test/bench helper: pretend an array is only chunk-streamable."""
+        arr = np.asarray(data)
+
+        def chunks():
+            for s in range(0, len(arr), chunk_rows):
+                yield arr[s:s + chunk_rows]
+
+        return cls(chunks, arr.shape[0], arr.shape[1], arr.dtype)
+
+    def iter_chunks(self, chunk_rows: int = 8192):
+        start = 0
+        for rows in self._chunks_fn():
+            rows = np.asarray(rows)
+            yield start, rows
+            start += len(rows)
+        assert start == self.n, f"chunk stream yielded {start} rows, n={self.n}"
+
+
+def as_source(data) -> GroundSetSource:
+    """Coerce an (n, d) array to an :class:`ArraySource`; pass sources through."""
+    if isinstance(data, GroundSetSource):
+        return data
+    return ArraySource(data)

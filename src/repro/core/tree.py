@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import partition as part_lib
 from repro.core.distributed import RoundResult, run_round, shard_round_inputs
+from repro.core.sources import ArraySource, GroundSetSource, as_source
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +73,16 @@ class TreeConfig:
 
 
 @dataclasses.dataclass
+class IngestStats:
+    """Round-0 streaming-ingestion accounting (footprint guard evidence)."""
+    wave_machines: int          # W — machines dispatched per wave
+    waves: int                  # number of waves in round 0
+    peak_wave_rows: int         # max candidate rows materialized per wave
+    peak_wave_bytes: int        # peak_wave_rows · d · itemsize
+    total_machines: int         # Mp — mesh-padded machine count of round 0
+
+
+@dataclasses.dataclass
 class TreeResult:
     sel_rows: np.ndarray        # (k, d) best solution rows (zero-padded)
     sel_mask: np.ndarray        # (k,)
@@ -80,6 +91,7 @@ class TreeResult:
     oracle_calls: int
     machines_per_round: list[int]
     round_values: list[float]   # best machine value per round
+    ingest: IngestStats | None = None   # set by the streaming round-0 path
 
 
 # ---------------------------------------------------------------------------
@@ -114,31 +126,41 @@ def _save_round(d: str, round_idx: int, rows, mask, best_rows, best_mask,
     os.replace(tmp, _ckpt_path(d))  # atomic — crash-safe
 
 
+def _round_plan(kalg, M: int, t: int, fail_machines, mesh):
+    """Mesh-padded machine count, per-machine PRNG keys, and failure mask
+    for one round.  The one-shot dispatch and the streaming wave loop both
+    consume this — their bit-identity depends on it staying one copy."""
+    ndev = mesh.devices.size if mesh is not None else 1
+    Mp = math.ceil(M / ndev) * ndev
+    keys = jax.random.split(kalg, Mp)
+    dead = np.zeros((Mp,), bool)
+    for mid in fail_machines.get(t, []):
+        if mid < Mp:
+            dead[mid] = True
+    return Mp, keys, dead
+
+
+def _dispatch_blocks(obj, blocks, bmask, keys, dead, cfg: TreeConfig,
+                     mesh) -> RoundResult:
+    """Shard and solve one contiguous slab of machine blocks (a full round
+    or one ingestion wave) with its pre-split keys and failure mask."""
+    if mesh is not None:
+        blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask, keys)
+    return run_round(obj, blocks, bmask, keys, k=cfg.k, alg=cfg.algorithm,
+                     eps=cfg.eps, dead_mask=jnp.asarray(dead), mesh=mesh)
+
+
 def _dispatch_round(obj, blocks, bmask, kalg, t, cfg: TreeConfig, mesh,
                     fail_machines) -> RoundResult:
     """Mesh-pad the machine axis, split keys, apply failure injection and
     solve one round.  Shared verbatim by the device-resident and legacy
-    host drivers — their bit-identity depends on this staying one copy."""
+    host drivers."""
     M = blocks.shape[0]
-    if mesh is not None:
-        ndev = mesh.devices.size
-        Mp = math.ceil(M / ndev) * ndev
-        if Mp != M:
-            blocks = jnp.pad(blocks, ((0, Mp - M), (0, 0), (0, 0)))
-            bmask = jnp.pad(bmask, ((0, Mp - M), (0, 0)))
-            M = Mp
-
-    keys = jax.random.split(kalg, M)
-    dead = np.zeros((M,), bool)
-    for mid in fail_machines.get(t, []):
-        if mid < M:
-            dead[mid] = True
-
-    if mesh is not None:
-        blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask, keys)
-
-    return run_round(obj, blocks, bmask, keys, k=cfg.k, alg=cfg.algorithm,
-                     eps=cfg.eps, dead_mask=jnp.asarray(dead), mesh=mesh)
+    Mp, keys, dead = _round_plan(kalg, M, t, fail_machines, mesh)
+    if Mp != M:
+        blocks = jnp.pad(blocks, ((0, Mp - M), (0, 0), (0, 0)))
+        bmask = jnp.pad(bmask, ((0, Mp - M), (0, 0)))
+    return _dispatch_blocks(obj, blocks, bmask, keys, dead, cfg, mesh)
 
 
 @jax.jit
@@ -155,26 +177,113 @@ def _fold_round(res_rows, res_mask, res_vals, res_calls,
     return best_rows, best_mask, best_val, total_calls, v_best
 
 
+def _fast_forward_key(key, start_round: int):
+    """Replay the per-round key-chain splits consumed before ``start_round``
+    so a resumed run partitions round t exactly like an uninterrupted one."""
+    for _ in range(start_round):
+        key, _, _ = jax.random.split(key, 3)
+    return key
+
+
+def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
+                   cfg: TreeConfig, mesh, fail_machines, wave_machines,
+                   best_rows, best_mask, best_val, total_calls):
+    """Wave-scheduled round-0 ingestion: capacity-bounded replacement for
+    ``gather_partition`` over an all-resident ground set.
+
+    The virtual-location permutation assigns every item a (machine, slot)
+    exactly as :func:`repro.core.partition.balanced_partition` does; machine
+    blocks are then filled from the source and dispatched in waves of
+    W = mesh-device multiples, folding each wave's solutions into the
+    running best via :func:`_fold_round`.  Peak device footprint is
+    O(W·μ·d) candidate rows instead of O(n·d); for the same seed the
+    per-machine blocks, PRNG keys, fold order, and the union A_1 are
+    bit-identical to the all-resident dispatch.
+    """
+    n, d, mu = source.n, source.d, cfg.capacity
+    ndev = mesh.devices.size if mesh is not None else 1
+    # the full round's plan (padded count, key split, failure injection),
+    # sliced per wave — machine i sees the same key and dead bit as in the
+    # one-shot dispatch.
+    Mp, keys, dead = _round_plan(kalg, L, 0, fail_machines, mesh)
+    W = wave_machines if wave_machines is not None else ndev
+    W = min(Mp, math.ceil(W / ndev) * ndev)  # waves are device multiples
+
+    # host-side virtual-location assignment: item index per (machine, slot).
+    part = part_lib.balanced_partition(kpart, n, L, cap=mu)
+    slot_item = _host_array(part.idx)                       # (L, cap) int32
+    if Mp != L:                                             # padded machines
+        slot_item = np.concatenate(
+            [slot_item, np.full((Mp - L, mu), -1, slot_item.dtype)])
+
+    sol_rows, sol_mask = [], []
+    v_round = jnp.float32(-jnp.inf)
+    peak_rows = 0
+    for w0 in range(0, Mp, W):
+        w1 = min(w0 + W, Mp)
+        idx_w = slot_item[w0:w1]                            # (Wb, cap)
+        rows = source.gather(np.maximum(idx_w, 0).reshape(-1))
+        blocks = jnp.asarray(rows, jnp.float32).reshape(w1 - w0, mu, d)
+        bmask = jnp.asarray(idx_w >= 0)
+        blocks = jnp.where(bmask[..., None], blocks, 0.0)
+        peak_rows = max(peak_rows, (w1 - w0) * mu)
+
+        res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1], dead[w0:w1],
+                               cfg, mesh)
+        # sequential strict-improvement fold over waves == the one-shot
+        # argmax over all Mp machines (lowest machine index on ties).
+        best_rows, best_mask, best_val, total_calls, v_wave = _fold_round(
+            res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
+            best_rows, best_mask, best_val, total_calls)
+        v_round = jnp.maximum(v_round, v_wave)
+        sol_rows.append(res.sol_rows)
+        sol_mask.append(res.sol_mask)
+
+    rows_in = jnp.concatenate(sol_rows).reshape(-1, d)      # union A_1
+    mask_in = jnp.concatenate(sol_mask).reshape(-1)
+    stats = IngestStats(
+        wave_machines=W, waves=math.ceil(Mp / W), peak_wave_rows=peak_rows,
+        peak_wave_bytes=peak_rows * d * 4, total_machines=Mp)
+    return (best_rows, best_mask, best_val, total_calls, v_round,
+            rows_in, mask_in, stats)
+
+
 def tree_maximize(
     obj,
-    data: jax.Array,            # (n, d) ground set V
+    data: jax.Array | GroundSetSource,  # (n, d) ground set V, array or source
     cfg: TreeConfig,
     *,
     mesh=None,
     fail_machines: dict[int, list[int]] | None = None,  # round -> dead ids
     host_rounds: bool = False,
+    wave_machines: int | None = None,   # streaming round-0 wave size W
 ) -> TreeResult:
     """Run Algorithm 1. With ``mesh``, machines shard over devices.
+
+    ``data`` may be an all-resident ``(n, d)`` array (legacy path, kept as
+    the equivalence reference) or any :class:`GroundSetSource`.  A source —
+    or an explicit ``wave_machines`` — selects streaming round-0 ingestion:
+    machine blocks are filled from the source and dispatched in waves of
+    W machines, so no more than W·μ candidate rows are ever device-resident
+    at once, with output bit-identical to the all-resident driver for the
+    same seed.  Rounds t ≥ 1 operate on A_t (≤ m_t·k rows) and are already
+    capacity-bounded.
 
     Default is the device-resident round loop; ``host_rounds=True`` selects
     the legacy NumPy-between-rounds driver (identical results, kept as the
     comparison baseline).
     """
+    streaming = isinstance(data, GroundSetSource) or wave_machines is not None
     if host_rounds:
+        if streaming:
+            raise ValueError("host_rounds=True supports only all-resident "
+                             "arrays; pass the streaming source to the "
+                             "default device driver")
         return _tree_maximize_host(obj, data, cfg, mesh=mesh,
                                    fail_machines=fail_machines)
 
-    n, d = data.shape
+    source = as_source(data) if streaming else None
+    n, d = (source.n, source.d) if streaming else data.shape
     mu, k = cfg.capacity, cfg.k
     key = jax.random.PRNGKey(cfg.seed)
     fail_machines = fail_machines or {}
@@ -198,10 +307,12 @@ def tree_maximize(
         best_val = jnp.float32(float(ck["best_val"]))
         total_calls = jnp.int32(int(ck["calls"]))
 
+    key = _fast_forward_key(key, start_round)
     machines_per_round: list[int] = []
     round_values: list[float] = []
     r_bound = cfg.round_bound_exact(n)
     t = start_round
+    ingest: IngestStats | None = None
 
     while True:
         key, kpart, kalg = jax.random.split(key, 3)
@@ -209,26 +320,35 @@ def tree_maximize(
             n_items = int(_host_scalar(jnp.sum(mask_in.astype(jnp.int32))))
         L = part_lib.n_parts(n_items, mu)
 
-        # ---- partition A_t into L balanced parts (virtual-location) ------
-        if t == 0:
-            part = part_lib.balanced_partition(kpart, n, L, cap=mu)
-            blocks, bmask = part_lib.gather_partition(data, part)
+        if t == 0 and streaming:
+            # ---- wave-scheduled ingestion: ≤ W·μ rows device-resident ----
+            machines_per_round.append(L)
+            (best_rows, best_mask, best_val, total_calls, v_best,
+             rows_in, mask_in, ingest) = _stream_round0(
+                obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
+                wave_machines, best_rows, best_mask, best_val, total_calls)
+            round_values.append(_host_scalar(v_best))
         else:
-            blocks, bmask = part_lib.repartition_rows(
-                rows_in, mask_in, kpart, L, mu)
+            # ---- partition A_t into L balanced parts (virtual-location) --
+            if t == 0:
+                part = part_lib.balanced_partition(kpart, n, L, cap=mu)
+                blocks, bmask = part_lib.gather_partition(data, part)
+            else:
+                blocks, bmask = part_lib.repartition_rows(
+                    rows_in, mask_in, kpart, L, mu)
 
-        machines_per_round.append(blocks.shape[0])
-        res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
-                              fail_machines)
+            machines_per_round.append(blocks.shape[0])
+            res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
+                                  fail_machines)
 
-        best_rows, best_mask, best_val, total_calls, v_best = _fold_round(
-            res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
-            best_rows, best_mask, best_val, total_calls)
-        round_values.append(_host_scalar(v_best))
+            best_rows, best_mask, best_val, total_calls, v_best = _fold_round(
+                res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
+                best_rows, best_mask, best_val, total_calls)
+            round_values.append(_host_scalar(v_best))
 
-        # ---- union of partial solutions = next A (stays on device) -------
-        rows_in = res.sol_rows.reshape(-1, d)
-        mask_in = res.sol_mask.reshape(-1)
+            # ---- union of partial solutions = next A (stays on device) ---
+            rows_in = res.sol_rows.reshape(-1, d)
+            mask_in = res.sol_mask.reshape(-1)
         t += 1
 
         if cfg.checkpoint_dir:
@@ -246,7 +366,8 @@ def tree_maximize(
         sel_rows=_host_array(best_rows), sel_mask=_host_array(best_mask),
         value=_host_scalar(best_val), rounds=t,
         oracle_calls=int(_host_scalar(total_calls)),
-        machines_per_round=machines_per_round, round_values=round_values)
+        machines_per_round=machines_per_round, round_values=round_values,
+        ingest=ingest)
 
 
 # ---------------------------------------------------------------------------
@@ -284,6 +405,7 @@ def _tree_maximize_host(
         best_val = float(ck["best_val"])
         total_calls = int(ck["calls"])
 
+    key = _fast_forward_key(key, start_round)
     machines_per_round: list[int] = []
     round_values: list[float] = []
     r_bound = cfg.round_bound_exact(n)

@@ -1,1 +1,5 @@
 """data subpackage."""
+from repro.data.sources import (ShardedSource, lm_embedding_source,
+                                synthetic_sharded_source)
+
+__all__ = ["ShardedSource", "lm_embedding_source", "synthetic_sharded_source"]

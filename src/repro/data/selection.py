@@ -7,6 +7,11 @@ device mesh.  This is the production shape of the paper inside an LM
 framework: coreset/mixture selection for pretraining where no single host
 can hold all candidate summaries (capacity μ fixed while n grows).
 
+The candidate pool may be an all-resident (n, d) feature matrix or any
+:class:`repro.core.GroundSetSource` (chunked host stream, pipeline-backed
+shards) — sources run through the streaming wave-scheduled ingestion, so
+neither host nor device ever materializes the full pool.
+
 `embed_fn` defaults to mean-pooled model token embeddings — cheap, already
 sharded — but any (n, d) feature matrix works.
 """
@@ -19,7 +24,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExemplarClustering, TreeConfig, tree_maximize
+from repro.core import (ExemplarClustering, GroundSetSource, TreeConfig,
+                        as_source, tree_maximize)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,27 +44,56 @@ def mean_pool_embeddings(params, tokens: jax.Array) -> jax.Array:
     return jnp.mean(emb[tokens], axis=1)
 
 
-def select_coreset(features: jax.Array, sel_cfg: SelectionConfig,
-                   mesh=None):
+def match_rows(pool, rows, chunk_rows: int = 8192) -> np.ndarray:
+    """Nearest-row (squared L2) pool index for each of ``rows``.
+
+    Vectorized, chunked replacement for the per-row Python scan: each pool
+    chunk scores all query rows in one device op, and the running strict-<
+    merge keeps the lowest pool index on exact ties — the same answer as a
+    full argmin per row.  ``pool`` may be an array or any source; memory is
+    O(chunk·d) regardless of n.
+    """
+    rows = jnp.asarray(rows)
+    r = int(rows.shape[0])
+    if r == 0:
+        return np.zeros((0,), np.int64)
+    d = int(rows.shape[1])
+    # keep the (chunk, r, d) difference tensor bounded
+    chunk_rows = max(1, min(chunk_rows, (1 << 24) // max(1, r * d)))
+    best_d = np.full((r,), np.inf, np.float32)
+    best_i = np.zeros((r,), np.int64)
+    for start, block in as_source(pool).iter_chunks(chunk_rows):
+        for s in range(0, len(block), chunk_rows):   # sources pick chunk size
+            sub = jnp.asarray(block[s:s + chunk_rows])
+            d2 = jnp.sum((sub[:, None, :] - rows[None, :, :]) ** 2, axis=-1)
+            cd, ci = np.asarray(jnp.min(d2, 0)), np.asarray(jnp.argmin(d2, 0))
+            better = cd < best_d                     # strict: first chunk wins
+            best_d = np.where(better, cd, best_d)
+            best_i = np.where(better, ci + start + s, best_i)
+    return best_i
+
+
+def select_coreset(features, sel_cfg: SelectionConfig, mesh=None,
+                   wave_machines: int | None = None):
     """Run distributed TREE over example features. Returns (indices, result).
 
-    Index recovery: TREE returns selected *rows*; we map rows back to pool
-    indices by nearest-exact match (rows are copied verbatim through rounds).
+    ``features`` is an (n, d) array (all-resident reference path) or a
+    :class:`GroundSetSource` (streaming wave ingestion).  Index recovery:
+    TREE returns selected *rows*; we map rows back to pool indices by
+    nearest-exact match (rows are copied verbatim through rounds).
     """
-    n = features.shape[0]
+    streaming = isinstance(features, GroundSetSource) or wave_machines is not None
+    source = as_source(features)
+    n = source.n
     key = jax.random.PRNGKey(sel_cfg.seed)
     ev_idx = jax.random.choice(key, n, (min(sel_cfg.n_eval, n),),
                                replace=False)
-    obj = ExemplarClustering(features[ev_idx])
+    obj = ExemplarClustering(jnp.asarray(source.gather(np.asarray(ev_idx))))
     cfg = TreeConfig(k=sel_cfg.k, capacity=sel_cfg.capacity,
                      algorithm=sel_cfg.algorithm, eps=sel_cfg.eps,
                      seed=sel_cfg.seed)
-    res = tree_maximize(obj, features, cfg, mesh=mesh)
+    res = tree_maximize(obj, source if streaming else features, cfg,
+                        mesh=mesh, wave_machines=wave_machines)
 
     rows = res.sel_rows[res.sel_mask]
-    feats = np.asarray(features)
-    idx = []
-    for r in rows:
-        d2 = np.sum((feats - r[None, :]) ** 2, axis=1)
-        idx.append(int(np.argmin(d2)))
-    return np.asarray(idx), res
+    return match_rows(source, rows), res

@@ -1,0 +1,107 @@
+"""Sharded / pipeline-backed ground-set sources.
+
+Production shape of streaming ingestion: the candidate pool lives as
+shards (files, column groups, pipeline batches), each reachable through a
+lazy loader.  A gather only invokes the loaders whose shard intersects the
+requested indices, so host memory stays O(shard + request) while n is
+unbounded.  :func:`synthetic_sharded_source` and
+:func:`lm_embedding_source` are deterministic pipeline-backed instances
+used by the scaling benchmark and the selection stage.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.core.sources import GroundSetSource
+
+
+class ShardedSource(GroundSetSource):
+    """Ground set split into shards with per-shard lazy loaders.
+
+    ``loaders[i]()`` returns shard i as a ``(shard_sizes[i], d)`` host
+    array; nothing is loaded until a chunk iteration or gather needs it.
+    """
+
+    def __init__(self, loaders: Sequence[Callable[[], np.ndarray]],
+                 shard_sizes: Sequence[int], d: int, dtype=np.float32):
+        assert len(loaders) == len(shard_sizes)
+        self._loaders = list(loaders)
+        self._sizes = [int(s) for s in shard_sizes]
+        self._starts = np.concatenate([[0], np.cumsum(self._sizes)])
+        self.n = int(self._starts[-1])
+        self.d = int(d)
+        self.dtype = np.dtype(dtype)
+
+    @classmethod
+    def from_arrays(cls, arrays: Sequence[np.ndarray]) -> "ShardedSource":
+        arrays = [np.asarray(a) for a in arrays]
+        return cls([(lambda a=a: a) for a in arrays],
+                   [len(a) for a in arrays], arrays[0].shape[1],
+                   arrays[0].dtype)
+
+    def iter_chunks(self, chunk_rows: int = 8192):
+        for i, load in enumerate(self._loaders):
+            rows = np.asarray(load())
+            assert len(rows) == self._sizes[i], (i, len(rows), self._sizes[i])
+            yield int(self._starts[i]), rows
+
+    def gather(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        out = np.zeros((idx.size, self.d), self.dtype)
+        shard_of = np.searchsorted(self._starts, idx, side="right") - 1
+        for i in np.unique(shard_of):                 # only shards with hits
+            hit = shard_of == i
+            rows = np.asarray(self._loaders[i]())
+            out[hit] = rows[idx[hit] - self._starts[i]]
+        return out
+
+
+def synthetic_sharded_source(n: int, d: int, shard_rows: int = 50_000,
+                             seed: int = 0, n_clusters: int = 20,
+                             spread: float = 0.3) -> ShardedSource:
+    """Deterministic clustered point-cloud source generated shard-by-shard.
+
+    Each shard is a pure function of (seed, shard index) — the benchmark's
+    stand-in for a pipeline read; no host buffer ever holds all n rows.
+    """
+    centers = np.random.default_rng(seed).standard_normal(
+        (n_clusters, d)).astype(np.float32)
+
+    def make_loader(i: int, rows: int):
+        def load():
+            r = np.random.default_rng((seed, i))
+            assign = r.integers(0, n_clusters, rows)
+            return (centers[assign] + spread * r.standard_normal(
+                (rows, d)).astype(np.float32))
+        return load
+
+    sizes = [min(shard_rows, n - s) for s in range(0, n, shard_rows)]
+    return ShardedSource([make_loader(i, sz) for i, sz in enumerate(sizes)],
+                         sizes, d)
+
+
+def lm_embedding_source(params, dcfg, n_batches: int,
+                        embed_fn=None) -> ShardedSource:
+    """Pipeline-backed feature source: shard b = pooled embeddings of the
+    deterministic LM batch b (``repro.data.pipeline.SyntheticLM``).
+
+    The selection stage can run TREE over arbitrarily many batches of
+    candidate examples without ever materializing the full feature matrix.
+    """
+    from repro.data.pipeline import SyntheticLM
+
+    if embed_fn is None:
+        from repro.data.selection import mean_pool_embeddings
+        embed_fn = mean_pool_embeddings
+    stream = SyntheticLM(dcfg)
+
+    def make_loader(b: int):
+        def load():
+            return np.asarray(embed_fn(params, stream.batch(b)["tokens"]),
+                              np.float32)
+        return load
+
+    return ShardedSource([make_loader(b) for b in range(n_batches)],
+                         [dcfg.global_batch] * n_batches, dcfg.d_model)

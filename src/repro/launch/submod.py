@@ -3,10 +3,17 @@
     PYTHONPATH=src python -m repro.launch.submod \
         --dataset csn-20k --k 50 --capacity 400 \
         [--algorithm greedy|stochastic_greedy|threshold_greedy] \
+        [--source resident|chunked|sharded] [--wave-machines W] \
         [--ckpt-dir DIR --resume] [--fail round:ids]
 
 Runs TREE-BASED COMPRESSION over all visible devices (machines sharded via
 shard_map), reports value vs centralized greedy + rounds + oracle calls.
+
+``--source chunked|sharded`` (or an explicit ``--wave-machines``) selects
+streaming round-0 ingestion: the ground set is read through a
+GroundSetSource and dispatched in capacity-bounded waves, so the device
+footprint is O(W·μ·d) instead of O(n·d) — output bit-identical to the
+resident path for the same seed.
 """
 from __future__ import annotations
 
@@ -16,9 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ExemplarClustering, TreeConfig, centralized_greedy,
-                        make_submod_mesh, tree_maximize)
+from repro.core import (ChunkedSource, ExemplarClustering, TreeConfig,
+                        centralized_greedy, make_submod_mesh, tree_maximize)
 from repro.data import datasets
+from repro.data.sources import ShardedSource
 
 
 def main():
@@ -31,6 +39,14 @@ def main():
     ap.add_argument("--eps", type=float, default=0.5)
     ap.add_argument("--n-eval", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--source", default="resident",
+                    choices=("resident", "chunked", "sharded"),
+                    help="ground-set access path; non-resident streams "
+                         "round 0 in capacity-bounded waves")
+    ap.add_argument("--wave-machines", type=int, default=None,
+                    help="streaming wave size W (default: one mesh sweep)")
+    ap.add_argument("--chunk-rows", type=int, default=4096,
+                    help="rows per chunk/shard for --source chunked|sharded")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail", default=None,
@@ -49,16 +65,33 @@ def main():
         rd, ids = args.fail.split(":")
         fail = {int(rd): [int(i) for i in ids.split(",")]}
 
+    if args.source == "chunked":
+        ground = ChunkedSource.from_array(data, args.chunk_rows)
+    elif args.source == "sharded":
+        shards = [data[s:s + args.chunk_rows]
+                  for s in range(0, len(data), args.chunk_rows)]
+        ground = ShardedSource.from_arrays(shards)
+    else:
+        ground = dj
+
     mesh = make_submod_mesh()
     print(f"n={len(data)} d={data.shape[1]} k={args.k} mu={args.capacity} "
-          f"devices={mesh.devices.size} alg={args.algorithm}")
+          f"devices={mesh.devices.size} alg={args.algorithm} "
+          f"source={args.source}")
     cfg = TreeConfig(k=args.k, capacity=args.capacity,
                      algorithm=args.algorithm, eps=args.eps, seed=args.seed,
                      checkpoint_dir=args.ckpt_dir, resume=args.resume)
-    res = tree_maximize(obj, dj, cfg, mesh=mesh, fail_machines=fail)
+    res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
+                        wave_machines=args.wave_machines)
     print(f"TREE: f={res.value:.6f} rounds={res.rounds} "
           f"machines/round={res.machines_per_round} "
           f"oracle_calls={res.oracle_calls}")
+    if res.ingest is not None:
+        ing = res.ingest
+        print(f"ingest: W={ing.wave_machines} waves={ing.waves} "
+              f"peak_wave_rows={ing.peak_wave_rows} "
+              f"peak_wave_bytes={ing.peak_wave_bytes} "
+              f"(resident would hold {len(data) * data.shape[1] * 4} bytes)")
     if not args.no_centralized:
         cg = centralized_greedy(obj, dj, args.k)
         print(f"centralized greedy: f={float(cg.value):.6f} "

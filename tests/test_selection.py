@@ -3,9 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import ExemplarClustering, random_subset
-from repro.data.selection import (SelectionConfig, mean_pool_embeddings,
-                                  select_coreset)
+from repro.core import ChunkedSource, ExemplarClustering, random_subset
+from repro.data.selection import (SelectionConfig, match_rows,
+                                  mean_pool_embeddings, select_coreset)
+from repro.data.sources import lm_embedding_source
 
 
 def test_select_coreset_valid_and_better_than_random():
@@ -26,6 +27,67 @@ def test_select_coreset_valid_and_better_than_random():
     val_sel = float(obj.evaluate(feats[jnp.asarray(idx)],
                                  jnp.ones((10,), bool)))
     assert val_sel > float(rnd.value)
+
+
+def _match_rows_reference(feats: np.ndarray, rows: np.ndarray) -> np.ndarray:
+    """The replaced O(k·n) per-row Python loop, kept as the oracle."""
+    idx = []
+    for r in rows:
+        d2 = np.sum((feats - r[None, :]) ** 2, axis=1)
+        idx.append(int(np.argmin(d2)))
+    return np.asarray(idx)
+
+
+def test_match_rows_indices_unchanged_vs_reference_loop():
+    rng = np.random.default_rng(3)
+    feats = rng.standard_normal((1500, 24)).astype(np.float32)
+    feats[700] = feats[20]            # duplicate rows → exact tie at d2 == 0
+    feats[1200] = feats[20]
+    queries = feats[[20, 5, 1499, 700, 42]]   # dup queries hit the tie path
+    ref = _match_rows_reference(feats, queries)
+    got = match_rows(feats, queries)
+    np.testing.assert_array_equal(got, ref)
+    assert got[0] == 20 and got[3] == 20      # lowest index wins the tie
+    # tiny chunks exercise the cross-chunk merge
+    np.testing.assert_array_equal(match_rows(feats, queries, chunk_rows=7), ref)
+    # and a chunk-streamed pool recovers the same indices
+    np.testing.assert_array_equal(
+        match_rows(ChunkedSource.from_array(feats, 111), queries), ref)
+
+
+def test_select_coreset_streaming_source_matches_array():
+    rng = np.random.default_rng(1)
+    centers = rng.standard_normal((8, 12)).astype(np.float32) * 3
+    feats = (centers[rng.integers(0, 8, 600)]
+             + 0.3 * rng.standard_normal((600, 12)).astype(np.float32))
+    sel_cfg = SelectionConfig(k=8, capacity=90, n_eval=128, seed=0)
+    idx_arr, res_arr = select_coreset(jnp.asarray(feats), sel_cfg)
+    idx_src, res_src = select_coreset(ChunkedSource.from_array(feats, 77),
+                                      sel_cfg, wave_machines=3)
+    np.testing.assert_array_equal(idx_arr, idx_src)
+    assert res_arr.value == res_src.value
+    assert res_src.ingest.peak_wave_rows <= 3 * sel_cfg.capacity
+
+
+def test_lm_embedding_source_feeds_selection():
+    from repro.data.pipeline import DataConfig
+
+    dcfg = DataConfig(vocab_size=64, seq_len=16, global_batch=32, seed=0,
+                      d_model=8)
+    params = {"emb": jax.random.normal(jax.random.PRNGKey(0), (64, 8))}
+    src = lm_embedding_source(params, dcfg, n_batches=10)
+    assert (src.n, src.d) == (320, 8)
+    ref = np.asarray(mean_pool_embeddings(
+        params, jnp.asarray(np.concatenate(
+            [np.asarray(b) for b in
+             [__import__("repro.data.pipeline", fromlist=["SyntheticLM"])
+              .SyntheticLM(dcfg).batch(i)["tokens"] for i in range(10)]]))),
+        np.float32)
+    np.testing.assert_allclose(src.materialize(), ref, rtol=1e-6)
+    idx, res = select_coreset(src, SelectionConfig(k=5, capacity=60,
+                                                   n_eval=64, seed=0))
+    assert len(idx) == 5 and idx.max() < 320
+    assert res.ingest is not None
 
 
 def test_mean_pool_embeddings_shape():

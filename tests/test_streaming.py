@@ -1,0 +1,158 @@
+"""Streaming ground-set engine: wave-scheduled round-0 ingestion must be
+bit-identical to the all-resident driver, with device footprint bounded by
+W·μ candidate rows (the paper's fixed-capacity premise)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ArraySource, ChunkedSource, ExemplarClustering,
+                        TreeConfig, WeightedCoverage, tree_maximize)
+from repro.core import tree as tree_lib
+from repro.data.sources import ShardedSource, synthetic_sharded_source
+
+
+def _setup(n=601, d=8, ne=128, seed=0):
+    r = np.random.default_rng(seed)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    E = data[r.choice(n, ne, replace=False)]
+    return data, ExemplarClustering(jnp.asarray(E))
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.sel_rows, b.sel_rows)
+    np.testing.assert_array_equal(a.sel_mask, b.sel_mask)
+    assert a.value == b.value                      # bit-identical, no rtol
+    assert a.oracle_calls == b.oracle_calls
+    assert a.rounds == b.rounds
+    assert a.machines_per_round == b.machines_per_round
+    assert a.round_values == b.round_values
+
+
+@pytest.mark.parametrize("wave", [1, 3, 7])
+def test_wave_sizes_bit_identical_to_resident(wave):
+    data, obj = _setup()
+    cfg = TreeConfig(k=8, capacity=60, seed=3)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    streamed = tree_maximize(obj, ArraySource(jnp.asarray(data)), cfg,
+                             wave_machines=wave)
+    _assert_identical(resident, streamed)
+    assert streamed.ingest is not None and resident.ingest is None
+    assert streamed.ingest.peak_wave_rows <= wave * cfg.capacity
+
+
+@pytest.mark.parametrize("make_source", [
+    lambda d: ChunkedSource.from_array(d, 97),
+    lambda d: ShardedSource.from_arrays([d[s:s + 130]
+                                         for s in range(0, len(d), 130)]),
+], ids=["chunked", "sharded"])
+def test_source_kinds_bit_identical(make_source):
+    data, obj = _setup(seed=1)
+    cfg = TreeConfig(k=8, capacity=60, seed=5)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    streamed = tree_maximize(obj, make_source(data), cfg, wave_machines=4)
+    _assert_identical(resident, streamed)
+
+
+@pytest.mark.parametrize("alg", ["greedy", "threshold_greedy"])
+@pytest.mark.parametrize("objective", ["exemplar", "coverage"])
+def test_objectives_algorithms_matrix(alg, objective):
+    if objective == "exemplar":
+        data, obj = _setup(n=450, seed=2)
+    else:
+        r = np.random.default_rng(7)
+        data = (r.random((450, 24)) < 0.25).astype(np.float32)
+        obj = WeightedCoverage(jnp.asarray(r.random(24).astype(np.float32)))
+    cfg = TreeConfig(k=6, capacity=50, seed=4, algorithm=alg, eps=0.3)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    streamed = tree_maximize(obj, ChunkedSource.from_array(data, 64), cfg,
+                             wave_machines=3)
+    _assert_identical(resident, streamed)
+
+
+def test_stochastic_greedy_streaming_identity():
+    data, obj = _setup(seed=8)
+    cfg = TreeConfig(k=8, capacity=60, seed=6, algorithm="stochastic_greedy",
+                     eps=0.2)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    streamed = tree_maximize(obj, ArraySource(data), cfg, wave_machines=2)
+    _assert_identical(resident, streamed)
+
+
+def test_failure_injection_streaming_identity():
+    data, obj = _setup(seed=9)
+    cfg = TreeConfig(k=8, capacity=60, seed=7)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg,
+                             fail_machines={0: [0, 2], 1: [1]})
+    streamed = tree_maximize(obj, ChunkedSource.from_array(data, 128), cfg,
+                             wave_machines=2, fail_machines={0: [0, 2], 1: [1]})
+    _assert_identical(resident, streamed)
+
+
+def test_footprint_guard_wave_never_exceeds_W_mu(monkeypatch):
+    """The ingestion waves must never materialize more than W·μ candidate
+    rows on device — checked at the actual round-dispatch boundary."""
+    data, obj = _setup(n=900, seed=3)
+    mu, W = 60, 2
+    cfg = TreeConfig(k=8, capacity=mu, seed=1)
+    shapes = []
+    real_run_round = tree_lib.run_round
+
+    def spy(obj_, blocks, bmask, keys, **kw):
+        shapes.append(tuple(blocks.shape))
+        return real_run_round(obj_, blocks, bmask, keys, **kw)
+
+    monkeypatch.setattr(tree_lib, "run_round", spy)
+    res = tree_maximize(obj, ChunkedSource.from_array(data, 128), cfg,
+                        wave_machines=W)
+    n_waves = res.ingest.waves
+    ingest_shapes = shapes[:n_waves]          # round-0 wave dispatches
+    assert ingest_shapes, "no ingestion waves recorded"
+    for M, cap, d in ingest_shapes:
+        assert M * cap <= W * mu, (M, cap)
+    # every dispatch (any round) stays far below the resident ground set
+    assert max(M * cap for M, cap, _ in shapes) < len(data)
+    assert res.ingest.peak_wave_rows == max(M * cap for M, cap, _ in ingest_shapes)
+    assert res.ingest.peak_wave_bytes == res.ingest.peak_wave_rows * data.shape[1] * 4
+
+
+def test_synthetic_sharded_source_streams_and_matches_materialized():
+    src = synthetic_sharded_source(n=700, d=6, shard_rows=150, seed=5)
+    assert src.n == 700 and src.d == 6
+    full = src.materialize()
+    assert full.shape == (700, 6)
+    idx = np.asarray([0, 149, 150, 699, 3])
+    np.testing.assert_array_equal(src.gather(idx), full[idx])
+    obj = ExemplarClustering(jnp.asarray(full[:96]))
+    cfg = TreeConfig(k=5, capacity=70, seed=2)
+    resident = tree_maximize(obj, jnp.asarray(full), cfg)
+    streamed = tree_maximize(obj, src, cfg, wave_machines=3)
+    _assert_identical(resident, streamed)
+
+
+def test_mesh_streaming_identity():
+    data, obj = _setup(seed=4)
+    from repro.core import make_submod_mesh
+    mesh = make_submod_mesh()
+    cfg = TreeConfig(k=8, capacity=60, seed=2)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg, mesh=mesh)
+    streamed = tree_maximize(obj, ChunkedSource.from_array(data, 100), cfg,
+                             mesh=mesh, wave_machines=mesh.devices.size)
+    _assert_identical(resident, streamed)
+
+
+def test_host_rounds_rejects_sources():
+    data, obj = _setup()
+    with pytest.raises(ValueError):
+        tree_maximize(obj, ArraySource(data), TreeConfig(k=8, capacity=60),
+                      host_rounds=True)
+
+
+def test_single_machine_ground_set_streams():
+    """μ ≥ n: one machine, one wave, still exact."""
+    data, obj = _setup(n=80, ne=48)
+    cfg = TreeConfig(k=8, capacity=100, seed=0)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    streamed = tree_maximize(obj, ChunkedSource.from_array(data, 33), cfg)
+    _assert_identical(resident, streamed)
+    assert streamed.rounds == 1 and streamed.ingest.waves == 1

@@ -107,6 +107,47 @@ def test_checkpoint_restart_resumes_not_restarts():
         assert resumed.machines_per_round[0] == 1  # resumed set fits 1 machine
 
 
+@pytest.mark.parametrize("host_rounds", [False, True],
+                         ids=["device", "host"])
+def test_resume_bit_identical_to_uninterrupted(host_rounds, monkeypatch):
+    """A run killed after its round-1 checkpoint and resumed must finish
+    bit-identically to the uninterrupted run: the resumed driver fast-forwards
+    the PRNG key chain to start_round, so round t partitions exactly as it
+    would have (previously both drivers re-split from round 0 and diverged)."""
+    from repro.core import tree as tree_lib
+
+    data, obj = _setup(n=700, seed=9)
+    mk = lambda **kw: TreeConfig(k=8, capacity=60, seed=9, **kw)
+    uninterrupted = tree_maximize(obj, data, mk(), host_rounds=host_rounds)
+    assert uninterrupted.rounds >= 3   # needs rounds beyond the crash point
+
+    with tempfile.TemporaryDirectory() as td:
+        real_save = tree_lib._save_round
+
+        def crash_after_round_1(d, round_idx, *a):
+            real_save(d, round_idx, *a)
+            if round_idx == 1:
+                raise KeyboardInterrupt("simulated crash")
+
+        monkeypatch.setattr(tree_lib, "_save_round", crash_after_round_1)
+        with pytest.raises(KeyboardInterrupt):
+            tree_maximize(obj, data, mk(checkpoint_dir=td),
+                          host_rounds=host_rounds)
+        monkeypatch.setattr(tree_lib, "_save_round", real_save)
+
+        resumed = tree_maximize(obj, data, mk(checkpoint_dir=td, resume=True),
+                                host_rounds=host_rounds)
+
+    np.testing.assert_array_equal(resumed.sel_rows, uninterrupted.sel_rows)
+    np.testing.assert_array_equal(resumed.sel_mask, uninterrupted.sel_mask)
+    assert resumed.value == uninterrupted.value
+    assert resumed.oracle_calls == uninterrupted.oracle_calls
+    assert resumed.rounds == uninterrupted.rounds
+    # resumed run replays rounds 1.. only; its per-round logs are the tail
+    assert resumed.machines_per_round == uninterrupted.machines_per_round[1:]
+    assert resumed.round_values == uninterrupted.round_values[1:]
+
+
 def test_mesh_equals_serial():
     data, obj = _setup(n=400, seed=6)
     cfg = TreeConfig(k=8, capacity=50, seed=6)
