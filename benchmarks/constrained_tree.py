@@ -1,0 +1,169 @@
+"""Constrained streaming-tree sweep (PR 3): hereditary constraint classes
+through the wave-scheduled pipeline, with honest constrained baselines.
+
+For each constraint class (none / knapsack / partition-matroid / their
+intersection) the sweep runs TREE over a pipeline-backed sharded source
+whose per-item attributes (weight, group id) are generated shard-by-shard
+alongside the rows, and records:
+
+  * solution value, rounds, oracle calls, wall clock,
+  * the measured wave footprint *including the attribute columns*
+    (guard-asserted against the W·μ·(d+a) model and the PR-2 device byte
+    budget),
+  * an independent pure-NumPy feasibility verdict on the returned coreset,
+  * a chunked-partition RandGreedI baseline under the *same* constraint,
+  * a small-shape bit-identity probe (streaming vs all-resident) per class,
+    plus one Feistel-permutation probe (O(1)-state slot cipher vs the
+    materialized dense scheme's invariants).
+
+Record lands in ``BENCH_PR3.json`` via ``benchmarks/run.py --only
+constrained``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import (ExemplarClustering, Intersection, Knapsack,
+                        PartitionMatroid, TreeConfig, check_feasible,
+                        randgreedi, tree_maximize)
+from repro.data.sources import synthetic_sharded_source
+
+DEVICE_ROW_BUDGET_BYTES = 4 * 1024 * 1024   # 4 MiB of fp32 candidate rows
+N_GROUPS = 8
+
+
+def _attr_gen(r, rows: int) -> np.ndarray:
+    w = r.uniform(0.2, 1.0, rows).astype(np.float32)
+    g = r.integers(0, N_GROUPS, rows).astype(np.float32)
+    return np.stack([w, g], axis=1)
+
+
+def _constraints(k: int):
+    # budgets sized so the constraint binds (E[w]·k ≈ 0.6k > budget)
+    return {
+        "none": None,
+        "knapsack": Knapsack(budget=0.35 * k, col=0),
+        "partition": PartitionMatroid(caps=(max(1, k // N_GROUPS),) * N_GROUPS,
+                                      col=1),
+        "intersection": Intersection((
+            Knapsack(budget=0.45 * k, col=0),
+            PartitionMatroid(caps=(max(1, k // 4),) * N_GROUPS, col=1))),
+    }
+
+
+def _probe_bit_identity(name: str, cons, k: int, mu: int, wave: int) -> dict:
+    """Small-shape: streaming == resident under this constraint, bit for bit."""
+    src = synthetic_sharded_source(n=8_000, d=12, shard_rows=2_048, seed=3,
+                                   attr_gen=_attr_gen, a=2)
+    data = src.materialize()
+    attrs = src.materialize_attrs()
+    obj = ExemplarClustering(jnp.asarray(data[:192]))
+    cfg = TreeConfig(k=k, capacity=mu, seed=1)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg, constraint=cons,
+                             attrs=attrs if cons is not None else None)
+    streamed = tree_maximize(obj, src, cfg, wave_machines=wave,
+                             constraint=cons)
+    assert streamed.value == resident.value, (name, streamed.value,
+                                              resident.value)
+    assert np.array_equal(streamed.sel_rows, resident.sel_rows)
+    assert streamed.oracle_calls == resident.oracle_calls
+    if cons is not None:
+        assert np.array_equal(streamed.sel_attrs, resident.sel_attrs)
+        ok, detail = check_feasible(cons, streamed.sel_attrs,
+                                    streamed.sel_mask)
+        assert ok, (name, detail)
+    return {"n": 8_000, "value": float(resident.value), "bit_identical": True}
+
+
+def _probe_feistel(k: int, mu: int, wave: int) -> dict:
+    """O(1)-state slot cipher: streaming == resident, same constraint."""
+    src = synthetic_sharded_source(n=8_000, d=12, shard_rows=2_048, seed=4,
+                                   attr_gen=_attr_gen, a=2)
+    data = src.materialize()
+    attrs = src.materialize_attrs()
+    obj = ExemplarClustering(jnp.asarray(data[:192]))
+    cons = Knapsack(budget=0.35 * k, col=0)
+    cfg = TreeConfig(k=k, capacity=mu, seed=2, permutation="feistel")
+    resident = tree_maximize(obj, jnp.asarray(data), cfg,
+                             constraint=cons, attrs=attrs)
+    streamed = tree_maximize(obj, src, cfg, wave_machines=wave,
+                             constraint=cons)
+    assert streamed.value == resident.value
+    assert np.array_equal(streamed.sel_rows, resident.sel_rows)
+    return {"n": 8_000, "value": float(resident.value), "bit_identical": True}
+
+
+def run(quick: bool = True):
+    n = 80_000 if quick else 400_000
+    d, k, mu, wave = 16, 16, 500, 8
+    src = synthetic_sharded_source(n=n, d=d, shard_rows=10_000, seed=0,
+                                   attr_gen=_attr_gen, a=2)
+    rng = np.random.default_rng(0)
+    ev = src.gather(rng.choice(n, 256, replace=False))
+    obj = ExemplarClustering(jnp.asarray(ev))
+
+    suites = {}
+    print("constrained,class,n,value,rounds,oracle_calls,peak_wave_bytes,"
+          "feasible,randgreedi_value,sec")
+    for name, cons in _constraints(k).items():
+        cfg = TreeConfig(k=k, capacity=mu, seed=0)
+        with Timer() as t:
+            res = tree_maximize(obj, src, cfg, wave_machines=wave,
+                                constraint=cons)
+        ing = res.ingest
+        a = ing.attr_dim
+        # footprint guard: waves must respect the W·μ·(d+a) model and stay
+        # inside the device budget the resident ground set cannot fit.
+        assert ing.peak_wave_rows <= wave * mu
+        assert ing.peak_wave_bytes == ing.peak_wave_rows * (d + a) * 4
+        assert ing.peak_wave_bytes <= DEVICE_ROW_BUDGET_BYTES
+        assert n * (d + a) * 4 > DEVICE_ROW_BUDGET_BYTES, (
+            "sweep shape no longer exceeds the device budget — grow n")
+
+        ok, detail = check_feasible(cons, res.sel_attrs
+                                    if a else np.zeros((k, 0)), res.sel_mask)
+        assert ok, (name, detail)
+
+        with Timer() as tb:
+            rg = randgreedi(obj, src, k, m=-(-n // mu),
+                            key=jax.random.PRNGKey(0), constraint=cons,
+                            machine_chunk=wave)
+        if cons is not None:
+            ok_b, detail_b = check_feasible(cons, np.asarray(rg.sel_attrs),
+                                            np.asarray(rg.sel_mask))
+            assert ok_b, (name, detail_b)
+
+        probe = _probe_bit_identity(name, cons, k=8, mu=250, wave=4)
+        print(f"constrained,{name},{n},{res.value:.6f},{res.rounds},"
+              f"{res.oracle_calls},{ing.peak_wave_bytes},{ok},"
+              f"{float(rg.value):.6f},{t.s:.1f}")
+        suites[name] = {
+            "value": float(res.value), "rounds": res.rounds,
+            "oracle_calls": res.oracle_calls,
+            "waves": ing.waves, "attr_dim": a,
+            "peak_wave_rows": ing.peak_wave_rows,
+            "peak_wave_bytes": ing.peak_wave_bytes,
+            "feasible": ok, "feasibility_detail": detail,
+            "randgreedi_value": float(rg.value),
+            "tree_vs_randgreedi": float(res.value) / float(rg.value),
+            "seconds": round(t.s, 1), "baseline_seconds": round(tb.s, 1),
+            "equivalence_probe": probe,
+        }
+
+    feistel = _probe_feistel(k=8, mu=250, wave=4)
+    print("constrained,feistel-probe,bit_identical=True")
+
+    return {
+        "shape": {"n": n, "d": d, "k": k, "mu": mu, "wave_machines": wave,
+                  "attr_dim": 2, "n_groups": N_GROUPS},
+        "device_row_budget_bytes": DEVICE_ROW_BUDGET_BYTES,
+        "classes": suites,
+        "feistel_probe": feistel,
+    }
+
+
+if __name__ == "__main__":
+    run()

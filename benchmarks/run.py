@@ -8,10 +8,12 @@
   ft       — failure/straggler degradation                (beyond paper)
   kernels  — kernel micro-benchmarks + traffic models
   tree     — streaming-ingestion scaling sweep            (PR 2)
+  constrained — hereditary-constraint streaming sweep     (PR 3)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
-record: ``tree`` writes ``BENCH_PR2.json``; everything else goes to
-``BENCH_PR1.json`` (repo root).  ``--only tree`` is the PR 2 refresh.
+record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
+``BENCH_PR3.json``; everything else goes to ``BENCH_PR1.json`` (repo
+root).  ``--only constrained`` is the PR 3 refresh.
 """
 import argparse
 import json
@@ -22,6 +24,7 @@ import time
 _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
 BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
 BENCH_PR2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
+BENCH_PR3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 
 
 def main() -> None:
@@ -32,8 +35,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (fault_tolerance_bench, fig2_capacity,
-                            fig2_large_scale, kernel_bench,
+    from benchmarks import (constrained_tree, fault_tolerance_bench,
+                            fig2_capacity, fig2_large_scale, kernel_bench,
                             table1_complexity, table3_relative_error,
                             tree_scaling)
     suites = {
@@ -44,9 +47,11 @@ def main() -> None:
         "ft": fault_tolerance_bench.run,
         "kernels": kernel_bench.run,
         "tree": tree_scaling.run,
+        "constrained": constrained_tree.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
-    targets = {"tree": (BENCH_PR2_JSON, 2)}
+    targets = {"tree": (BENCH_PR2_JSON, 2),
+               "constrained": (BENCH_PR3_JSON, 3)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

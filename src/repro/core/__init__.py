@@ -5,11 +5,13 @@ from repro.core.algorithms import (SelectResult, greedy, run_algorithm,
 from repro.core.baselines import (BaselineResult, centralized_greedy,
                                   randgreedi, random_subset)
 from repro.core.constraints import (Intersection, Knapsack, PartitionMatroid,
-                                    Unconstrained)
+                                    Unconstrained, attr_dim, check_feasible,
+                                    constraint_from_spec)
 from repro.core.distributed import RoundResult, make_submod_mesh, run_round
 from repro.core.objectives import (ActiveSetSelection, ExemplarClustering,
                                    FacilityLocation, WeightedCoverage)
 from repro.core.partition import balanced_partition, gather_partition, n_parts
+from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import (ArraySource, ChunkedSource, GroundSetSource,
                                 as_source)
 from repro.core.tree import IngestStats, TreeConfig, TreeResult, tree_maximize
@@ -18,9 +20,11 @@ __all__ = [
     "SelectResult", "greedy", "stochastic_greedy", "threshold_greedy",
     "run_algorithm", "BaselineResult", "centralized_greedy", "randgreedi",
     "random_subset", "Unconstrained", "Knapsack", "PartitionMatroid",
-    "Intersection", "RoundResult", "make_submod_mesh", "run_round",
+    "Intersection", "attr_dim", "check_feasible", "constraint_from_spec",
+    "RoundResult", "make_submod_mesh", "run_round",
     "ActiveSetSelection", "ExemplarClustering", "FacilityLocation",
     "WeightedCoverage", "balanced_partition", "gather_partition", "n_parts",
+    "FeistelPermutation", "feistel_slot_items",
     "ArraySource", "ChunkedSource", "GroundSetSource", "as_source",
     "IngestStats", "TreeConfig", "TreeResult", "tree_maximize",
 ]

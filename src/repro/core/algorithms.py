@@ -27,7 +27,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.constraints import Unconstrained
+from repro.core.constraints import Knapsack, Unconstrained
 
 NEG_INF = -1e30
 
@@ -58,11 +58,22 @@ def _dummy_attrs(T: jax.Array) -> jax.Array:
 
 
 def _fusable(obj, constraint, attrs) -> bool:
-    """May the fused single-launch selection replace the step-wise scan?"""
-    return (getattr(obj, "rowwise_gains", False)
-            and hasattr(obj, "fused_select")
-            and (constraint is None or isinstance(constraint, Unconstrained))
-            and attrs is None)
+    """May the fused single-launch selection replace the step-wise scan?
+
+    Unconstrained selection fuses whenever the objective exposes a
+    ``fused_select`` hook.  Of the hereditary constraint classes only
+    :class:`Knapsack` has a fused encoding (a weight operand threaded into
+    the megakernel — ``fused_knapsack`` on the objective advertises it);
+    everything else (partition matroids, intersections) takes the
+    feasibility-masked step-wise scan below.
+    """
+    if not (getattr(obj, "rowwise_gains", False)
+            and hasattr(obj, "fused_select")):
+        return False
+    if constraint is None or isinstance(constraint, Unconstrained):
+        return attrs is None
+    return (isinstance(constraint, Knapsack) and attrs is not None
+            and getattr(obj, "fused_knapsack", False))
 
 
 def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
@@ -73,10 +84,12 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
     Supports any hereditary constraint; the cardinality bound is the loop
     bound ``k`` (for pure cardinality problems pass ``constraint=None``).
 
-    ``fused=None`` (auto) routes unconstrained selection through the
-    objective's ``fused_select`` hook when it exposes one — the whole k-step
-    loop runs as one fused kernel launch (kernels/greedy_select.py), with
-    output bit-identical to the step-wise scan, tie-breaking included.
+    ``fused=None`` (auto) routes unconstrained — and, when the objective
+    advertises ``fused_knapsack``, knapsack-constrained — selection through
+    the objective's ``fused_select`` hook: the whole k-step loop runs as one
+    fused kernel launch (kernels/greedy_select.py), with output bit-identical
+    to the step-wise scan, tie-breaking and oracle-call counts included.
+    Other constraint classes always take the feasibility-masked scan.
     ``fused=False`` forces the scan; ``fused=True`` asserts the fast path.
     """
     if fused is None:
@@ -84,8 +97,13 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
     if fused:
         assert _fusable(obj, constraint, attrs), (
             "fused=True needs a rowwise objective with a fused_select hook "
-            "and no constraint/attrs")
-        sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k)
+            "and an unconstrained or fused-knapsack selection")
+        if constraint is not None and not isinstance(constraint, Unconstrained):
+            sel_idx, sel_mask, value, calls = obj.fused_select(
+                T, mask, k, weights=attrs[:, constraint.col],
+                budget=constraint.budget)
+        else:
+            sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k)
         return SelectResult(sel_idx, sel_mask, value, calls)
 
     cap = T.shape[0]
@@ -119,47 +137,58 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
 
 
 def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
-                      key: jax.Array, *, eps: float = 0.5) -> SelectResult:
+                      key: jax.Array, *, eps: float = 0.5,
+                      constraint=None,
+                      attrs: jax.Array | None = None) -> SelectResult:
     """Each step draws a uniform random candidate subset of size
     s = ⌈(cap/k)·ln(1/ε)⌉ and takes its best element.
 
     For row-wise objectives the gain evaluation is restricted to the sampled
     rows (a genuinely smaller MXU contraction); otherwise gains are computed
     masked-full (same semantics, SIMD-style).
+
+    Hereditary constraints restrict both the sample pool and the take: a
+    step samples from ``avail ∩ feasible(cstate)`` and commits the
+    constraint state on every successful take.
     """
     import math
 
     cap = T.shape[0]
     s = min(cap, max(1, math.ceil(cap / k * math.log(1.0 / eps))))
     rowwise = getattr(obj, "rowwise_gains", False)
+    constraint = constraint or Unconstrained()
+    attrs = _dummy_attrs(T) if attrs is None else attrs
 
     def step(carry, key_t):
-        state, avail, calls = carry
-        # uniform random s-subset of available positions:
+        state, cstate, avail, calls = carry
+        cand = avail & constraint.feasible(cstate, attrs)
+        # uniform random s-subset of candidate positions:
         scores = jax.random.uniform(key_t, (cap,))
-        scores = jnp.where(avail, scores, 2.0)        # unavailable sink to end
+        scores = jnp.where(cand, scores, 2.0)         # non-candidates to end
         _, sub_idx = jax.lax.top_k(-scores, s)        # s smallest scores
         if rowwise:
             # ascending indices ⇒ the T[sub_idx] gather walks memory forward
             sub_idx = jnp.sort(sub_idx)
-            sub_avail = avail[sub_idx]
-            g = obj.gains(state, T[sub_idx], sub_avail)
+            sub_cand = cand[sub_idx]
+            g = obj.gains(state, T[sub_idx], sub_cand)
         else:
-            sub_avail = avail[sub_idx]
-            g = obj.gains(state, T, avail)[sub_idx]
-            g = jnp.where(sub_avail, g, NEG_INF)
+            sub_cand = cand[sub_idx]
+            g = obj.gains(state, T, cand)[sub_idx]
+            g = jnp.where(sub_cand, g, NEG_INF)
         b = jnp.argmax(g)
         best = sub_idx[b]
         ok = g[b] > NEG_INF / 2
         state = _tree_where(ok, obj.update(state, T, best), state)
+        cstate = _tree_where(ok, constraint.update(cstate, attrs, best), cstate)
         avail = avail & ~(ok & (jnp.arange(cap) == best))
-        calls = calls + jnp.sum(sub_avail.astype(jnp.int32))
-        return (state, avail, calls), (jnp.where(ok, best.astype(jnp.int32),
-                                                 jnp.int32(-1)), ok)
+        calls = calls + jnp.sum(sub_cand.astype(jnp.int32))
+        return (state, cstate, avail, calls), (
+            jnp.where(ok, best.astype(jnp.int32), jnp.int32(-1)), ok)
 
     keys = jax.random.split(key, k)
-    init = (obj.init_state(T, mask), mask, jnp.int32(0))
-    (state, _, calls), (sel_idx, sel_mask) = jax.lax.scan(step, init, keys)
+    init = (obj.init_state(T, mask), constraint.init_state(), mask,
+            jnp.int32(0))
+    (state, _, _, calls), (sel_idx, sel_mask) = jax.lax.scan(step, init, keys)
     return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
 
 
@@ -169,17 +198,27 @@ def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
 
 
 def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
-                     eps: float = 0.1) -> SelectResult:
+                     eps: float = 0.1, constraint=None,
+                     attrs: jax.Array | None = None) -> SelectResult:
     """Descending thresholds τ = d_max·(1-ε)^l down to (ε/2k)·d_max; one
     sequential pass per threshold adding every item whose current marginal
-    gain meets τ (stopping at k items)."""
+    gain meets τ (stopping at k items).
+
+    Hereditary constraints gate each take on single-item feasibility under
+    the running constraint state (the oracle only fires — and is only
+    counted — for currently-feasible items), committing the state on take.
+    """
     import math
 
     cap = T.shape[0]
     n_levels = max(1, math.ceil(math.log(2.0 * k / eps) / eps))
+    constraint = constraint or Unconstrained()
+    attrs = _dummy_attrs(T) if attrs is None else attrs
 
     state0 = obj.init_state(T, mask)
-    g0 = obj.gains(state0, T, mask)
+    cstate0 = constraint.init_state()
+    cand0 = mask & constraint.feasible(cstate0, attrs)
+    g0 = obj.gains(state0, T, cand0)
     d_max = jnp.maximum(jnp.max(g0), 1e-12)
 
     def gain_at(state, i):
@@ -188,31 +227,34 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
         return obj.gains(state, T, jnp.ones((cap,), bool))[i]
 
     def item_pass(i, carry):
-        state, avail, count, calls, sel_idx, tau = carry
-        # the marginal-gain oracle fires for every still-available item, so
-        # count it from availability *before* the take flips the bit
-        calls = calls + avail[i].astype(jnp.int32)
+        state, cstate, avail, count, calls, sel_idx, tau = carry
+        feas = constraint.feasible(cstate, attrs[i][None, :])[0]
+        # the marginal-gain oracle fires for every still-available feasible
+        # item, so count it *before* the take flips the bit
+        calls = calls + (avail[i] & feas).astype(jnp.int32)
         g = gain_at(state, i)
-        take = avail[i] & (count < k) & (g >= tau)
+        take = avail[i] & feas & (count < k) & (g >= tau)
         state = _tree_where(take, obj.update(state, T, i), state)
+        cstate = _tree_where(take, constraint.update(cstate, attrs, i), cstate)
         sel_idx = jnp.where(take, sel_idx.at[count].set(i), sel_idx)
         count = count + take.astype(jnp.int32)
         avail = avail & ~(take & (jnp.arange(cap) == i))
-        return state, avail, count, calls, sel_idx, tau
+        return state, cstate, avail, count, calls, sel_idx, tau
 
     def level(l, carry):
-        state, avail, count, calls, sel_idx = carry
+        state, cstate, avail, count, calls, sel_idx = carry
         tau = d_max * (1.0 - eps) ** l.astype(jnp.float32)
-        state, avail, count, calls, sel_idx, _ = jax.lax.fori_loop(
-            0, cap, item_pass, (state, avail, count, calls, sel_idx, tau))
-        return state, avail, count, calls, sel_idx
+        state, cstate, avail, count, calls, sel_idx, _ = jax.lax.fori_loop(
+            0, cap, item_pass,
+            (state, cstate, avail, count, calls, sel_idx, tau))
+        return state, cstate, avail, count, calls, sel_idx
 
     sel_idx = jnp.full((k,), -1, jnp.int32)
-    # the d_max pass above evaluated one gain per *valid* item, not per slot
-    init_calls = jnp.sum(mask.astype(jnp.int32))
-    state, _, count, calls, sel_idx = jax.lax.fori_loop(
+    # the d_max pass above evaluated one gain per valid feasible item
+    init_calls = jnp.sum(cand0.astype(jnp.int32))
+    state, _, _, count, calls, sel_idx = jax.lax.fori_loop(
         0, n_levels, level,
-        (state0, mask, jnp.int32(0), init_calls, sel_idx))
+        (state0, cstate0, mask, jnp.int32(0), init_calls, sel_idx))
     sel_mask = jnp.arange(k) < count
     return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
 
@@ -230,7 +272,9 @@ def run_algorithm(name: str, obj, T, mask, k, *, key=None, eps=0.5,
                       fused=fused)
     if name == "stochastic_greedy":
         assert key is not None, "stochastic_greedy needs a PRNG key"
-        return stochastic_greedy(obj, T, mask, k, key, eps=eps)
+        return stochastic_greedy(obj, T, mask, k, key, eps=eps,
+                                 constraint=constraint, attrs=attrs)
     if name == "threshold_greedy":
-        return threshold_greedy(obj, T, mask, k, eps=eps)
+        return threshold_greedy(obj, T, mask, k, eps=eps,
+                                constraint=constraint, attrs=attrs)
     raise ValueError(f"unknown algorithm {name!r}")

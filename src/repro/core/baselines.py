@@ -1,8 +1,16 @@
 """Baselines the paper compares against (§4.3): centralized GREEDY,
-two-round RandGreedI (Barbosa et al. 2015a), and RANDOM-k."""
+two-round RandGreedI (Barbosa et al. 2015a), and RANDOM-k.
+
+All baselines accept the same hereditary ``constraint=`` (+ per-item
+``attrs``) as the tree driver, so comparison columns in constrained sweeps
+stay honest — every column optimizes over the same feasible family.
+``randgreedi`` additionally accepts a :class:`GroundSetSource`: its
+partition pass then gathers machine blocks in bounded chunks instead of an
+all-resident ``(n, d)`` array, so the baseline column scales with the
+streaming TREE column (bit-identical to the array path for the same key).
+"""
 from __future__ import annotations
 
-import functools
 import math
 from typing import NamedTuple
 
@@ -11,21 +19,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import algorithms, partition as part_lib
+from repro.core.sources import GroundSetSource
 
 
 class BaselineResult(NamedTuple):
     sel_rows: jax.Array
     sel_mask: jax.Array
     value: jax.Array
+    sel_attrs: jax.Array | None = None
 
 
-def centralized_greedy(obj, data: jax.Array, k: int) -> BaselineResult:
+def centralized_greedy(obj, data: jax.Array, k: int, *,
+                       constraint=None, attrs=None) -> BaselineResult:
     """GREEDY on the full ground set (μ ≥ n regime; 1 - 1/e)."""
     n = data.shape[0]
-    res = algorithms.greedy(obj, data, jnp.ones((n,), bool), k)
+    attrs_j = None if attrs is None else jnp.asarray(attrs, jnp.float32)
+    res = algorithms.greedy(obj, data, jnp.ones((n,), bool), k,
+                            constraint=constraint, attrs=attrs_j)
     safe = jnp.maximum(res.sel_idx, 0)
     rows = jnp.where(res.sel_mask[:, None], data[safe], 0.0)
-    return BaselineResult(rows, res.sel_mask, res.value)
+    sel_attrs = None
+    if attrs_j is not None:
+        sel_attrs = jnp.where(res.sel_mask[:, None], attrs_j[safe], 0.0)
+    return BaselineResult(rows, res.sel_mask, res.value, sel_attrs)
 
 
 def random_subset(obj, data: jax.Array, k: int, key: jax.Array) -> BaselineResult:
@@ -35,32 +51,108 @@ def random_subset(obj, data: jax.Array, k: int, key: jax.Array) -> BaselineResul
     return BaselineResult(rows, mask, obj.evaluate(rows, mask))
 
 
-def randgreedi(obj, data: jax.Array, k: int, m: int,
-               key: jax.Array) -> BaselineResult:
-    """Two-round RandGreedI: random partition to m machines, GREEDY(k) each,
-    GREEDY on the union of partial solutions; return the best of the final
-    solution and the best partial solution ((1-1/e)/2 expected)."""
-    n, d = data.shape
-    cap = math.ceil(n / m)
-    part = part_lib.balanced_partition(key, n, m, cap=cap)
-    blocks, bmask = part_lib.gather_partition(data, part)
+def _solve_machines(obj, blocks, bmask, k: int, a: int, constraint):
+    """vmap GREEDY over a chunk of machine blocks (wide rows carry attrs)."""
 
-    def solve(T, msk):
-        res = algorithms.greedy(obj, T, msk, k)
+    def solve(Tw, msk):
+        if a:
+            feat, attrs = Tw[:, :-a], Tw[:, -a:]
+        else:
+            feat, attrs = Tw, None
+        res = algorithms.greedy(obj, feat, msk, k, constraint=constraint,
+                                attrs=attrs)
         safe = jnp.maximum(res.sel_idx, 0)
-        rows = jnp.where(res.sel_mask[:, None], T[safe], 0.0)
+        rows = jnp.where(res.sel_mask[:, None], Tw[safe], 0.0)
         return rows, res.sel_mask, jnp.where(jnp.any(res.sel_mask),
                                              res.value, -jnp.inf)
 
-    rows, smask, vals = jax.vmap(solve)(blocks, bmask)        # (m, k, d)
-    union_rows = rows.reshape(m * k, d)
+    return jax.vmap(solve)(blocks, bmask)
+
+
+def randgreedi(obj, data, k: int, m: int, key: jax.Array, *,
+               constraint=None, attrs=None,
+               machine_chunk: int | None = None) -> BaselineResult:
+    """Two-round RandGreedI: random partition to m machines, GREEDY(k) each,
+    GREEDY on the union of partial solutions; return the best of the final
+    solution and the best partial solution ((1-1/e)/2 expected).
+
+    ``data`` may be an all-resident ``(n, d)`` array or a
+    :class:`GroundSetSource`.  With a source, the partition pass runs
+    *chunked*: machine blocks are gathered and solved ``machine_chunk``
+    machines at a time (default: one chunk of ⌈√m⌉ machines), so peak
+    device footprint is O(chunk·⌈n/m⌉·d) instead of O(n·d) while the
+    per-machine solutions — and therefore the whole baseline — stay
+    bit-identical to the array path for the same key.  The union round is
+    m·k rows, already capacity-like.  Hereditary constraints apply to both
+    the machine solves and the union solve.
+    """
+    source = data if isinstance(data, GroundSetSource) else None
+    if source is not None:
+        n, d = source.n, source.d
+    else:
+        n, d = data.shape
+    a = 0
+    attrs_np = None if attrs is None else np.asarray(attrs, np.float32)
+    if constraint is not None:
+        a = attrs_np.shape[1] if attrs_np is not None else (
+            source.a if source is not None else 0)
+        assert a > 0, "constraint needs attrs (pass attrs= or an attributed source)"
+    cap = math.ceil(n / m)
+    part = part_lib.balanced_partition(key, n, m, cap=cap)
+
+    if source is None:
+        wide = data
+        if a:
+            wide = jnp.concatenate(
+                [jnp.asarray(data, jnp.float32), jnp.asarray(attrs_np)], 1)
+        blocks, bmask = part_lib.gather_partition(wide, part)
+        rows, smask, vals = _solve_machines(obj, blocks, bmask, k, a,
+                                            constraint)               # (m, k, ·)
+    else:
+        slot_item = np.asarray(part.idx)                              # (m, cap)
+        chunk = machine_chunk or max(1, math.isqrt(m))
+        out_rows, out_smask, out_vals = [], [], []
+        for c0 in range(0, m, chunk):
+            c1 = min(c0 + chunk, m)
+            idx_c = slot_item[c0:c1]
+            flat = np.maximum(idx_c, 0).reshape(-1)
+            if a and attrs_np is None:     # one source pass for rows+attrs
+                rows_np, att = source.gather_with_attrs(flat)
+            else:
+                rows_np = source.gather(flat)
+                att = attrs_np[flat] if a else None
+            rows_np = np.asarray(rows_np, np.float32)
+            if a:
+                rows_np = np.concatenate(
+                    [rows_np, np.asarray(att, np.float32)], axis=1)
+            blocks = jnp.asarray(rows_np).reshape(c1 - c0, cap, d + a)
+            bmask = jnp.asarray(idx_c >= 0)
+            blocks = jnp.where(bmask[..., None], blocks, 0.0)
+            r, sm, v = _solve_machines(obj, blocks, bmask, k, a, constraint)
+            out_rows.append(r)
+            out_smask.append(sm)
+            out_vals.append(v)
+        rows = jnp.concatenate(out_rows)
+        smask = jnp.concatenate(out_smask)
+        vals = jnp.concatenate(out_vals)
+
+    union_rows = rows.reshape(m * k, d + a)
     union_mask = smask.reshape(m * k)
-    res = algorithms.greedy(obj, union_rows, union_mask, k)
+    if a:
+        union_feat, union_attrs = union_rows[:, :-a], union_rows[:, -a:]
+    else:
+        union_feat, union_attrs = union_rows, None
+    res = algorithms.greedy(obj, union_feat, union_mask, k,
+                            constraint=constraint, attrs=union_attrs)
     safe = jnp.maximum(res.sel_idx, 0)
     final_rows = jnp.where(res.sel_mask[:, None], union_rows[safe], 0.0)
 
     i = jnp.argmax(vals)
     use_final = res.value >= vals[i]
-    sel_rows = jnp.where(use_final, final_rows, rows[i])
+    sel_wide = jnp.where(use_final, final_rows, rows[i])
     sel_mask = jnp.where(use_final, res.sel_mask, smask[i])
-    return BaselineResult(sel_rows, sel_mask, jnp.maximum(res.value, vals[i]))
+    value = jnp.maximum(res.value, vals[i])
+    if a:
+        return BaselineResult(sel_wide[:, :-a], sel_mask, value,
+                              sel_wide[:, -a:])
+    return BaselineResult(sel_wide, sel_mask, value)

@@ -13,6 +13,12 @@ array ``attrs`` of shape (cap, a) carried alongside the item block:
 Cardinality is implicit in the greedy loop bound; the classes below add
 knapsack and partition-matroid families (and their intersection, which is
 again hereditary).
+
+Beyond the jit-side interface, every class also answers a *pure-NumPy*
+set-level feasibility question through :func:`check_feasible` — the
+independent checker the tree driver and the tests run on every returned
+coreset (no jax, no shared code with the selection loops, so a bug in the
+jit path cannot hide itself).
 """
 from __future__ import annotations
 
@@ -21,6 +27,11 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# slack shared by the jit-side feasibility test and the NumPy checker —
+# fp32 weight accumulation must not reject an exactly-at-budget set.
+KNAPSACK_TOL = 1e-6
 
 
 @jax.tree_util.register_pytree_node_class
@@ -44,6 +55,9 @@ class Unconstrained:
     def update(self, cstate, attrs, idx):
         return cstate
 
+    def check_np(self, attrs: np.ndarray, mask: np.ndarray) -> tuple[bool, str]:
+        return True, "unconstrained"
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -64,10 +78,22 @@ class Knapsack:
         return jnp.float32(0.0)  # weight used so far
 
     def feasible(self, cstate, attrs):
-        return cstate + attrs[:, self.col] <= self.budget + 1e-6
+        return cstate + attrs[:, self.col] <= self.budget + KNAPSACK_TOL
 
     def update(self, cstate, attrs, idx):
         return cstate + attrs[idx, self.col]
+
+    def check_np(self, attrs: np.ndarray, mask: np.ndarray) -> tuple[bool, str]:
+        used = float(np.asarray(attrs, np.float64)[mask, self.col].sum())
+        k_sel = max(1, int(mask.sum()))
+        # the jit loop admits items under `used32 + w <= budget + TOL` with a
+        # sequentially rounded fp32 running sum, so a legitimate selection's
+        # exact total can exceed the budget by the absolute slack plus the
+        # accumulated fp32 rounding (~k·ulp of the running magnitude); the
+        # checker's bar must cover both or it would reject its own loop
+        rel = 4 * np.finfo(np.float32).eps * k_sel * max(abs(self.budget), used)
+        ok = used <= self.budget + KNAPSACK_TOL * k_sel + rel
+        return ok, f"knapsack used={used:.6f} budget={self.budget}"
 
 
 @jax.tree_util.register_pytree_node_class
@@ -97,6 +123,18 @@ class PartitionMatroid:
         gid = attrs[idx, self.col].astype(jnp.int32)
         return cstate.at[gid].add(1)
 
+    def check_np(self, attrs: np.ndarray, mask: np.ndarray) -> tuple[bool, str]:
+        gid = np.asarray(attrs)[mask, self.col].astype(np.int64)
+        # out-of-range ids are an infeasibility verdict, not a crash — the
+        # jit path clamps gathers / drops scatters for them, so the checker
+        # is the only layer that can surface bad group columns
+        if gid.size and (gid.min() < 0 or gid.max() >= len(self.caps)):
+            return False, (f"partition ids outside [0, {len(self.caps)}): "
+                           f"{sorted(set(gid.tolist()))}")
+        counts = np.bincount(gid, minlength=len(self.caps))
+        ok = bool((counts <= np.asarray(self.caps)).all())
+        return ok, f"partition counts={counts.tolist()} caps={list(self.caps)}"
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
@@ -123,3 +161,66 @@ class Intersection:
 
     def update(self, cstate, attrs, idx):
         return tuple(p.update(s, attrs, idx) for p, s in zip(self.parts, cstate))
+
+    def check_np(self, attrs: np.ndarray, mask: np.ndarray) -> tuple[bool, str]:
+        oks, msgs = zip(*(p.check_np(attrs, mask) for p in self.parts))
+        return all(oks), " & ".join(msgs)
+
+
+# ---------------------------------------------------------------------------
+# independent NumPy verification + spec parsing (CLI / benchmarks)
+# ---------------------------------------------------------------------------
+
+
+def check_feasible(constraint, attrs, mask) -> tuple[bool, str]:
+    """Set-level feasibility of a selected coreset, pure NumPy.
+
+    ``attrs``: (k, a) per-item attribute rows of the selection (zero rows on
+    padding slots are fine — only ``mask``-True rows are inspected).  Returns
+    ``(ok, detail)``; callers assert ``ok`` and surface ``detail``.
+    """
+    if constraint is None:
+        return True, "unconstrained"
+    attrs = np.asarray(attrs)
+    mask = np.asarray(mask, bool)
+    if attrs.ndim != 2 or attrs.shape[0] != mask.shape[0]:
+        return False, f"attrs shape {attrs.shape} vs mask {mask.shape}"
+    return constraint.check_np(attrs, mask)
+
+
+def attr_dim(constraint) -> int:
+    """Smallest attribute width the constraint's columns require (0 = none)."""
+    if constraint is None or isinstance(constraint, Unconstrained):
+        return 0
+    if isinstance(constraint, Intersection):
+        return max((attr_dim(p) for p in constraint.parts), default=0)
+    return constraint.col + 1
+
+
+def from_spec(spec: str):
+    """Parse a CLI constraint spec into a constraint object.
+
+    Grammar (colon-separated ``key=value`` after the class name):
+      ``knapsack:budget=2.5[:col=0]``
+      ``partition:caps=2,3,4[:col=0]``
+      ``intersection:<spec>+<spec>``        (``+``-joined sub-specs)
+    """
+    spec = spec.strip()
+    name, _, rest = spec.partition(":")
+    if name == "intersection":
+        return Intersection(tuple(from_spec(s) for s in rest.split("+")))
+    kv = {}
+    for part in filter(None, rest.split(":")):
+        k, _, v = part.partition("=")
+        kv[k.strip()] = v.strip()
+    if name == "knapsack":
+        return Knapsack(budget=float(kv["budget"]), col=int(kv.get("col", 0)))
+    if name == "partition":
+        caps = tuple(int(c) for c in kv["caps"].split(","))
+        return PartitionMatroid(caps=caps, col=int(kv.get("col", 0)))
+    if name in ("none", "unconstrained", ""):
+        return None
+    raise ValueError(f"unknown constraint spec {spec!r}")
+
+
+constraint_from_spec = from_spec   # package-level export name

@@ -50,8 +50,23 @@ def make_submod_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("machines",))
 
 
-def _solve_block(obj, T, mask, key, *, k: int, alg: str, eps: float):
-    res = algorithms.run_algorithm(alg, obj, T, mask, k, key=key, eps=eps)
+def _solve_block(obj, T, mask, key, *, k: int, alg: str, eps: float,
+                 attr_dim: int = 0, constraint=None):
+    """Solve one machine block.
+
+    ``T`` is the *carried* block: item feature rows, optionally widened with
+    ``attr_dim`` trailing per-item attribute columns (knapsack weights,
+    partition ids).  The objective only ever sees the feature slice; the
+    constraint only ever sees the attribute slice; the returned solution
+    rows keep the full width, so attributes travel with their items into
+    the next round's union without any side-channel bookkeeping.
+    """
+    if attr_dim:
+        feat, attrs = T[:, :-attr_dim], T[:, -attr_dim:]
+    else:
+        feat, attrs = T, None
+    res = algorithms.run_algorithm(alg, obj, feat, mask, k, key=key, eps=eps,
+                                   constraint=constraint, attrs=attrs)
     safe = jnp.maximum(res.sel_idx, 0)
     rows = jnp.where(res.sel_mask[:, None], T[safe], 0.0)
     any_sel = jnp.any(res.sel_mask)
@@ -59,10 +74,12 @@ def _solve_block(obj, T, mask, key, *, k: int, alg: str, eps: float):
     return rows, res.sel_mask, value, res.oracle_calls
 
 
-def _round_local(obj, blocks, bmask, keys, dead, *, k, alg, eps):
+def _round_local(obj, blocks, bmask, keys, dead, *, k, alg, eps,
+                 attr_dim=0, constraint=None):
     """Per-device slab: vmap the machine solver over local machines."""
     rows, smask, vals, calls = jax.vmap(
-        functools.partial(_solve_block, k=k, alg=alg, eps=eps),
+        functools.partial(_solve_block, k=k, alg=alg, eps=eps,
+                          attr_dim=attr_dim, constraint=constraint),
         in_axes=(None, 0, 0, 0))(obj, blocks, bmask, keys)
     alive = ~dead
     smask = smask & alive[:, None]
@@ -73,17 +90,24 @@ def _round_local(obj, blocks, bmask, keys, dead, *, k, alg, eps):
 def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
               *, k: int, alg: str = "greedy", eps: float = 0.5,
               dead_mask: jax.Array | None = None,
-              mesh: Mesh | None = None) -> RoundResult:
+              mesh: Mesh | None = None, attr_dim: int = 0,
+              constraint=None) -> RoundResult:
     """One round of Algorithm 1 over all M machine blocks.
 
-    blocks: (M, cap, d) items, bmask: (M, cap) validity, keys: (M,) PRNG keys.
+    blocks: (M, cap, d + attr_dim) items (trailing ``attr_dim`` columns are
+    per-item constraint attributes that ride along with the rows),
+    bmask: (M, cap) validity, keys: (M,) PRNG keys.  ``constraint`` is a
+    hereditary constraint from :mod:`repro.core.constraints` (hashable
+    frozen dataclass — closed over, not an operand) that every machine's
+    solve respects independently.
     With a mesh, machines are sharded over devices via shard_map; without,
     the same code runs as a plain vmap (single-process testing path —
     semantics identical by construction).
     """
     M = blocks.shape[0]
     dead = jnp.zeros((M,), bool) if dead_mask is None else dead_mask
-    local = functools.partial(_round_local, k=k, alg=alg, eps=eps)
+    local = functools.partial(_round_local, k=k, alg=alg, eps=eps,
+                              attr_dim=attr_dim, constraint=constraint)
 
     if mesh is None:
         out = jax.jit(local)(obj, blocks, bmask, keys, dead)

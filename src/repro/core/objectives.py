@@ -55,6 +55,7 @@ class ExemplarClustering:
     score_dtype: str | None = None   # "bfloat16": halve scoring HBM traffic
 
     rowwise_gains = True  # gains depend only on candidate rows, not block index
+    fused_knapsack = True  # fused_select accepts a weights/budget encoding
 
     # -- pytree plumbing -------------------------------------------------
     def tree_flatten(self):
@@ -86,26 +87,53 @@ class ExemplarClustering:
         return state["base"] - jnp.mean(state["cur_min"])
 
     # -- fused selection hook (algorithms.greedy fast path) ---------------
-    def fused_select(self, T: jax.Array, mask: jax.Array, k: int):
+    def fused_select(self, T: jax.Array, mask: jax.Array, k: int,
+                     weights: jax.Array | None = None,
+                     budget: float | None = None):
         """Whole k-step greedy in one fused kernel launch.
 
         Bit-identical to the step-wise greedy scan (lowest-index ties,
         value, oracle-call count) — see kernels/greedy_select.py.  Returns
         ``(sel_idx, sel_mask, value, oracle_calls)``.
+
+        ``weights``/``budget`` encode a knapsack constraint: the kernel
+        feasibility-masks candidates against the running used-weight and
+        the oracle-call count is reconstructed from the selection sequence
+        by replaying the same sequential weight accumulation (O(k·n) jnp,
+        negligible next to the selection itself).
         """
         import jax.numpy as _jnp
         cd = _jnp.bfloat16 if self.score_dtype == "bfloat16" else None
         state = self.init_state(T, mask)
         sel_idx, cur_min = kops.greedy_select(
-            T, self.eval_set, state["cur_min"], mask, k, compute_dtype=cd)
-        # step t evaluates one gain per still-available candidate, and a step
-        # succeeds iff any candidate remains — both closed-form in n_avail.
-        n_avail = jnp.sum(mask.astype(jnp.int32))
-        t = jnp.arange(k, dtype=jnp.int32)
-        sel_mask = t < n_avail
-        calls = jnp.sum(jnp.maximum(n_avail - t, 0))
+            T, self.eval_set, state["cur_min"], mask, k, compute_dtype=cd,
+            weights=weights, budget=budget)
         value = state["base"] - jnp.mean(cur_min)
-        return sel_idx, sel_mask, value, calls
+        if weights is None:
+            # step t evaluates one gain per still-available candidate, and a
+            # step succeeds iff any candidate remains — closed-form in n_avail
+            n_avail = jnp.sum(mask.astype(jnp.int32))
+            t = jnp.arange(k, dtype=jnp.int32)
+            sel_mask = t < n_avail
+            calls = jnp.sum(jnp.maximum(n_avail - t, 0))
+            return sel_idx, sel_mask, value, calls
+        from repro.core.constraints import KNAPSACK_TOL
+        n = T.shape[0]
+        sel_mask = sel_idx >= 0
+        w32 = weights.astype(jnp.float32)
+
+        def count_step(carry, idx):
+            used, avail = carry
+            cand = avail & (used + w32 <= budget + KNAPSACK_TOL)
+            c = jnp.sum(cand.astype(jnp.int32))
+            ok = idx >= 0
+            used = jnp.where(ok, used + w32[jnp.maximum(idx, 0)], used)
+            avail = avail & ~(ok & (jnp.arange(n) == idx))
+            return (used, avail), c
+
+        _, per_step = jax.lax.scan(count_step, (jnp.float32(0.0), mask),
+                                   sel_idx)
+        return sel_idx, sel_mask, value, jnp.sum(per_step)
 
     # -- set-function oracle (for cross-machine comparison / tests) ------
     def evaluate(self, S: jax.Array, s_mask: jax.Array) -> jax.Array:

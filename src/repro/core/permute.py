@@ -1,0 +1,113 @@
+"""Counter-based Feistel slot permutation — O(1) state for unbounded n.
+
+The streaming round-0 ingestion of :mod:`repro.core.tree` assigns every
+ground-set item a (machine, slot) virtual location through a random
+permutation of the ``L·μ`` slots.  The dense scheme materializes that
+permutation as an ``(n_slots,)`` host int32 array — O(n) host memory, the
+last n-sized buffer in the streaming path.  This module provides the
+alternative: a keyed **format-preserving bijection** over ``[0, n_slots)``
+built from a balanced Feistel network with cycle-walking, so any slice of
+the permutation can be evaluated on demand from a handful of 32-bit round
+keys (state is O(rounds), not O(n)), bit-reproducible per seed.
+
+Construction (classic Black–Rogaway "cycle-walking FPE"):
+
+  * pick the smallest even bit-width 2b with ``4^b ≥ n_slots`` and run a
+    balanced Feistel over (L, R) b-bit halves with a xorshift-style round
+    function keyed per round — a bijection on ``[0, 4^b)``;
+  * cycle-walk: re-encrypt any output ≥ n_slots until it lands inside the
+    domain.  Because ``4^b < 4·n_slots``, the expected walk length is < 4.
+
+The result is a *pseudorandom* permutation rather than a uniform one —
+the virtual-location argument of the paper needs exchangeability of slot
+assignments, for which a keyed PRP is the standard streaming substitute
+(same trade RandGreedI-style systems make).  The dense
+``jax.random.permutation`` scheme remains the default and the materialized
+cross-check path in tests pins the two evaluation styles (sliced vs full)
+of the Feistel scheme against each other.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+_MASK32 = np.uint32(0xFFFFFFFF)
+
+
+def _round_fn(r: np.ndarray, key: np.uint32, half_bits: int) -> np.ndarray:
+    """Keyed integer mix of the right half (vectorized, uint32)."""
+    x = (r * np.uint32(0x9E3779B1) + key) & _MASK32
+    x ^= x >> np.uint32(15)
+    x = (x * np.uint32(0x85EBCA77)) & _MASK32
+    x ^= x >> np.uint32(13)
+    return x & np.uint32((1 << half_bits) - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class FeistelPermutation:
+    """Keyed bijection over ``[0, n)`` with O(rounds) state.
+
+    ``perm(idx)`` evaluates the permutation at host int indices ``idx``
+    (any shape) without materializing anything beyond the request.
+    """
+
+    n: int
+    round_keys: tuple[int, ...]      # uint32 per Feistel round
+    half_bits: int                   # b — each half is b bits, domain 4^b
+
+    @classmethod
+    def from_key(cls, key: jax.Array, n: int,
+                 rounds: int = 4) -> "FeistelPermutation":
+        """Derive round keys deterministically from a jax PRNG key."""
+        assert 1 <= n <= (1 << 32), "uint32 halves cover domains up to 2^32"
+        ks = np.asarray(jax.random.randint(
+            key, (rounds,), 0, np.iinfo(np.int32).max, dtype=np.int32))
+        half_bits = 1
+        while (1 << (2 * half_bits)) < n:
+            half_bits += 1
+        return cls(n=int(n), round_keys=tuple(int(k) for k in ks),
+                   half_bits=half_bits)
+
+    def _encrypt(self, x: np.ndarray) -> np.ndarray:
+        hb = self.half_bits
+        mask = np.uint32((1 << hb) - 1)
+        left = (x >> np.uint32(hb)) & mask
+        right = x & mask
+        for rk in self.round_keys:
+            left, right = right, left ^ _round_fn(right, np.uint32(rk), hb)
+        return (left << np.uint32(hb)) | right
+
+    def __call__(self, idx) -> np.ndarray:
+        """Permutation values for indices ``idx`` ⊂ [0, n) (vectorized)."""
+        idx = np.asarray(idx)
+        y = idx.astype(np.uint32).reshape(-1)
+        assert (idx.reshape(-1) >= 0).all() and (y < self.n).all(), \
+            "indices outside the permutation domain"
+        y = self._encrypt(y)
+        # cycle-walk: domain 4^b < 4n ⇒ geometric tail, expected < 4 steps
+        for _ in range(128):
+            out = y >= self.n
+            if not out.any():
+                break
+            y[out] = self._encrypt(y[out])
+        else:  # pragma: no cover - probability ~ (3/4)^128
+            raise RuntimeError("Feistel cycle-walk failed to terminate")
+        return y.astype(np.int64).reshape(idx.shape)
+
+    def materialize(self) -> np.ndarray:
+        """Full (n,) permutation — cross-check/tests and the resident path."""
+        return self(np.arange(self.n, dtype=np.int64))
+
+
+def feistel_slot_items(perm: FeistelPermutation, n_items: int,
+                       slots: np.ndarray) -> np.ndarray:
+    """Item index per slot for a slice of slots, -1 on empty slots.
+
+    Mirrors :func:`repro.core.partition.balanced_partition`'s
+    ``where(perm < n_items, perm, -1)`` with the Feistel permutation in
+    place of the materialized ``jax.random.permutation``.
+    """
+    vals = perm(slots)
+    return np.where(vals < n_items, vals, -1).astype(np.int32)

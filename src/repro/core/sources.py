@@ -20,6 +20,13 @@ on device:
 All sources expose ``n``/``d``/``dtype``, sequential ``iter_chunks()``,
 and ``gather(idx)`` (host int indices → ``(len(idx), d)`` rows).  Rows are
 returned by value; the caller owns masking of padding slots.
+
+Constrained workloads additionally carry an ``(n, a)`` per-item attribute
+matrix (knapsack weights, partition ids — see :mod:`repro.core.constraints`)
+alongside the rows: ``a`` is the attribute width (0 = unattributed) and
+``gather_attrs(idx)`` returns the attribute rows for the same indices a
+``gather`` would serve, so waves can re-gather ``(rows, attrs)`` pairs
+without ever materializing either matrix in full.
 """
 from __future__ import annotations
 
@@ -34,6 +41,7 @@ class GroundSetSource:
 
     n: int
     d: int
+    a: int = 0              # per-item attribute width (0 = no attrs)
     dtype: np.dtype
 
     def iter_chunks(self, chunk_rows: int = 8192) -> Iterator[Tuple[int, np.ndarray]]:
@@ -43,6 +51,20 @@ class GroundSetSource:
         shards, pipeline batches) yield their own chunk boundaries.
         """
         raise NotImplementedError
+
+    def iter_chunks_attrs(self, chunk_rows: int = 8192
+                          ) -> Iterator[Tuple[int, np.ndarray, np.ndarray]]:
+        """Yield ``(start, rows, attrs)`` — attrs is ``(len(rows), a)``.
+
+        Default pairs :meth:`iter_chunks` with per-chunk attr slices from
+        sources that hold a host attr matrix; attr-less sources yield a
+        zero-width matrix so callers never branch.
+        """
+        for start, rows in self.iter_chunks(chunk_rows):
+            yield start, rows, self._attr_slice(start, len(rows))
+
+    def _attr_slice(self, start: int, count: int) -> np.ndarray:
+        return np.zeros((count, self.a), np.float32)
 
     def gather(self, idx: np.ndarray) -> np.ndarray:
         """Rows for host int indices ``idx`` (any shape's flat order).
@@ -59,22 +81,76 @@ class GroundSetSource:
                 out[hit] = rows[idx[hit] - start]
         return out
 
+    def gather_attrs(self, idx: np.ndarray) -> np.ndarray:
+        """Attribute rows for host int indices ``idx`` — ``(len(idx), a)``.
+
+        Default re-streams :meth:`iter_chunks_attrs` like :meth:`gather`;
+        sources with random access override with a direct take.
+        """
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        out = np.zeros((idx.size, self.a), np.float32)
+        if self.a == 0:
+            return out
+        for start, rows, attrs in self.iter_chunks_attrs():
+            hit = (idx >= start) & (idx < start + len(rows))
+            if hit.any():
+                out[hit] = attrs[idx[hit] - start]
+        return out
+
+    def gather_with_attrs(self, idx: np.ndarray
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+        """Rows *and* attribute rows for ``idx`` in one pass.
+
+        Sequential sources re-stream the chunk iterator once here instead
+        of twice (a separate ``gather`` + ``gather_attrs`` would); random-
+        access sources override with two direct takes.
+        """
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        rows = np.zeros((idx.size, self.d), self.dtype)
+        attrs = np.zeros((idx.size, self.a), np.float32)
+        for start, chunk_rows, chunk_attrs in self.iter_chunks_attrs():
+            hit = (idx >= start) & (idx < start + len(chunk_rows))
+            if hit.any():
+                rows[hit] = chunk_rows[idx[hit] - start]
+                attrs[hit] = chunk_attrs[idx[hit] - start]
+        return rows, attrs
+
     def materialize(self) -> np.ndarray:
         """Full (n, d) host array — tests/small references only."""
         return np.concatenate([rows for _, rows in self.iter_chunks()], axis=0)
+
+    def materialize_attrs(self) -> np.ndarray:
+        """Full (n, a) host attr matrix — tests/small references only."""
+        return np.concatenate([a for _, _, a in self.iter_chunks_attrs()],
+                              axis=0)
+
+
+def _as_attrs(attrs) -> np.ndarray:
+    attrs = np.asarray(attrs, np.float32)
+    assert attrs.ndim == 2, f"attrs must be (n, a), got {attrs.shape}"
+    return attrs
 
 
 class ArraySource(GroundSetSource):
     """In-memory (n, d) array (jax device array or host numpy)."""
 
-    def __init__(self, data):
+    def __init__(self, data, attrs=None):
         self._data = data
         self.n, self.d = int(data.shape[0]), int(data.shape[1])
         self.dtype = np.dtype(data.dtype)
+        self._attrs = None if attrs is None else _as_attrs(attrs)
+        self.a = 0 if self._attrs is None else self._attrs.shape[1]
+        if self._attrs is not None:
+            assert len(self._attrs) == self.n, (len(self._attrs), self.n)
 
     def iter_chunks(self, chunk_rows: int = 8192):
         for s in range(0, self.n, chunk_rows):
             yield s, np.asarray(self._data[s:s + chunk_rows])
+
+    def _attr_slice(self, start: int, count: int) -> np.ndarray:
+        if self._attrs is None:
+            return np.zeros((count, 0), np.float32)
+        return self._attrs[start:start + count]
 
     def gather(self, idx: np.ndarray) -> np.ndarray:
         idx = np.asarray(idx, np.int64).reshape(-1)
@@ -82,42 +158,72 @@ class ArraySource(GroundSetSource):
             return self._data[idx]
         return np.asarray(jnp.take(self._data, jnp.asarray(idx), axis=0))
 
+    def gather_attrs(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        if self._attrs is None:
+            return np.zeros((idx.size, 0), np.float32)
+        return self._attrs[idx]
+
+    def gather_with_attrs(self, idx):
+        return self.gather(idx), self.gather_attrs(idx)   # both random-access
+
 
 class ChunkedSource(GroundSetSource):
     """Sequential host iterator source (no random access).
 
-    ``chunks_fn`` returns a *fresh* iterator of (rows,) chunks each call —
-    the stream is re-read once per gather, never held whole in memory.
+    ``chunks_fn`` returns a *fresh* iterator each call — the stream is
+    re-read once per gather, never held whole in memory.  Chunks are either
+    plain ``(rows,)`` arrays or ``(rows, attrs)`` pairs (attributed
+    streams); declare the attribute width via ``a`` when yielding pairs.
     """
 
-    def __init__(self, chunks_fn: Callable[[], Iterator[np.ndarray]],
-                 n: int, d: int, dtype=np.float32):
+    def __init__(self, chunks_fn: Callable[[], Iterator], n: int, d: int,
+                 dtype=np.float32, a: int = 0):
         self._chunks_fn = chunks_fn
         self.n, self.d = int(n), int(d)
+        self.a = int(a)
         self.dtype = np.dtype(dtype)
 
     @classmethod
-    def from_array(cls, data, chunk_rows: int) -> "ChunkedSource":
+    def from_array(cls, data, chunk_rows: int, attrs=None) -> "ChunkedSource":
         """Test/bench helper: pretend an array is only chunk-streamable."""
         arr = np.asarray(data)
+        att = None if attrs is None else _as_attrs(attrs)
 
         def chunks():
             for s in range(0, len(arr), chunk_rows):
-                yield arr[s:s + chunk_rows]
+                if att is None:
+                    yield arr[s:s + chunk_rows]
+                else:
+                    yield arr[s:s + chunk_rows], att[s:s + chunk_rows]
 
-        return cls(chunks, arr.shape[0], arr.shape[1], arr.dtype)
+        return cls(chunks, arr.shape[0], arr.shape[1], arr.dtype,
+                   a=0 if att is None else att.shape[1])
+
+    def _split(self, chunk):
+        if isinstance(chunk, tuple):
+            rows, attrs = chunk
+            return np.asarray(rows), np.asarray(attrs, np.float32)
+        rows = np.asarray(chunk)
+        return rows, np.zeros((len(rows), self.a), np.float32)
 
     def iter_chunks(self, chunk_rows: int = 8192):
-        start = 0
-        for rows in self._chunks_fn():
-            rows = np.asarray(rows)
+        for start, rows, _ in self.iter_chunks_attrs(chunk_rows):
             yield start, rows
+
+    def iter_chunks_attrs(self, chunk_rows: int = 8192):
+        start = 0
+        for chunk in self._chunks_fn():
+            rows, attrs = self._split(chunk)
+            assert attrs.shape == (len(rows), self.a), (attrs.shape, self.a)
+            yield start, rows, attrs
             start += len(rows)
         assert start == self.n, f"chunk stream yielded {start} rows, n={self.n}"
 
 
-def as_source(data) -> GroundSetSource:
+def as_source(data, attrs=None) -> GroundSetSource:
     """Coerce an (n, d) array to an :class:`ArraySource`; pass sources through."""
     if isinstance(data, GroundSetSource):
+        assert attrs is None, "pass attrs through the source, not alongside it"
         return data
-    return ArraySource(data)
+    return ArraySource(data, attrs=attrs)

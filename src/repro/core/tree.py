@@ -17,6 +17,15 @@ Production features beyond the pseudo-code:
     on array transfers.  The legacy host-NumPy loop is kept as
     ``host_rounds=True`` (bit-identical output; used by tests and as the
     checkpoint-compatibility reference).
+  * **hereditary constraints** (``constraint=`` + per-item ``attrs``):
+    each machine's solve respects the constraint (Theorem 3.5's α/r then
+    holds for the returned solution); the per-item attribute columns
+    (knapsack weights, partition ids) are carried *with* their rows through
+    every layer — partition gather, ingestion waves, between-round
+    repartition, best-solution fold, checkpoints — as trailing columns of
+    the candidate matrix, so streaming and all-resident stay bit-identical
+    under every constraint class.  The returned coreset is re-verified by
+    the independent pure-NumPy checker (:func:`constraints.check_feasible`).
   * round-level checkpointing (A_t is ≤ m_t·k rows — restartable at any
     round boundary; `checkpoint_dir=` + `resume=True`),
   * failure injection (`fail_machines`: solutions dropped, run continues),
@@ -34,9 +43,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import constraints as cons_lib
 from repro.core import partition as part_lib
 from repro.core.distributed import RoundResult, run_round, shard_round_inputs
+from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import ArraySource, GroundSetSource, as_source
+
+PERMUTATIONS = ("dense", "feistel")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,10 +61,12 @@ class TreeConfig:
     seed: int = 0
     checkpoint_dir: str | None = None
     resume: bool = False
+    permutation: str = "dense"         # round-0 slot scheme: dense | feistel
 
     def __post_init__(self):
         assert self.capacity > self.k, (
             f"paper requires μ > k (got μ={self.capacity}, k={self.k})")
+        assert self.permutation in PERMUTATIONS, self.permutation
 
     def round_bound(self, n: int) -> int:
         """Prop. 3.1: r ≤ ⌈log_{μ/k}(n/μ)⌉ + 1."""
@@ -78,8 +93,9 @@ class IngestStats:
     wave_machines: int          # W — machines dispatched per wave
     waves: int                  # number of waves in round 0
     peak_wave_rows: int         # max candidate rows materialized per wave
-    peak_wave_bytes: int        # peak_wave_rows · d · itemsize
+    peak_wave_bytes: int        # peak_wave_rows · (d + attr_dim) · itemsize
     total_machines: int         # Mp — mesh-padded machine count of round 0
+    attr_dim: int = 0           # a — attribute columns riding with each row
 
 
 @dataclasses.dataclass
@@ -92,6 +108,7 @@ class TreeResult:
     machines_per_round: list[int]
     round_values: list[float]   # best machine value per round
     ingest: IngestStats | None = None   # set by the streaming round-0 path
+    sel_attrs: np.ndarray | None = None  # (k, a) attrs of the selection
 
 
 # ---------------------------------------------------------------------------
@@ -141,17 +158,18 @@ def _round_plan(kalg, M: int, t: int, fail_machines, mesh):
 
 
 def _dispatch_blocks(obj, blocks, bmask, keys, dead, cfg: TreeConfig,
-                     mesh) -> RoundResult:
+                     mesh, attr_dim=0, constraint=None) -> RoundResult:
     """Shard and solve one contiguous slab of machine blocks (a full round
     or one ingestion wave) with its pre-split keys and failure mask."""
     if mesh is not None:
         blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask, keys)
     return run_round(obj, blocks, bmask, keys, k=cfg.k, alg=cfg.algorithm,
-                     eps=cfg.eps, dead_mask=jnp.asarray(dead), mesh=mesh)
+                     eps=cfg.eps, dead_mask=jnp.asarray(dead), mesh=mesh,
+                     attr_dim=attr_dim, constraint=constraint)
 
 
 def _dispatch_round(obj, blocks, bmask, kalg, t, cfg: TreeConfig, mesh,
-                    fail_machines) -> RoundResult:
+                    fail_machines, attr_dim=0, constraint=None) -> RoundResult:
     """Mesh-pad the machine axis, split keys, apply failure injection and
     solve one round.  Shared verbatim by the device-resident and legacy
     host drivers."""
@@ -160,7 +178,8 @@ def _dispatch_round(obj, blocks, bmask, kalg, t, cfg: TreeConfig, mesh,
     if Mp != M:
         blocks = jnp.pad(blocks, ((0, Mp - M), (0, 0), (0, 0)))
         bmask = jnp.pad(bmask, ((0, Mp - M), (0, 0)))
-    return _dispatch_blocks(obj, blocks, bmask, keys, dead, cfg, mesh)
+    return _dispatch_blocks(obj, blocks, bmask, keys, dead, cfg, mesh,
+                            attr_dim=attr_dim, constraint=constraint)
 
 
 @jax.jit
@@ -185,22 +204,84 @@ def _fast_forward_key(key, start_round: int):
     return key
 
 
+def _round0_slot_blocks(kpart, n: int, L: int, Mp: int, mu: int,
+                        scheme: str):
+    """Round-0 virtual-location assignment as a sliceable provider.
+
+    Returns ``slot_block(w0, w1) -> (w1-w0, μ) int32`` of item indices
+    (-1 on empty/padded slots) for machines ``[w0, w1)``.
+
+      * ``dense`` — materializes :func:`partition.balanced_partition`'s
+        permutation on host (O(n_slots) int32, the legacy scheme; also the
+        cross-check path for the Feistel scheme in tests).
+      * ``feistel`` — a counter-based keyed bijection evaluated per slice
+        (:mod:`repro.core.permute`): O(1) host state regardless of n, so
+        the last n-sized host buffer of the streaming path disappears.
+    """
+    if scheme == "feistel":
+        perm = FeistelPermutation.from_key(kpart, L * mu)
+
+        def slot_block(w0: int, w1: int) -> np.ndarray:
+            mids = np.arange(w0, w1, dtype=np.int64)
+            slots = (mids[:, None] * mu + np.arange(mu)[None, :])
+            out = np.full((w1 - w0, mu), -1, np.int32)
+            live = mids < L                       # mesh-padded machines empty
+            if live.any():
+                out[live] = feistel_slot_items(perm, n, slots[live])
+            return out
+    else:
+        part = part_lib.balanced_partition(kpart, n, L, cap=mu)
+        slot_item = _host_array(part.idx)                   # (L, cap) int32
+        if Mp != L:                                         # padded machines
+            slot_item = np.concatenate(
+                [slot_item, np.full((Mp - L, mu), -1, slot_item.dtype)])
+
+        def slot_block(w0: int, w1: int) -> np.ndarray:
+            return slot_item[w0:w1]
+
+    return slot_block
+
+
+def _round0_partition(kpart, n: int, L: int, mu: int,
+                      scheme: str) -> part_lib.Partition:
+    """Round-0 partition for the all-resident drivers.
+
+    ``dense`` is :func:`partition.balanced_partition` unchanged; ``feistel``
+    materializes the same keyed bijection the streaming path evaluates per
+    wave, so resident and streaming stay bit-identical under either scheme
+    (and the materialization doubles as the cross-check in tests).
+    """
+    if scheme != "feistel":
+        return part_lib.balanced_partition(kpart, n, L, cap=mu)
+    perm = FeistelPermutation.from_key(kpart, L * mu)
+    slot_item = feistel_slot_items(
+        perm, n, np.arange(L * mu, dtype=np.int64)).reshape(L, mu)
+    idx = jnp.asarray(slot_item)
+    return part_lib.Partition(idx, idx >= 0)
+
+
 def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
                    cfg: TreeConfig, mesh, fail_machines, wave_machines,
-                   best_rows, best_mask, best_val, total_calls):
+                   best_rows, best_mask, best_val, total_calls,
+                   constraint=None, attrs_np: np.ndarray | None = None):
     """Wave-scheduled round-0 ingestion: capacity-bounded replacement for
     ``gather_partition`` over an all-resident ground set.
 
     The virtual-location permutation assigns every item a (machine, slot)
-    exactly as :func:`repro.core.partition.balanced_partition` does; machine
-    blocks are then filled from the source and dispatched in waves of
-    W = mesh-device multiples, folding each wave's solutions into the
-    running best via :func:`_fold_round`.  Peak device footprint is
-    O(W·μ·d) candidate rows instead of O(n·d); for the same seed the
-    per-machine blocks, PRNG keys, fold order, and the union A_1 are
-    bit-identical to the all-resident dispatch.
+    exactly as :func:`repro.core.partition.balanced_partition` does (or via
+    the O(1)-state Feistel scheme, ``cfg.permutation="feistel"``); machine
+    blocks are then filled from the source — per-item attribute rows
+    re-gathered alongside and appended as trailing block columns — and
+    dispatched in waves of W = mesh-device multiples, folding each wave's
+    solutions into the running best via :func:`_fold_round`.  Peak device
+    footprint is O(W·μ·(d+a)) candidate rows instead of O(n·(d+a)); for the
+    same seed the per-machine blocks, PRNG keys, fold order, and the union
+    A_1 are bit-identical to the all-resident dispatch.
     """
     n, d, mu = source.n, source.d, cfg.capacity
+    a = 0
+    if constraint is not None:
+        a = attrs_np.shape[1] if attrs_np is not None else source.a
     ndev = mesh.devices.size if mesh is not None else 1
     # the full round's plan (padded count, key split, failure injection),
     # sliced per wave — machine i sees the same key and dead bit as in the
@@ -209,27 +290,36 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     W = wave_machines if wave_machines is not None else ndev
     W = min(Mp, math.ceil(W / ndev) * ndev)  # waves are device multiples
 
-    # host-side virtual-location assignment: item index per (machine, slot).
-    part = part_lib.balanced_partition(kpart, n, L, cap=mu)
-    slot_item = _host_array(part.idx)                       # (L, cap) int32
-    if Mp != L:                                             # padded machines
-        slot_item = np.concatenate(
-            [slot_item, np.full((Mp - L, mu), -1, slot_item.dtype)])
+    slot_block = _round0_slot_blocks(kpart, n, L, Mp, mu, cfg.permutation)
+
+    def gather_wave(idx_flat: np.ndarray):
+        """Rows (+ attrs when constrained) for one wave, a single source
+        pass: sequential sources must not be re-streamed once per matrix."""
+        if not a:
+            return source.gather(idx_flat), None
+        if attrs_np is not None:
+            return source.gather(idx_flat), attrs_np[idx_flat]
+        return source.gather_with_attrs(idx_flat)
 
     sol_rows, sol_mask = [], []
     v_round = jnp.float32(-jnp.inf)
     peak_rows = 0
     for w0 in range(0, Mp, W):
         w1 = min(w0 + W, Mp)
-        idx_w = slot_item[w0:w1]                            # (Wb, cap)
-        rows = source.gather(np.maximum(idx_w, 0).reshape(-1))
-        blocks = jnp.asarray(rows, jnp.float32).reshape(w1 - w0, mu, d)
+        idx_w = slot_block(w0, w1)                          # (Wb, cap)
+        idx_flat = np.maximum(idx_w, 0).reshape(-1)
+        rows, row_attrs = gather_wave(idx_flat)
+        if a:
+            rows = np.concatenate(
+                [np.asarray(rows, np.float32),
+                 np.asarray(row_attrs, np.float32)], axis=1)
+        blocks = jnp.asarray(rows, jnp.float32).reshape(w1 - w0, mu, d + a)
         bmask = jnp.asarray(idx_w >= 0)
         blocks = jnp.where(bmask[..., None], blocks, 0.0)
         peak_rows = max(peak_rows, (w1 - w0) * mu)
 
         res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1], dead[w0:w1],
-                               cfg, mesh)
+                               cfg, mesh, attr_dim=a, constraint=constraint)
         # sequential strict-improvement fold over waves == the one-shot
         # argmax over all Mp machines (lowest machine index on ties).
         best_rows, best_mask, best_val, total_calls, v_wave = _fold_round(
@@ -239,13 +329,35 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         sol_rows.append(res.sol_rows)
         sol_mask.append(res.sol_mask)
 
-    rows_in = jnp.concatenate(sol_rows).reshape(-1, d)      # union A_1
+    rows_in = jnp.concatenate(sol_rows).reshape(-1, d + a)  # union A_1
     mask_in = jnp.concatenate(sol_mask).reshape(-1)
     stats = IngestStats(
         wave_machines=W, waves=math.ceil(Mp / W), peak_wave_rows=peak_rows,
-        peak_wave_bytes=peak_rows * d * 4, total_machines=Mp)
+        peak_wave_bytes=peak_rows * (d + a) * 4, total_machines=Mp,
+        attr_dim=a)
     return (best_rows, best_mask, best_val, total_calls, v_round,
             rows_in, mask_in, stats)
+
+
+def _attr_setup(data, constraint, attrs, streaming: bool):
+    """Resolve the attribute plan: width ``a`` and a host ``(n, a)`` matrix
+    (or None when attrs flow through the source's gather_attrs)."""
+    if constraint is None:
+        assert attrs is None, "attrs without a constraint have no consumer"
+        return 0, None
+    need = cons_lib.attr_dim(constraint)
+    attrs_np = None if attrs is None else np.asarray(attrs, np.float32)
+    if attrs_np is not None:
+        assert attrs_np.ndim == 2, f"attrs must be (n, a), got {attrs_np.shape}"
+        a = attrs_np.shape[1]
+    elif streaming and isinstance(data, GroundSetSource):
+        a = data.a
+    else:
+        a = 0
+    assert a >= max(1, need), (
+        f"constraint needs attrs with ≥ {max(1, need)} columns, got {a} "
+        "(pass attrs= or an attributed source)")
+    return a, attrs_np
 
 
 def tree_maximize(
@@ -257,6 +369,8 @@ def tree_maximize(
     fail_machines: dict[int, list[int]] | None = None,  # round -> dead ids
     host_rounds: bool = False,
     wave_machines: int | None = None,   # streaming round-0 wave size W
+    constraint=None,                    # hereditary constraint (constraints.*)
+    attrs: np.ndarray | None = None,    # (n, a) per-item attribute rows
 ) -> TreeResult:
     """Run Algorithm 1. With ``mesh``, machines shard over devices.
 
@@ -269,6 +383,15 @@ def tree_maximize(
     same seed.  Rounds t ≥ 1 operate on A_t (≤ m_t·k rows) and are already
     capacity-bounded.
 
+    ``constraint`` applies a hereditary constraint from
+    :mod:`repro.core.constraints` to every machine's solve (Theorem 3.5).
+    Per-item attributes come from ``attrs`` (host ``(n, a)`` matrix) or an
+    attributed source; they are appended as trailing candidate-matrix
+    columns so rows and attributes move together through partitioning,
+    waves, repartitioning, folding, and checkpoints.  The returned coreset
+    carries ``sel_attrs`` and is verified feasible by the independent
+    NumPy checker before returning.
+
     Default is the device-resident round loop; ``host_rounds=True`` selects
     the legacy NumPy-between-rounds driver (identical results, kept as the
     comparison baseline).
@@ -280,17 +403,23 @@ def tree_maximize(
                              "arrays; pass the streaming source to the "
                              "default device driver")
         return _tree_maximize_host(obj, data, cfg, mesh=mesh,
-                                   fail_machines=fail_machines)
+                                   fail_machines=fail_machines,
+                                   constraint=constraint, attrs=attrs)
 
+    a, attrs_np = _attr_setup(data, constraint, attrs, streaming)
     source = as_source(data) if streaming else None
     n, d = (source.n, source.d) if streaming else data.shape
+    if not streaming and a:
+        # attributes ride as trailing columns of the resident candidate matrix
+        data = jnp.concatenate(
+            [jnp.asarray(data, jnp.float32), jnp.asarray(attrs_np)], axis=1)
     mu, k = cfg.capacity, cfg.k
     key = jax.random.PRNGKey(cfg.seed)
     fail_machines = fail_machines or {}
 
     # --- round 0 input: the full ground set, randomly partitioned ---------
     start_round = 0
-    best_rows = jnp.zeros((k, d), jnp.float32)
+    best_rows = jnp.zeros((k, d + a), jnp.float32)
     best_mask = jnp.zeros((k,), bool)
     best_val = jnp.float32(-jnp.inf)
     total_calls = jnp.int32(0)
@@ -326,12 +455,13 @@ def tree_maximize(
             (best_rows, best_mask, best_val, total_calls, v_best,
              rows_in, mask_in, ingest) = _stream_round0(
                 obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
-                wave_machines, best_rows, best_mask, best_val, total_calls)
+                wave_machines, best_rows, best_mask, best_val, total_calls,
+                constraint=constraint, attrs_np=attrs_np)
             round_values.append(_host_scalar(v_best))
         else:
             # ---- partition A_t into L balanced parts (virtual-location) --
             if t == 0:
-                part = part_lib.balanced_partition(kpart, n, L, cap=mu)
+                part = _round0_partition(kpart, n, L, mu, cfg.permutation)
                 blocks, bmask = part_lib.gather_partition(data, part)
             else:
                 blocks, bmask = part_lib.repartition_rows(
@@ -339,7 +469,8 @@ def tree_maximize(
 
             machines_per_round.append(blocks.shape[0])
             res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
-                                  fail_machines)
+                                  fail_machines, attr_dim=a,
+                                  constraint=constraint)
 
             best_rows, best_mask, best_val, total_calls, v_best = _fold_round(
                 res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
@@ -347,7 +478,7 @@ def tree_maximize(
             round_values.append(_host_scalar(v_best))
 
             # ---- union of partial solutions = next A (stays on device) ---
-            rows_in = res.sol_rows.reshape(-1, d)
+            rows_in = res.sol_rows.reshape(-1, d + a)
             mask_in = res.sol_mask.reshape(-1)
         t += 1
 
@@ -362,12 +493,29 @@ def tree_maximize(
         assert t <= r_bound + 1, (
             f"round bound violated: {t} > {r_bound} (Prop 3.1)")
 
-    return TreeResult(
-        sel_rows=_host_array(best_rows), sel_mask=_host_array(best_mask),
+    sel_wide = _host_array(best_rows)
+    sel_mask_np = _host_array(best_mask)
+    return _finish_result(
+        sel_wide, sel_mask_np, d, a, constraint,
         value=_host_scalar(best_val), rounds=t,
         oracle_calls=int(_host_scalar(total_calls)),
         machines_per_round=machines_per_round, round_values=round_values,
         ingest=ingest)
+
+
+def _finish_result(sel_wide: np.ndarray, sel_mask: np.ndarray, d: int,
+                   a: int, constraint, **kw) -> TreeResult:
+    """Split the carried wide rows back into (features, attrs) and verify
+    the coreset against the independent NumPy feasibility checker."""
+    sel_rows = sel_wide[:, :d] if a else sel_wide
+    sel_attrs = sel_wide[:, d:] if a else None
+    if constraint is not None:
+        ok, detail = cons_lib.check_feasible(
+            constraint, sel_attrs if a else np.zeros((len(sel_mask), 0)),
+            sel_mask)
+        assert ok, f"returned coreset violates the constraint: {detail}"
+    return TreeResult(sel_rows=sel_rows, sel_mask=sel_mask,
+                      sel_attrs=sel_attrs, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -382,14 +530,20 @@ def _tree_maximize_host(
     *,
     mesh=None,
     fail_machines: dict[int, list[int]] | None = None,
+    constraint=None,
+    attrs: np.ndarray | None = None,
 ) -> TreeResult:
     n, d = data.shape
+    a, attrs_np = _attr_setup(data, constraint, attrs, streaming=False)
+    if a:
+        data = jnp.concatenate(
+            [jnp.asarray(data, jnp.float32), jnp.asarray(attrs_np)], axis=1)
     mu, k = cfg.capacity, cfg.k
     key = jax.random.PRNGKey(cfg.seed)
     fail_machines = fail_machines or {}
 
     start_round = 0
-    best_rows = np.zeros((k, d), np.float32)
+    best_rows = np.zeros((k, d + a), np.float32)
     best_mask = np.zeros((k,), bool)
     best_val = -np.inf
     total_calls = 0
@@ -421,7 +575,7 @@ def _tree_maximize_host(
 
         # ---- partition A_t into L balanced parts (virtual-location) ------
         if t == 0:
-            part = part_lib.balanced_partition(kpart, n, L, cap=mu)
+            part = _round0_partition(kpart, n, L, mu, cfg.permutation)
             blocks, bmask = part_lib.gather_partition(data, part)
         else:
             valid = np.flatnonzero(mask_in)
@@ -431,7 +585,8 @@ def _tree_maximize_host(
 
         machines_per_round.append(blocks.shape[0])
         res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
-                              fail_machines)
+                              fail_machines, attr_dim=a,
+                              constraint=constraint)
 
         vals = np.asarray(res.values)
         calls = int(np.asarray(res.oracle_calls).sum())
@@ -444,7 +599,7 @@ def _tree_maximize_host(
             best_mask = np.asarray(res.sol_mask[i_best])
 
         # ---- union of partial solutions = next A ------------------------
-        rows_in = np.asarray(res.sol_rows).reshape(-1, d)
+        rows_in = np.asarray(res.sol_rows).reshape(-1, d + a)
         mask_in = np.asarray(res.sol_mask).reshape(-1)
         t += 1
 
@@ -457,7 +612,7 @@ def _tree_maximize_host(
         assert t <= r_bound + 1, (
             f"round bound violated: {t} > {r_bound} (Prop 3.1)")
 
-    return TreeResult(
-        sel_rows=best_rows, sel_mask=best_mask, value=best_val, rounds=t,
-        oracle_calls=total_calls, machines_per_round=machines_per_round,
-        round_values=round_values)
+    return _finish_result(
+        best_rows, best_mask, d, a, constraint,
+        value=best_val, rounds=t, oracle_calls=total_calls,
+        machines_per_round=machines_per_round, round_values=round_values)

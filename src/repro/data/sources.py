@@ -22,10 +22,15 @@ class ShardedSource(GroundSetSource):
 
     ``loaders[i]()`` returns shard i as a ``(shard_sizes[i], d)`` host
     array; nothing is loaded until a chunk iteration or gather needs it.
+    ``attr_loaders[i]()`` (optional) returns the matching ``(sizes[i], a)``
+    per-item attribute rows — same laziness, so constrained waves re-gather
+    ``(rows, attrs)`` pairs shard by shard.
     """
 
     def __init__(self, loaders: Sequence[Callable[[], np.ndarray]],
-                 shard_sizes: Sequence[int], d: int, dtype=np.float32):
+                 shard_sizes: Sequence[int], d: int, dtype=np.float32,
+                 attr_loaders: Sequence[Callable[[], np.ndarray]] | None = None,
+                 a: int = 0):
         assert len(loaders) == len(shard_sizes)
         self._loaders = list(loaders)
         self._sizes = [int(s) for s in shard_sizes]
@@ -33,19 +38,42 @@ class ShardedSource(GroundSetSource):
         self.n = int(self._starts[-1])
         self.d = int(d)
         self.dtype = np.dtype(dtype)
+        self._attr_loaders = None if attr_loaders is None else list(attr_loaders)
+        if self._attr_loaders is not None:
+            assert len(self._attr_loaders) == len(self._loaders)
+            assert a > 0, "attr_loaders need an explicit attr width a"
+        self.a = int(a) if self._attr_loaders is not None else 0
 
     @classmethod
-    def from_arrays(cls, arrays: Sequence[np.ndarray]) -> "ShardedSource":
+    def from_arrays(cls, arrays: Sequence[np.ndarray],
+                    attrs: Sequence[np.ndarray] | None = None) -> "ShardedSource":
         arrays = [np.asarray(a) for a in arrays]
+        attr_loaders, a = None, 0
+        if attrs is not None:
+            attrs = [np.asarray(x, np.float32) for x in attrs]
+            assert [len(x) for x in attrs] == [len(x) for x in arrays]
+            attr_loaders = [(lambda x=x: x) for x in attrs]
+            a = attrs[0].shape[1]
         return cls([(lambda a=a: a) for a in arrays],
                    [len(a) for a in arrays], arrays[0].shape[1],
-                   arrays[0].dtype)
+                   arrays[0].dtype, attr_loaders=attr_loaders, a=a)
 
     def iter_chunks(self, chunk_rows: int = 8192):
         for i, load in enumerate(self._loaders):
             rows = np.asarray(load())
             assert len(rows) == self._sizes[i], (i, len(rows), self._sizes[i])
             yield int(self._starts[i]), rows
+
+    def _attr_shard(self, i: int) -> np.ndarray:
+        if self._attr_loaders is None:
+            return np.zeros((self._sizes[i], 0), np.float32)
+        attrs = np.asarray(self._attr_loaders[i](), np.float32)
+        assert attrs.shape == (self._sizes[i], self.a), (i, attrs.shape)
+        return attrs
+
+    def iter_chunks_attrs(self, chunk_rows: int = 8192):
+        for i, (start, rows) in enumerate(self.iter_chunks(chunk_rows)):
+            yield start, rows, self._attr_shard(i)
 
     def gather(self, idx: np.ndarray) -> np.ndarray:
         idx = np.asarray(idx, np.int64).reshape(-1)
@@ -57,29 +85,74 @@ class ShardedSource(GroundSetSource):
             out[hit] = rows[idx[hit] - self._starts[i]]
         return out
 
+    def gather_attrs(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        out = np.zeros((idx.size, self.a), np.float32)
+        if self.a == 0:
+            return out
+        shard_of = np.searchsorted(self._starts, idx, side="right") - 1
+        for i in np.unique(shard_of):
+            hit = shard_of == i
+            out[hit] = self._attr_shard(i)[idx[hit] - self._starts[i]]
+        return out
+
+    def gather_with_attrs(self, idx: np.ndarray):
+        """One pass over the shards with hits, loading rows+attrs together."""
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        rows = np.zeros((idx.size, self.d), self.dtype)
+        attrs = np.zeros((idx.size, self.a), np.float32)
+        shard_of = np.searchsorted(self._starts, idx, side="right") - 1
+        for i in np.unique(shard_of):
+            hit = shard_of == i
+            local = idx[hit] - self._starts[i]
+            rows[hit] = np.asarray(self._loaders[i]())[local]
+            if self.a:
+                attrs[hit] = self._attr_shard(i)[local]
+        return rows, attrs
+
 
 def synthetic_sharded_source(n: int, d: int, shard_rows: int = 50_000,
                              seed: int = 0, n_clusters: int = 20,
-                             spread: float = 0.3) -> ShardedSource:
+                             spread: float = 0.3,
+                             attr_gen=None, a: int = 0) -> ShardedSource:
     """Deterministic clustered point-cloud source generated shard-by-shard.
 
     Each shard is a pure function of (seed, shard index) — the benchmark's
     stand-in for a pipeline read; no host buffer ever holds all n rows.
+
+    ``attr_gen(rng, rows) -> (rows, a)`` (optional) generates the per-item
+    attribute shard from the *same* per-shard rng stream position, so
+    attributes are as deterministic as the rows; declare the width ``a``.
     """
     centers = np.random.default_rng(seed).standard_normal(
         (n_clusters, d)).astype(np.float32)
 
+    def shard_rng(i: int):
+        return np.random.default_rng((seed, i))
+
     def make_loader(i: int, rows: int):
         def load():
-            r = np.random.default_rng((seed, i))
+            r = shard_rng(i)
             assign = r.integers(0, n_clusters, rows)
             return (centers[assign] + spread * r.standard_normal(
                 (rows, d)).astype(np.float32))
         return load
 
+    def make_attr_loader(i: int, rows: int):
+        def load():
+            r = shard_rng(i)
+            r.integers(0, n_clusters, rows)             # skip row stream
+            r.standard_normal((rows, d))
+            return np.asarray(attr_gen(r, rows), np.float32)
+        return load
+
     sizes = [min(shard_rows, n - s) for s in range(0, n, shard_rows)]
+    attr_loaders = None
+    if attr_gen is not None:
+        assert a > 0, "attr_gen needs an explicit attr width a"
+        attr_loaders = [make_attr_loader(i, sz) for i, sz in enumerate(sizes)]
     return ShardedSource([make_loader(i, sz) for i, sz in enumerate(sizes)],
-                         sizes, d)
+                         sizes, d, attr_loaders=attr_loaders, a=a)
 
 
 def lm_embedding_source(params, dcfg, n_batches: int,

@@ -40,6 +40,19 @@ Padding contract: candidate rows are zero-padded with availability 0 (never
 selected); ``E`` rows and ``cur_min`` are zero-padded so padded eval columns
 contribute ``max(0 - ||x||², 0) = 0`` exactly.  The gains normalisation uses
 the *unpadded* eval-set size.
+
+## Knapsack extension
+
+An optional per-candidate weight operand (``weights``/``budget``) encodes
+the one hereditary constraint with a fused-path representation: the running
+used-weight lives in one SMEM scalar, a step's candidates are masked to
+``used + w ≤ budget + KNAPSACK_TOL`` before the argmax, and the winner's
+weight is committed alongside the ``cur_min`` refresh.  Selection order,
+ties, and the failure step (no feasible candidate → -1 forever after) are
+bit-identical to the feasibility-masked step-wise scan; richer constraint
+classes (partition matroids, intersections) have step-dependent masks that
+do not reduce to a scalar and stay on the scan path (see
+``core/algorithms._fusable``).
 """
 from __future__ import annotations
 
@@ -53,9 +66,22 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30  # python float — jnp scalars would be captured consts in-kernel
 
 
-def _kernel(x_ref, e_ref, cm0_ref, av0_ref, sel_ref, cmout_ref,
-            cm_s, av_s, bv_s, bi_s, *, bn: int, m_true: int,
-            compute_dtype):
+def _knapsack_tol() -> float:
+    # single source of truth for the feasibility slack — a function-level
+    # import (like ref.py's) avoids the kernels↔core import cycle while
+    # guaranteeing the fused path can never drift from the scan path
+    from repro.core.constraints import KNAPSACK_TOL
+    return KNAPSACK_TOL
+
+
+def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
+            compute_dtype, budget: float | None, tol: float = 0.0):
+    if budget is not None:
+        (w_ref, sel_ref, cmout_ref,
+         cm_s, av_s, bv_s, bi_s, used_s) = rest
+    else:
+        w_ref = used_s = None
+        sel_ref, cmout_ref, cm_s, av_s, bv_s, bi_s = rest
     s = pl.program_id(0)
     i = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -65,6 +91,8 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, sel_ref, cmout_ref,
     def _init():
         cm_s[...] = cm0_ref[...]
         av_s[...] = av0_ref[...]
+        if budget is not None:
+            used_s[0] = 0.0
 
     # ---- gains for candidate block i against the resident eval set -------
     x = x_ref[pl.ds(i * bn, bn), :]                      # (bn, d)
@@ -84,7 +112,12 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, sel_ref, cmout_ref,
     g = jnp.sum(jnp.maximum(cm - d2, 0.0), axis=-1,
                 keepdims=True) / m_true                  # (bn, 1)
     av = av_s[pl.ds(i * bn, bn), :]                      # (bn, 1)
-    g = jnp.where(av > 0, g, NEG_INF)
+    if budget is not None:
+        w = w_ref[pl.ds(i * bn, bn), :]                  # (bn, 1)
+        feas = used_s[0] + w <= budget + tol
+        g = jnp.where((av > 0) & feas, g, NEG_INF)
+    else:
+        g = jnp.where(av > 0, g, NEG_INF)
 
     # ---- cross-block argmax via scratch accumulator ----------------------
     bmax = jnp.max(g)
@@ -116,6 +149,9 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, sel_ref, cmout_ref,
         cm_s[...] = jnp.where(ok, jnp.minimum(cur, d2b), cur)
         av_cur = av_s[pl.ds(bi, 1), :]
         av_s[pl.ds(bi, 1), :] = jnp.where(ok, jnp.zeros_like(av_cur), av_cur)
+        if budget is not None:
+            wv = w_ref[pl.ds(bi, 1), :]                  # (1, 1) winner weight
+            used_s[0] = jnp.where(ok, used_s[0] + wv[0, 0], used_s[0])
         sel_ref[0, 0] = jnp.where(ok, bi, jnp.int32(-1))
 
         @pl.when(s == ns - 1)
@@ -125,36 +161,52 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, sel_ref, cmout_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "bn", "m_true", "compute_dtype",
-                                    "interpret"))
+                                    "budget", "interpret"))
 def greedy_select_pallas(
     X: jax.Array,        # (n, d) candidates — n % bn == 0 (wrapper pads)
     E: jax.Array,        # (mp, d) eval set — zero-padded rows
     cur_min: jax.Array,  # (mp,)            — zero-padded
     avail: jax.Array,    # (n,) float32 1/0 — padded rows 0
+    weights: jax.Array | None = None,  # (n,) knapsack weights — padded rows 0
     *,
     k: int,
     bn: int = 256,
     m_true: int | None = None,
     compute_dtype=None,
+    budget: float | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     n, d = X.shape
     mp = E.shape[0]
     m_true = mp if m_true is None else m_true
     assert n % bn == 0, (n, bn)
+    assert (weights is None) == (budget is None), "weights and budget pair up"
     grid = (k, n // bn)
 
     kern = functools.partial(_kernel, bn=bn, m_true=m_true,
-                             compute_dtype=compute_dtype)
+                             compute_dtype=compute_dtype, budget=budget,
+                             tol=_knapsack_tol() if budget is not None else 0.0)
+    in_specs = [
+        pl.BlockSpec((n, d), lambda s, i: (0, 0)),   # X resident
+        pl.BlockSpec((mp, d), lambda s, i: (0, 0)),  # E resident
+        pl.BlockSpec((1, mp), lambda s, i: (0, 0)),  # cur_min seed
+        pl.BlockSpec((n, 1), lambda s, i: (0, 0)),   # availability seed
+    ]
+    scratch = [
+        pltpu.VMEM((1, mp), jnp.float32),            # running cur_min
+        pltpu.VMEM((n, 1), jnp.float32),             # availability
+        pltpu.SMEM((1,), jnp.float32),               # best value so far
+        pltpu.SMEM((1,), jnp.int32),                 # best index so far
+    ]
+    operands = [X, E, cur_min[None, :], avail[:, None]]
+    if budget is not None:
+        in_specs.append(pl.BlockSpec((n, 1), lambda s, i: (0, 0)))  # weights
+        scratch.append(pltpu.SMEM((1,), jnp.float32))    # used weight so far
+        operands.append(weights.astype(jnp.float32)[:, None])
     sel, cm = pl.pallas_call(
         kern,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((n, d), lambda s, i: (0, 0)),   # X resident
-            pl.BlockSpec((mp, d), lambda s, i: (0, 0)),  # E resident
-            pl.BlockSpec((1, mp), lambda s, i: (0, 0)),  # cur_min seed
-            pl.BlockSpec((n, 1), lambda s, i: (0, 0)),   # availability seed
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, 1), lambda s, i: (s, 0)),   # per-step selection
             pl.BlockSpec((1, mp), lambda s, i: (0, 0)),  # final cur_min
@@ -163,12 +215,7 @@ def greedy_select_pallas(
             jax.ShapeDtypeStruct((k, 1), jnp.int32),
             jax.ShapeDtypeStruct((1, mp), jnp.float32),
         ],
-        scratch_shapes=[
-            pltpu.VMEM((1, mp), jnp.float32),            # running cur_min
-            pltpu.VMEM((n, 1), jnp.float32),             # availability
-            pltpu.SMEM((1,), jnp.float32),               # best value so far
-            pltpu.SMEM((1,), jnp.int32),                 # best index so far
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
-    )(X, E, cur_min[None, :], avail[:, None])
+    )(*operands)
     return sel[:, 0], cm[0]

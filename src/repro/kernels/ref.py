@@ -52,7 +52,8 @@ def exemplar_gains(X: jax.Array, E: jax.Array, cur_min: jax.Array,
 
 def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
                   mask: jax.Array, k: int,
-                  compute_dtype=None) -> tuple[jax.Array, jax.Array]:
+                  compute_dtype=None, weights: jax.Array | None = None,
+                  budget: float | None = None) -> tuple[jax.Array, jax.Array]:
     """Fused k-step exemplar-clustering greedy selection (pure-jnp oracle).
 
     Runs the entire k-item greedy loop in one call and returns
@@ -67,26 +68,42 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
     uses the objective's difference form ``Σ(E - x)²``, in the same order.
     The distance matrix is contracted once up front (it is step-invariant),
     so per-step work drops from O(n·m·d) to O(n·m) — the fusion win.
+
+    ``weights``/``budget`` (both or neither) encode a knapsack constraint:
+    step t's candidates are the available items with
+    ``used + weights ≤ budget + KNAPSACK_TOL`` under the sequentially
+    accumulated fp32 ``used`` — exactly the feasibility test and update
+    order of ``constraints.Knapsack`` inside the step-wise scan.
     """
+    from repro.core.constraints import KNAPSACK_TOL
+
     n, _ = X.shape
     m = E.shape[0]
     d2 = _sqdist(X, E, compute_dtype)                 # (n, m), step-invariant
     neg_inf = jnp.float32(-1e30)
+    assert (weights is None) == (budget is None), "weights and budget pair up"
 
     def step(carry, _):
-        cm, avail = carry
+        cm, avail, used = carry
         g = jnp.sum(jnp.maximum(cm[None, :] - d2, 0.0), axis=-1) / m
-        g = jnp.where(avail, g, neg_inf)
+        if weights is None:
+            cand = avail
+        else:
+            cand = avail & (used + weights <= budget + KNAPSACK_TOL)
+        g = jnp.where(cand, g, neg_inf)
         best = jnp.argmax(g)                          # lowest index on ties
         ok = g[best] > neg_inf / 2
         x = X[best]
         d2b = jnp.sum((E - x[None, :]) ** 2, axis=-1)
         cm = jnp.where(ok, jnp.minimum(cm, d2b), cm)
+        if weights is not None:
+            used = jnp.where(ok, used + weights[best], used)
         avail = avail & ~(ok & (jnp.arange(n) == best))
         idx = jnp.where(ok, best.astype(jnp.int32), jnp.int32(-1))
-        return (cm, avail), idx
+        return (cm, avail, used), idx
 
-    (cur_min, _), sel_idx = jax.lax.scan(step, (cur_min, mask), None, length=k)
+    (cur_min, _, _), sel_idx = jax.lax.scan(
+        step, (cur_min, mask, jnp.float32(0.0)), None, length=k)
     return sel_idx, cur_min
 
 

@@ -4,6 +4,8 @@
         --dataset csn-20k --k 50 --capacity 400 \
         [--algorithm greedy|stochastic_greedy|threshold_greedy] \
         [--source resident|chunked|sharded] [--wave-machines W] \
+        [--constraint knapsack:budget=2.5 | partition:caps=4,4,4 | ...] \
+        [--permutation dense|feistel] \
         [--ckpt-dir DIR --resume] [--fail round:ids]
 
 Runs TREE-BASED COMPRESSION over all visible devices (machines sharded via
@@ -12,8 +14,19 @@ shard_map), reports value vs centralized greedy + rounds + oracle calls.
 ``--source chunked|sharded`` (or an explicit ``--wave-machines``) selects
 streaming round-0 ingestion: the ground set is read through a
 GroundSetSource and dispatched in capacity-bounded waves, so the device
-footprint is O(W·μ·d) instead of O(n·d) — output bit-identical to the
-resident path for the same seed.
+footprint is O(W·μ·(d+a)) instead of O(n·(d+a)) — output bit-identical to
+the resident path for the same seed.  ``--permutation feistel`` swaps the
+O(n) host slot permutation for the O(1)-state counter-based cipher.
+
+``--constraint`` applies a hereditary constraint to every machine's solve
+(grammar: ``knapsack:budget=F[:col=I]``, ``partition:caps=I,I,..[:col=I]``,
+``intersection:<spec>+<spec>``).  Per-item attributes are synthesized
+deterministically from ``--seed`` (uniform weights in [0.2, 1.0) for
+knapsack columns, uniform group ids for partition columns), travel with the
+rows through the whole pipeline, and both comparison columns — centralized
+greedy and two-round RandGreedI — run under the *same* constraint so the
+quality ratios stay honest.  Every reported coreset is re-verified by the
+independent NumPy feasibility checker.
 """
 from __future__ import annotations
 
@@ -23,10 +36,49 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ChunkedSource, ExemplarClustering, TreeConfig,
-                        centralized_greedy, make_submod_mesh, tree_maximize)
+from repro.core import (ChunkedSource, ExemplarClustering, Intersection,
+                        Knapsack, PartitionMatroid, TreeConfig,
+                        centralized_greedy, check_feasible,
+                        constraint_from_spec, make_submod_mesh, randgreedi,
+                        tree_maximize)
+from repro.core.tree import PERMUTATIONS
 from repro.data import datasets
 from repro.data.sources import ShardedSource
+
+
+def synth_attrs(constraint, n: int, seed: int) -> np.ndarray | None:
+    """Deterministic per-item attributes matching the constraint's columns.
+
+    Knapsack columns get uniform weights in [0.2, 1.0); partition columns
+    get uniform group ids in [0, len(caps)) — reproducible from ``--seed``
+    alone.  (The constrained benchmark generates its *own* shard-keyed
+    attribute streams so shards stay independently loadable; CLI runs and
+    ``BENCH_PR3.json`` sweeps are therefore not attribute-comparable.)
+    """
+    if constraint is None:
+        return None
+
+    def walk(c, cols: dict):
+        if isinstance(c, Intersection):
+            for p in c.parts:
+                walk(p, cols)
+        elif isinstance(c, (Knapsack, PartitionMatroid)):
+            kind = "w" if isinstance(c, Knapsack) else len(c.caps)
+            prev = cols.setdefault(c.col, kind)
+            assert prev == kind, f"column {c.col} reused with a different role"
+        return cols
+
+    cols = walk(constraint, {})
+    a = max(cols) + 1
+    r = np.random.default_rng((seed, 0xA7725))
+    attrs = np.zeros((n, a), np.float32)
+    for col in range(a):
+        kind = cols.get(col, "w")
+        if kind == "w":
+            attrs[:, col] = r.uniform(0.2, 1.0, n).astype(np.float32)
+        else:
+            attrs[:, col] = r.integers(0, kind, n).astype(np.float32)
+    return attrs
 
 
 def main():
@@ -47,6 +99,14 @@ def main():
                     help="streaming wave size W (default: one mesh sweep)")
     ap.add_argument("--chunk-rows", type=int, default=4096,
                     help="rows per chunk/shard for --source chunked|sharded")
+    ap.add_argument("--constraint", default=None,
+                    help="hereditary constraint spec, e.g. "
+                         "'knapsack:budget=2.5' or 'partition:caps=4,4,4'")
+    ap.add_argument("--permutation", default="dense", choices=PERMUTATIONS,
+                    help="round-0 slot scheme: dense host permutation or "
+                         "O(1)-state Feistel cipher")
+    ap.add_argument("--baseline-machines", type=int, default=None,
+                    help="RandGreedI machine count (default: ⌈n/μ⌉)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail", default=None,
@@ -60,42 +120,75 @@ def main():
     obj = ExemplarClustering(jnp.asarray(E))
     dj = jnp.asarray(data)
 
+    constraint = constraint_from_spec(args.constraint) if args.constraint else None
+    attrs = synth_attrs(constraint, len(data), args.seed)
+
     fail = None
     if args.fail:
         rd, ids = args.fail.split(":")
         fail = {int(rd): [int(i) for i in ids.split(",")]}
 
     if args.source == "chunked":
-        ground = ChunkedSource.from_array(data, args.chunk_rows)
+        ground = ChunkedSource.from_array(data, args.chunk_rows, attrs=attrs)
+        attrs_arg = None          # attrs flow through the source's gathers
     elif args.source == "sharded":
-        shards = [data[s:s + args.chunk_rows]
-                  for s in range(0, len(data), args.chunk_rows)]
-        ground = ShardedSource.from_arrays(shards)
+        cr = args.chunk_rows
+        shards = [data[s:s + cr] for s in range(0, len(data), cr)]
+        ashards = (None if attrs is None else
+                   [attrs[s:s + cr] for s in range(0, len(data), cr)])
+        ground = ShardedSource.from_arrays(shards, attrs=ashards)
+        attrs_arg = None
     else:
         ground = dj
+        attrs_arg = attrs
 
     mesh = make_submod_mesh()
     print(f"n={len(data)} d={data.shape[1]} k={args.k} mu={args.capacity} "
           f"devices={mesh.devices.size} alg={args.algorithm} "
-          f"source={args.source}")
+          f"source={args.source} permutation={args.permutation} "
+          f"constraint={args.constraint or 'none'}")
     cfg = TreeConfig(k=args.k, capacity=args.capacity,
                      algorithm=args.algorithm, eps=args.eps, seed=args.seed,
-                     checkpoint_dir=args.ckpt_dir, resume=args.resume)
+                     checkpoint_dir=args.ckpt_dir, resume=args.resume,
+                     permutation=args.permutation)
     res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
-                        wave_machines=args.wave_machines)
+                        wave_machines=args.wave_machines,
+                        constraint=constraint, attrs=attrs_arg)
     print(f"TREE: f={res.value:.6f} rounds={res.rounds} "
           f"machines/round={res.machines_per_round} "
           f"oracle_calls={res.oracle_calls}")
     if res.ingest is not None:
         ing = res.ingest
+        width = data.shape[1] + ing.attr_dim
         print(f"ingest: W={ing.wave_machines} waves={ing.waves} "
               f"peak_wave_rows={ing.peak_wave_rows} "
-              f"peak_wave_bytes={ing.peak_wave_bytes} "
-              f"(resident would hold {len(data) * data.shape[1] * 4} bytes)")
+              f"peak_wave_bytes={ing.peak_wave_bytes} attr_dim={ing.attr_dim} "
+              f"(resident would hold {len(data) * width * 4} bytes)")
+    if constraint is not None:
+        ok, detail = check_feasible(constraint, res.sel_attrs, res.sel_mask)
+        print(f"feasibility: {'OK' if ok else 'VIOLATED'} ({detail})")
+        assert ok
     if not args.no_centralized:
-        cg = centralized_greedy(obj, dj, args.k)
-        print(f"centralized greedy: f={float(cg.value):.6f} "
+        cg = centralized_greedy(obj, dj, args.k, constraint=constraint,
+                                attrs=attrs)
+        print(f"centralized greedy{' (constrained)' if constraint else ''}: "
+              f"f={float(cg.value):.6f} "
               f"(TREE at {res.value / float(cg.value):.2%})")
+        m_base = args.baseline_machines or max(
+            1, -(-len(data) // args.capacity))
+        rg = randgreedi(obj, ground if args.source != "resident" else dj,
+                        args.k, m_base, jax.random.PRNGKey(args.seed),
+                        constraint=constraint,
+                        attrs=attrs if args.source == "resident" else None)
+        if constraint is not None:
+            ok, detail = check_feasible(constraint,
+                                        np.asarray(rg.sel_attrs),
+                                        np.asarray(rg.sel_mask))
+            assert ok, detail
+        print(f"randgreedi (m={m_base}"
+              f"{', constrained' if constraint else ''}): "
+              f"f={float(rg.value):.6f} "
+              f"(TREE at {res.value / float(rg.value):.2%})")
 
 
 if __name__ == "__main__":
