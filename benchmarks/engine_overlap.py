@@ -1,0 +1,118 @@
+"""Async execution engine benchmark (PR 4): gather/solve overlap + multi-
+host sharded ingestion vs the synchronous single-host reference.
+
+Round-0 wall clock under the synchronous engine is Σ(gather) + Σ(solve) by
+construction; the pipelined engine double-buffers so the bound becomes
+g₀ + max(Σgather, Σsolve) — the achievable saving is min(Σg, Σs), i.e. a
+fraction gather/(gather+solve) of the sync wall when gather ≤ solve (see
+PERF.md §PR4).
+
+Two gather profiles, measured separately because they behave differently
+on a CPU backend:
+
+  * ``io`` — per-shard loads stall ``io_latency_s`` (a sleep: no core, no
+    GIL — exactly like blocking storage/network reads).  This is the
+    regime pipelining targets; the wall-clock win is asserted here, and
+    multi-host sharding additionally divides the per-wave stall across
+    hosts' parallel reads.
+  * ``compute`` — loads regenerate shards with host RNG (CPU-bound).  On
+    this CPU-backend container the prefetch thread competes with the XLA
+    solve for the same cores, so overlap is recorded but a wall win is
+    *not* asserted; on an accelerator backend the solve occupies the
+    device, host cores are free, and this profile behaves like ``io``.
+
+Every cell of the {engine} × {hosts} × {profile} sweep is checked
+bit-identical to the synchronous single-host reference.  Record lands in
+``BENCH_PR4.json`` via ``benchmarks/run.py --only engine``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import ExemplarClustering, TreeConfig, tree_maximize
+from repro.data.sources import synthetic_sharded_source
+
+
+def _run_one(n, d, k, mu, wave, engine, hosts, io_latency_s=0.0, seed=0):
+    src = synthetic_sharded_source(n=n, d=d, shard_rows=max(2048, n // 24),
+                                   seed=0, io_latency_s=io_latency_s)
+    rng = np.random.default_rng(0)
+    ev = synthetic_sharded_source(n=n, d=d, shard_rows=max(2048, n // 24),
+                                  seed=0).gather(
+        rng.choice(n, 256, replace=False))
+    obj = ExemplarClustering(jnp.asarray(ev))
+    cfg = TreeConfig(k=k, capacity=mu, seed=seed, engine=engine, hosts=hosts)
+    with Timer() as t:
+        res = tree_maximize(obj, src, cfg, wave_machines=wave)
+    es = res.engine_stats
+    return res, {
+        "engine": engine, "hosts": hosts, **es.summary(),
+        "total_sec": round(t.s, 3),
+        "value": float(res.value), "oracle_calls": res.oracle_calls,
+        "peak_wave_bytes": res.ingest.peak_wave_bytes,
+        "ingest_wall_s": round(res.ingest.wall_seconds, 4),
+        "ingest_total_bytes": res.ingest.total_bytes,
+    }
+
+
+def run(quick: bool = True):
+    n = 120_000 if quick else 1_000_000
+    d, k, mu, wave = 16, 16, 500, 8
+    io_latency = 0.02           # 20 ms per shard read ≈ remote object store
+
+    # warm the jit caches at the exact sweep shape (round-0 wave blocks AND
+    # the later-round repartition shapes) so no sweep cell pays
+    # compilation and the engine columns compare wall-clock, not compile
+    ref, _ = _run_one(n, d, k, mu, wave, "sync", 1)
+
+    print("engine: profile,mode,hosts,waves,wall_s,gather_s,solve_s,"
+          "overlap,bytes,total_sec,value")
+    rows, results = [], {}
+    for profile, lat in (("io", io_latency), ("compute", 0.0)):
+        for engine in ("sync", "pipelined"):
+            for hosts in (1, 2):
+                res, rec = _run_one(n, d, k, mu, wave, engine, hosts,
+                                    io_latency_s=lat)
+                rec["profile"] = profile
+                results[(profile, engine, hosts)] = (res, rec)
+                rows.append(rec)
+                print(f"engine,{profile},{engine},{hosts},{rec['waves']},"
+                      f"{rec['wall_s']},{rec['gather_s']},{rec['solve_s']},"
+                      f"{rec['overlap_ratio']},{rec['bytes_moved']},"
+                      f"{rec['total_sec']},{rec['value']:.6f}")
+                assert res.value == ref.value, (profile, engine, hosts)
+                assert np.array_equal(res.sel_rows, ref.sel_rows)
+                assert res.oracle_calls == ref.oracle_calls
+    print("engine,bit-identity,8-way,OK")
+
+    pipe = results[("io", "pipelined", 1)][1]
+    sync = results[("io", "sync", 1)][1]
+    # the acceptance claims, in the latency-bound regime the engine
+    # targets: measured overlap > 0, wall no worse than sync (10% slack)
+    assert pipe["overlap_ratio"] > 0.0, pipe
+    assert pipe["wall_s"] <= sync["wall_s"] * 1.10, (pipe, sync)
+    bound = sync["gather_s"] / max(sync["gather_s"] + sync["solve_s"], 1e-9)
+    saving = (sync["wall_s"] - pipe["wall_s"]) / sync["wall_s"]
+    print(f"engine,overlap-model,bound={bound:.3f},"
+          f"measured_saving={saving:.3f}")
+
+    return {
+        "shape": {"n": n, "d": d, "k": k, "mu": mu, "wave_machines": wave,
+                  "io_latency_s": io_latency},
+        "runs": rows,
+        "bit_identical_8way": True,
+        "overlap_ratio_pipelined_io": pipe["overlap_ratio"],
+        "overlap_model_bound_io": round(bound, 4),
+        "io_sync_wall_s": sync["wall_s"],
+        "io_pipelined_wall_s": pipe["wall_s"],
+        "io_measured_saving": round(saving, 4),
+        "compute_profile_note": (
+            "CPU backend shares cores between prefetch and solve; overlap "
+            "ratio recorded, wall win expected on accelerator backends"),
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -9,11 +9,13 @@
   kernels  — kernel micro-benchmarks + traffic models
   tree     — streaming-ingestion scaling sweep            (PR 2)
   constrained — hereditary-constraint streaming sweep     (PR 3)
+  engine   — async engine overlap + multi-host ingestion  (PR 4)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
-``BENCH_PR3.json``; everything else goes to ``BENCH_PR1.json`` (repo
-root).  ``--only constrained`` is the PR 3 refresh.
+``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``; everything
+else goes to ``BENCH_PR1.json`` (repo root).  ``--only engine`` is the
+PR 4 refresh.
 """
 import argparse
 import json
@@ -25,6 +27,7 @@ _ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), os.pardir)
 BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
 BENCH_PR2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 BENCH_PR3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
+BENCH_PR4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 
 
 def main() -> None:
@@ -35,8 +38,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (constrained_tree, fault_tolerance_bench,
-                            fig2_capacity, fig2_large_scale, kernel_bench,
+    from benchmarks import (constrained_tree, engine_overlap,
+                            fault_tolerance_bench, fig2_capacity,
+                            fig2_large_scale, kernel_bench,
                             table1_complexity, table3_relative_error,
                             tree_scaling)
     suites = {
@@ -48,10 +52,12 @@ def main() -> None:
         "kernels": kernel_bench.run,
         "tree": tree_scaling.run,
         "constrained": constrained_tree.run,
+        "engine": engine_overlap.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
-               "constrained": (BENCH_PR3_JSON, 3)}
+               "constrained": (BENCH_PR3_JSON, 3),
+               "engine": (BENCH_PR4_JSON, 4)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

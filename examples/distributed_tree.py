@@ -7,7 +7,10 @@ mid-run and show the algorithm completes with negligible quality loss
 (Lemma 3.4 graceful degradation), then restart from a round checkpoint.
 Then the same run repeats with streaming round-0 ingestion — the ground
 set reachable only as a chunked host stream, machine blocks dispatched in
-waves of 8 — and reproduces the healthy run bit-for-bit.
+waves of 8 — and reproduces the healthy run bit-for-bit; then once more
+through the asynchronous execution engine (``engine="pipelined"``,
+``hosts=2``): prefetched double-buffered waves, the gather sharded across
+two emulated ingestion hosts, still bit-identical.
 
 ## Hereditary constraints
 
@@ -90,6 +93,23 @@ ing = stream.ingest
 print(f"streaming ingestion: {stream.value / cent:.2%} (bit-identical), "
       f"peak {ing.peak_wave_rows} rows/wave on device vs {len(data)} resident "
       f"({ing.waves} waves of {ing.wave_machines} machines)")
+
+# async execution engine: the same waves, but wave t+1's gather (source
+# reads + block assembly, on a prefetch thread) overlaps wave t's solve,
+# and the gather itself is sharded across 2 emulated ingestion hosts —
+# each host serves only the item range it owns (locality asserted inside).
+# Engines are pure execution policy: output is bit-identical to the
+# synchronous run above, failure injection and checkpointing included.
+piped = tree_maximize(obj, ChunkedSource.from_array(data, 1024),
+                      TreeConfig(k=k, capacity=200, seed=0,
+                                 engine="pipelined", hosts=2),
+                      mesh=mesh, wave_machines=8)
+assert piped.value == healthy.value, (piped.value, healthy.value)
+es = piped.engine_stats
+print(f"pipelined engine (2 ingestion hosts): bit-identical, "
+      f"{es.waves} waves, gather {es.gather_s:.3f}s / solve {es.solve_s:.3f}s, "
+      f"overlap ratio {es.overlap_ratio:.1%}, "
+      f"≤ {es.max_in_flight} wave buffers in flight")
 
 # hereditary constraints: budgeted + per-group-quota selection, streamed.
 # Attributes (weight, group id) ride as trailing columns of every block;

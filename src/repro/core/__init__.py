@@ -3,7 +3,8 @@ maximization (tree-based compression with beta-nice subprocedures)."""
 from repro.core.algorithms import (SelectResult, greedy, run_algorithm,
                                    stochastic_greedy, threshold_greedy)
 from repro.core.baselines import (BaselineResult, centralized_greedy,
-                                  randgreedi, random_subset)
+                                  randgreedi, random_subset,
+                                  streaming_centralized_greedy)
 from repro.core.constraints import (Intersection, Knapsack, PartitionMatroid,
                                     Unconstrained, attr_dim, check_feasible,
                                     constraint_from_spec)
@@ -13,18 +14,22 @@ from repro.core.objectives import (ActiveSetSelection, ExemplarClustering,
 from repro.core.partition import balanced_partition, gather_partition, n_parts
 from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import (ArraySource, ChunkedSource, GroundSetSource,
-                                as_source)
+                                SlicedSource, as_source, prefetch_chunks)
 from repro.core.tree import IngestStats, TreeConfig, TreeResult, tree_maximize
+from repro.engine import EngineConfig, EngineStats, IngestionPlan
 
 __all__ = [
     "SelectResult", "greedy", "stochastic_greedy", "threshold_greedy",
     "run_algorithm", "BaselineResult", "centralized_greedy", "randgreedi",
-    "random_subset", "Unconstrained", "Knapsack", "PartitionMatroid",
+    "random_subset", "streaming_centralized_greedy",
+    "Unconstrained", "Knapsack", "PartitionMatroid",
     "Intersection", "attr_dim", "check_feasible", "constraint_from_spec",
     "RoundResult", "make_submod_mesh", "run_round",
     "ActiveSetSelection", "ExemplarClustering", "FacilityLocation",
     "WeightedCoverage", "balanced_partition", "gather_partition", "n_parts",
     "FeistelPermutation", "feistel_slot_items",
-    "ArraySource", "ChunkedSource", "GroundSetSource", "as_source",
+    "ArraySource", "ChunkedSource", "GroundSetSource", "SlicedSource",
+    "as_source", "prefetch_chunks",
+    "EngineConfig", "EngineStats", "IngestionPlan",
     "IngestStats", "TreeConfig", "TreeResult", "tree_maximize",
 ]

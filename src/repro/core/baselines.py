@@ -11,6 +11,7 @@ streaming TREE column (bit-identical to the array path for the same key).
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple
 
@@ -19,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import algorithms, partition as part_lib
-from repro.core.sources import GroundSetSource
+from repro.core.sources import GroundSetSource, prefetch_chunks
 
 
 class BaselineResult(NamedTuple):
@@ -29,9 +30,22 @@ class BaselineResult(NamedTuple):
     sel_attrs: jax.Array | None = None
 
 
-def centralized_greedy(obj, data: jax.Array, k: int, *,
-                       constraint=None, attrs=None) -> BaselineResult:
-    """GREEDY on the full ground set (μ ≥ n regime; 1 - 1/e)."""
+def centralized_greedy(obj, data, k: int, *, constraint=None, attrs=None,
+                       chunk_rows: int = 8192) -> BaselineResult:
+    """GREEDY on the full ground set (μ ≥ n regime; 1 - 1/e).
+
+    ``data`` may be an all-resident ``(n, d)`` array (legacy path) or any
+    :class:`GroundSetSource` — the source path runs the *chunked lazy*
+    pass (:func:`streaming_centralized_greedy`), so the centralized
+    comparison column no longer forces the one array the streaming TREE
+    column exists to avoid.  Bit-identical to the resident path on
+    resident-sized inputs.
+    """
+    if isinstance(data, GroundSetSource):
+        return streaming_centralized_greedy(obj, data, k,
+                                            constraint=constraint,
+                                            attrs=attrs,
+                                            chunk_rows=chunk_rows)
     n = data.shape[0]
     attrs_j = None if attrs is None else jnp.asarray(attrs, jnp.float32)
     res = algorithms.greedy(obj, data, jnp.ones((n,), bool), k,
@@ -42,6 +56,122 @@ def centralized_greedy(obj, data: jax.Array, k: int, *,
     if attrs_j is not None:
         sel_attrs = jnp.where(res.sel_mask[:, None], attrs_j[safe], 0.0)
     return BaselineResult(rows, res.sel_mask, res.value, sel_attrs)
+
+
+@functools.partial(jax.jit, static_argnames=("constraint",))
+def _chunk_scan(obj, state, rows, cand, cstate, chunk_attrs,
+                constraint=None):
+    """Best (gain, local index) of one candidate chunk under the running
+    objective + constraint state — the per-chunk oracle of the lazy pass.
+
+    Exactly the ops the resident scan applies to these rows: feasibility
+    mask, then ``obj.gains`` on the masked chunk, then lowest-index argmax
+    — so per-row gain bits match the all-resident evaluation (row-wise
+    objectives compute each row's gain independently of the block shape).
+    ``constraint`` is static (hashable frozen dataclass, same convention
+    as the round dispatch).
+    """
+    if constraint is not None:
+        cand = cand & constraint.feasible(cstate, chunk_attrs)
+    g = obj.gains(state, rows, cand)
+    j = jnp.argmax(g)                                  # lowest index on ties
+    return g[j], j
+
+
+def streaming_centralized_greedy(obj, source: GroundSetSource, k: int, *,
+                                 constraint=None, attrs=None,
+                                 chunk_rows: int = 8192) -> BaselineResult:
+    """Centralized lazy greedy over a chunk-streamable ground set.
+
+    Classic greedy needs all n marginal gains per step; this pass streams
+    the source in chunks and keeps one *upper bound* per chunk (its best
+    gain when last evaluated).  Submodularity makes per-item gains — and
+    hereditary feasibility masks — monotone non-increasing as the solution
+    grows, so a chunk whose bound does not beat the current step's best is
+    skipped without evaluating its gains (the lazy-greedy argument at
+    chunk granularity).  Host memory is O(chunk + k) rows, device memory
+    O(chunk) rows, and the selection, value, and attribute rows are
+    bit-identical to the resident path on resident-sized inputs: chunks
+    are visited in index order with strict-improvement comparison, which
+    reproduces global lowest-index tie-breaking, and row-wise gain bits
+    don't depend on the block they're evaluated in.
+
+    Requires a row-wise objective (``obj.rowwise_gains`` — gains and state
+    must not depend on block positions), which all streaming-capable
+    objectives in :mod:`repro.core.objectives` are.
+    """
+    assert getattr(obj, "rowwise_gains", False), (
+        "streaming centralized greedy needs a row-wise objective "
+        "(gains independent of block position)")
+    d = source.d
+    attrs_np = None if attrs is None else np.asarray(attrs, np.float32)
+    a = 0
+    if constraint is not None:
+        a = attrs_np.shape[1] if attrs_np is not None else source.a
+        assert a > 0, "constraint needs attrs (pass attrs= or an attributed source)"
+    use_cons = constraint is not None
+
+    # objective/constraint state lives outside any block: init from a dummy
+    # row (row-wise objectives ignore the block operand in init_state)
+    state = obj.init_state(jnp.zeros((1, d), jnp.float32),
+                           jnp.ones((1,), bool))
+    cstate = constraint.init_state() if use_cons else None
+
+    bounds: dict[int, float] = {}            # chunk start -> stale max gain
+    taken: list[int] = []                    # selected global indices
+    sel_rows = np.zeros((k, d), np.float32)
+    sel_attrs = np.zeros((k, a), np.float32)
+    sel_mask = np.zeros((k,), bool)
+
+    def chunk_iter():
+        # background-thread chunk prefetch: the next chunk's source read
+        # overlaps this chunk's gain evaluation (repro.engine-style async
+        # at the baseline's scale — order and content are unchanged)
+        if a and attrs_np is None:
+            yield from prefetch_chunks(source, chunk_rows, with_attrs=True)
+        else:
+            for start, rows in prefetch_chunks(source, chunk_rows):
+                yield start, rows, (attrs_np[start:start + len(rows)]
+                                    if a else None)
+
+    for t in range(k):
+        best_g, best_idx = -np.inf, -1
+        best_row, best_attr = None, None
+        for start, rows, chunk_attrs in chunk_iter():
+            if bounds.get(start, np.inf) <= best_g:
+                continue                     # lazily skipped, bound stale-safe
+            cand = np.ones((len(rows), ), bool)
+            for g_idx in taken:              # k tiny — mask selected items
+                if start <= g_idx < start + len(rows):
+                    cand[g_idx - start] = False
+            ca = (jnp.asarray(chunk_attrs) if use_cons
+                  else jnp.zeros((len(rows), 1), jnp.float32))
+            g_j, j = _chunk_scan(
+                obj, state, jnp.asarray(rows, jnp.float32),
+                jnp.asarray(cand), cstate, ca, constraint=constraint)
+            g_j = float(g_j)
+            bounds[start] = g_j              # the chunk's (fresh) max gain
+            if g_j > best_g:                 # strict > keeps lowest index
+                best_g, best_idx = g_j, start + int(j)
+                best_row = np.asarray(rows[int(j)], np.float32).copy()
+                best_attr = (np.asarray(chunk_attrs[int(j)], np.float32)
+                             .copy() if a else None)
+        if best_idx < 0 or best_g <= algorithms.NEG_INF / 2:
+            break                            # no feasible candidate remains
+        row_j = jnp.asarray(best_row)[None, :]
+        state = obj.update(state, row_j, 0)
+        if use_cons:
+            cstate = constraint.update(
+                cstate, jnp.asarray(best_attr)[None, :], 0)
+        taken.append(best_idx)
+        sel_rows[t], sel_mask[t] = best_row, True
+        if a:
+            sel_attrs[t] = best_attr
+
+    value = obj.value(state)
+    return BaselineResult(jnp.asarray(sel_rows), jnp.asarray(sel_mask),
+                          value,
+                          jnp.asarray(sel_attrs) if a else None)
 
 
 def random_subset(obj, data: jax.Array, k: int, key: jax.Array) -> BaselineResult:

@@ -129,3 +129,21 @@ def shard_round_inputs(mesh: Mesh, blocks, bmask, keys):
     spec = NamedSharding(mesh, P("machines"))
     return (jax.device_put(blocks, spec), jax.device_put(bmask, spec),
             jax.device_put(keys, spec))
+
+
+def stage_wave_inputs(mesh: Mesh | None, blocks_np, bmask_np):
+    """Host→device staging of one ingestion wave's gathered buffers.
+
+    The async engine produces waves as host numpy (gather runs on a
+    prefetch thread that must not touch JAX); this is the single explicit
+    upload boundary where those buffers become device arrays — placed
+    with the machine axis sharded over the mesh when one is given, so the
+    copy lands directly in the round layout instead of being replicated
+    and re-sharded at dispatch.  Once it returns, the host buffers are
+    dead and the engine may release their in-flight credit (the
+    backpressure accounting in :mod:`repro.engine.scheduler`).
+    """
+    if mesh is None:
+        return jnp.asarray(blocks_np), jnp.asarray(bmask_np)
+    spec = NamedSharding(mesh, P("machines"))
+    return jax.device_put(blocks_np, spec), jax.device_put(bmask_np, spec)

@@ -30,6 +30,8 @@ without ever materializing either matrix in full.
 """
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Callable, Iterator, Tuple
 
 import jax.numpy as jnp
@@ -43,6 +45,11 @@ class GroundSetSource:
     d: int
     a: int = 0              # per-item attribute width (0 = no attrs)
     dtype: np.dtype
+    # May gather() run concurrently from multiple threads?  The built-in
+    # sources are stateless per call (fresh chunk iterators, lazy loaders),
+    # so yes; a source wrapping a shared non-reentrant reader sets False and
+    # the multi-host planner falls back to sequential per-host gathers.
+    supports_concurrent_gather: bool = True
 
     def iter_chunks(self, chunk_rows: int = 8192) -> Iterator[Tuple[int, np.ndarray]]:
         """Yield ``(start, rows)`` covering items [0, n) in index order.
@@ -123,6 +130,23 @@ class GroundSetSource:
         """Full (n, a) host attr matrix — tests/small references only."""
         return np.concatenate([a for _, _, a in self.iter_chunks_attrs()],
                               axis=0)
+
+    # -- multi-host ingestion hooks (repro.engine.planner) -----------------
+
+    def host_split_points(self, hosts: int) -> list[int]:
+        """Split ``[0, n)`` into ``hosts`` contiguous host-owned ranges.
+
+        Returns ``hosts + 1`` monotone bounds starting at 0 and ending at
+        ``n``.  The default splits near-equally; shard-backed sources
+        override to align bounds with their native shard boundaries so a
+        lazy shard loader belongs to exactly one ingestion host.
+        """
+        assert 1 <= hosts <= self.n, (hosts, self.n)
+        return [round(p * self.n / hosts) for p in range(hosts + 1)]
+
+    def slice(self, lo: int, hi: int) -> "SlicedSource":
+        """A host-local view of items ``[lo, hi)`` (global index addressing)."""
+        return SlicedSource(self, lo, hi)
 
 
 def _as_attrs(attrs) -> np.ndarray:
@@ -219,6 +243,114 @@ class ChunkedSource(GroundSetSource):
             yield start, rows, attrs
             start += len(rows)
         assert start == self.n, f"chunk stream yielded {start} rows, n={self.n}"
+
+
+class SlicedSource(GroundSetSource):
+    """A contiguous ``[lo, hi)`` window of a parent source — the "local
+    shard" view one ingestion host owns in the multi-host planner.
+
+    Indices stay *global*: a gather accepts exactly the indices the host
+    owns and **asserts** every request falls inside ``[lo, hi)``.  In the
+    single-process emulation the parent is shared, but the assertion is the
+    locality contract a real multi-process deployment relies on (a host can
+    only serve rows it physically has) — CI runs with it enforced.  Gathers
+    delegate to the parent, so shard-lazy parents still touch only the
+    shards the request hits.
+    """
+
+    def __init__(self, parent: GroundSetSource, lo: int, hi: int):
+        assert 0 <= lo < hi <= parent.n, (lo, hi, parent.n)
+        self._parent = parent
+        self.lo, self.hi = int(lo), int(hi)
+        self.n = parent.n                 # global addressing preserved
+        self.d, self.a = parent.d, parent.a
+        self.dtype = parent.dtype
+        self.supports_concurrent_gather = parent.supports_concurrent_gather
+
+    @property
+    def local_n(self) -> int:
+        return self.hi - self.lo
+
+    def _check_local(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        assert idx.size == 0 or (
+            idx.min() >= self.lo and idx.max() < self.hi), (
+            f"non-local gather: host owns [{self.lo}, {self.hi}), got "
+            f"indices in [{idx.min()}, {idx.max()}]")
+        return idx
+
+    def iter_chunks(self, chunk_rows: int = 8192):
+        for start, rows in self._parent.iter_chunks(chunk_rows):
+            s, e = max(start, self.lo), min(start + len(rows), self.hi)
+            if s < e:
+                yield s, rows[s - start:e - start]
+
+    def iter_chunks_attrs(self, chunk_rows: int = 8192):
+        for start, rows, attrs in self._parent.iter_chunks_attrs(chunk_rows):
+            s, e = max(start, self.lo), min(start + len(rows), self.hi)
+            if s < e:
+                yield s, rows[s - start:e - start], attrs[s - start:e - start]
+
+    def gather(self, idx: np.ndarray) -> np.ndarray:
+        return self._parent.gather(self._check_local(idx))
+
+    def gather_attrs(self, idx: np.ndarray) -> np.ndarray:
+        return self._parent.gather_attrs(self._check_local(idx))
+
+    def gather_with_attrs(self, idx: np.ndarray):
+        return self._parent.gather_with_attrs(self._check_local(idx))
+
+
+def prefetch_chunks(source: GroundSetSource, chunk_rows: int = 8192, *,
+                    depth: int = 2, with_attrs: bool = False) -> Iterator:
+    """Async-capable chunk iteration: background-thread chunk prefetch.
+
+    Yields exactly what ``iter_chunks`` / ``iter_chunks_attrs`` would, in
+    the same order, but the *next* chunk is being read by a daemon thread
+    while the caller processes the current one — so chunk-sequential
+    consumers (the streaming centralized lazy-greedy pass in
+    :mod:`repro.core.baselines` is the in-tree one) overlap source I/O
+    with compute without touching the source contract.  ``depth`` bounds
+    the number of prefetched chunks held at once (backpressure); producer
+    exceptions re-raise at the consumer.
+    """
+    assert depth >= 1, depth
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    DONE = object()
+    abandoned = threading.Event()      # consumer dropped the generator
+
+    def _put(item) -> bool:
+        while not abandoned.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def produce():
+        try:
+            it = (source.iter_chunks_attrs(chunk_rows) if with_attrs
+                  else source.iter_chunks(chunk_rows))
+            for item in it:
+                if not _put(item):
+                    return
+            _put(DONE)
+        except BaseException as exc:   # surfaced on the consumer thread
+            _put(exc)
+
+    threading.Thread(target=produce, daemon=True,
+                     name="chunk-prefetch").start()
+    try:
+        while True:
+            item = q.get()
+            if item is DONE:
+                return
+            if isinstance(item, BaseException):
+                raise item
+            yield item
+    finally:
+        abandoned.set()
 
 
 def as_source(data, attrs=None) -> GroundSetSource:

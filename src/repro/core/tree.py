@@ -45,9 +45,14 @@ import numpy as np
 
 from repro.core import constraints as cons_lib
 from repro.core import partition as part_lib
-from repro.core.distributed import RoundResult, run_round, shard_round_inputs
+from repro.core.distributed import (RoundResult, run_round,
+                                    shard_round_inputs, stage_wave_inputs)
 from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import ArraySource, GroundSetSource, as_source
+from repro.engine.planner import IngestionPlan
+from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
+                                    run_waves)
+from repro.engine.stats import EngineStats
 
 PERMUTATIONS = ("dense", "feistel")
 
@@ -62,11 +67,20 @@ class TreeConfig:
     checkpoint_dir: str | None = None
     resume: bool = False
     permutation: str = "dense"         # round-0 slot scheme: dense | feistel
+    engine: str = "sync"               # round-0 wave engine: sync | pipelined
+    hosts: int = 1                     # ingestion hosts sharding the gather
+    max_in_flight: int = 2             # pipelined host wave buffers (≥ 2)
+    capacity_bytes: int | None = None  # device-byte wave budget (derives W)
 
     def __post_init__(self):
         assert self.capacity > self.k, (
             f"paper requires μ > k (got μ={self.capacity}, k={self.k})")
         assert self.permutation in PERMUTATIONS, self.permutation
+        assert self.engine in ENGINES, self.engine
+        assert self.hosts >= 1, self.hosts
+        assert self.max_in_flight >= 2, self.max_in_flight
+        assert self.capacity_bytes is None or self.capacity_bytes > 0, (
+            self.capacity_bytes)
 
     def round_bound(self, n: int) -> int:
         """Prop. 3.1: r ≤ ⌈log_{μ/k}(n/μ)⌉ + 1."""
@@ -89,13 +103,29 @@ class TreeConfig:
 
 @dataclasses.dataclass
 class IngestStats:
-    """Round-0 streaming-ingestion accounting (footprint guard evidence)."""
+    """Round-0 streaming-ingestion accounting (footprint guard evidence).
+
+    Besides the footprint counters, every wave records its work time and
+    host→device bytes — for the *synchronous* engine too, so the pipelined
+    engine's overlap claims always have an honest same-struct baseline.
+
+    ``wave_seconds[i]`` is wave i's gather + solve *work* time.  Under the
+    sync engine the two are serialized, so it equals the wave's wall-clock
+    and ``sum(wave_seconds) ≈ wall_seconds``; under the pipelined engine
+    gathers overlap earlier solves, so the sum deliberately *exceeds*
+    ``wall_seconds`` — that gap is exactly the hidden work the engine's
+    ``overlap_ratio`` reports.
+    """
     wave_machines: int          # W — machines dispatched per wave
     waves: int                  # number of waves in round 0
     peak_wave_rows: int         # max candidate rows materialized per wave
     peak_wave_bytes: int        # peak_wave_rows · (d + attr_dim) · itemsize
     total_machines: int         # Mp — mesh-padded machine count of round 0
     attr_dim: int = 0           # a — attribute columns riding with each row
+    wave_seconds: list[float] = dataclasses.field(default_factory=list)
+    wave_bytes: list[int] = dataclasses.field(default_factory=list)
+    total_bytes: int = 0        # Σ wave_bytes (host→device candidate bytes)
+    wall_seconds: float = 0.0   # whole-round-0 wall clock
 
 
 @dataclasses.dataclass
@@ -109,6 +139,7 @@ class TreeResult:
     round_values: list[float]   # best machine value per round
     ingest: IngestStats | None = None   # set by the streaming round-0 path
     sel_attrs: np.ndarray | None = None  # (k, a) attrs of the selection
+    engine_stats: EngineStats | None = None  # wave engine trace (round 0)
 
 
 # ---------------------------------------------------------------------------
@@ -260,6 +291,38 @@ def _round0_partition(kpart, n: int, L: int, mu: int,
     return part_lib.Partition(idx, idx >= 0)
 
 
+def _wave_size(cfg: TreeConfig, wave_machines, ndev: int, Mp: int,
+               mu: int, width: int) -> int:
+    """Resolve the wave size W (machines per wave, a device multiple).
+
+    Precedence: explicit ``wave_machines`` (rounded *up* to a device
+    multiple, legacy semantics; validated against ``cfg.capacity_bytes``
+    up front when both are given — the byte budget is always a hard
+    bound) → ``cfg.capacity_bytes`` alone (weighted-μ capacity: the
+    largest device-multiple W whose wave matrix ``W·μ·width·4`` fits the
+    budget, rounded *down*) → one mesh sweep (W = ndev).
+    """
+    row_bytes = mu * width * 4
+    if wave_machines is not None:
+        W = min(Mp, math.ceil(wave_machines / ndev) * ndev)
+        if cfg.capacity_bytes is not None and W * row_bytes > cfg.capacity_bytes:
+            raise ValueError(
+                f"wave_machines={wave_machines} (W={W} after device "
+                f"rounding) needs {W * row_bytes} bytes/wave, over the "
+                f"capacity_bytes={cfg.capacity_bytes} budget — drop one "
+                f"of the two or raise the budget")
+        return W
+    if cfg.capacity_bytes is not None:
+        min_wave = ndev * row_bytes
+        if cfg.capacity_bytes < min_wave:
+            raise ValueError(
+                f"capacity_bytes={cfg.capacity_bytes} cannot fit one "
+                f"device-multiple wave: {ndev} devices × μ={mu} rows × "
+                f"{width} fp32 columns = {min_wave} bytes")
+        return min(Mp, (cfg.capacity_bytes // row_bytes) // ndev * ndev)
+    return min(Mp, ndev)
+
+
 def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
                    cfg: TreeConfig, mesh, fail_machines, wave_machines,
                    best_rows, best_mask, best_val, total_calls,
@@ -277,6 +340,14 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     footprint is O(W·μ·(d+a)) candidate rows instead of O(n·(d+a)); for the
     same seed the per-machine blocks, PRNG keys, fold order, and the union
     A_1 are bit-identical to the all-resident dispatch.
+
+    Wave *execution* is delegated to :mod:`repro.engine`: ``cfg.engine``
+    picks the synchronous reference or the double-buffered pipelined
+    scheduler (gather of wave t+1 overlaps solve of wave t), and
+    ``cfg.hosts`` shards every wave's gather across ingestion hosts via
+    the :class:`repro.engine.planner.IngestionPlan`.  Both knobs change
+    only *when and where* host work happens — the blocks, keys, fold order
+    and outputs stay bit-identical across every engine × hosts combination.
     """
     n, d, mu = source.n, source.d, cfg.capacity
     a = 0
@@ -287,56 +358,92 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     # sliced per wave — machine i sees the same key and dead bit as in the
     # one-shot dispatch.
     Mp, keys, dead = _round_plan(kalg, L, 0, fail_machines, mesh)
-    W = wave_machines if wave_machines is not None else ndev
-    W = min(Mp, math.ceil(W / ndev) * ndev)  # waves are device multiples
+    W = _wave_size(cfg, wave_machines, ndev, Mp, mu, d + a)
 
     slot_block = _round0_slot_blocks(kpart, n, L, Mp, mu, cfg.permutation)
+    ecfg = EngineConfig(mode=cfg.engine, max_in_flight=cfg.max_in_flight,
+                        hosts=cfg.hosts)
+    plan = IngestionPlan.build(source, cfg.hosts) if cfg.hosts > 1 else None
+    waves = [(w0, min(w0 + W, Mp)) for w0 in range(0, Mp, W)]
 
-    def gather_wave(idx_flat: np.ndarray):
+    def gather_rows(idx_flat: np.ndarray):
         """Rows (+ attrs when constrained) for one wave, a single source
-        pass: sequential sources must not be re-streamed once per matrix."""
+        pass: sequential sources must not be re-streamed once per matrix.
+        With ``hosts > 1`` the pass is sharded: each ingestion host serves
+        the indices it owns and the planner stitches them in index order."""
+        if plan is not None:
+            rows, src_attrs, per_host = plan.gather(
+                idx_flat, with_attrs=bool(a) and attrs_np is None,
+                parallel=ecfg.mode == "pipelined")
+            row_attrs = (attrs_np[idx_flat] if a and attrs_np is not None
+                         else src_attrs)
+            return rows, row_attrs, per_host
         if not a:
-            return source.gather(idx_flat), None
+            return source.gather(idx_flat), None, None
         if attrs_np is not None:
-            return source.gather(idx_flat), attrs_np[idx_flat]
-        return source.gather_with_attrs(idx_flat)
+            return source.gather(idx_flat), attrs_np[idx_flat], None
+        rows, row_attrs = source.gather_with_attrs(idx_flat)
+        return rows, row_attrs, None
 
-    sol_rows, sol_mask = [], []
-    v_round = jnp.float32(-jnp.inf)
-    peak_rows = 0
-    for w0 in range(0, Mp, W):
-        w1 = min(w0 + W, Mp)
+    def gather(i: int) -> HostWave:
+        """Host side of wave i: source reads + numpy block assembly.
+        Runs on the prefetch thread under the pipelined engine — no JAX."""
+        w0, w1 = waves[i]
         idx_w = slot_block(w0, w1)                          # (Wb, cap)
         idx_flat = np.maximum(idx_w, 0).reshape(-1)
-        rows, row_attrs = gather_wave(idx_flat)
+        rows, row_attrs, per_host = gather_rows(idx_flat)
+        rows = np.asarray(rows, np.float32)
         if a:
             rows = np.concatenate(
-                [np.asarray(rows, np.float32),
-                 np.asarray(row_attrs, np.float32)], axis=1)
-        blocks = jnp.asarray(rows, jnp.float32).reshape(w1 - w0, mu, d + a)
-        bmask = jnp.asarray(idx_w >= 0)
-        blocks = jnp.where(bmask[..., None], blocks, 0.0)
-        peak_rows = max(peak_rows, (w1 - w0) * mu)
+                [rows, np.asarray(row_attrs, np.float32)], axis=1)
+        valid = idx_w >= 0
+        # zero padded slots on host (gathers may return read-only buffers);
+        # bit-identical to the device-side jnp.where masking it replaces
+        blocks = np.where(valid[..., None],
+                          rows.reshape(w1 - w0, mu, d + a), np.float32(0.0))
+        return HostWave(payload=(blocks, valid, w0, w1),
+                        machines=w1 - w0, rows=(w1 - w0) * mu,
+                        bytes_moved=blocks.nbytes, per_host_rows=per_host)
 
+    sol_rows, sol_mask = [], []
+    carry = [best_rows, best_mask, best_val, total_calls,
+             jnp.float32(-jnp.inf)]                        # [..., v_round]
+
+    def solve(i: int, payload) -> jax.Array:
+        """Device side of wave i: upload, dispatch, fold.  Always called on
+        the caller thread in wave order, so the sequential strict-
+        improvement fold over waves == the one-shot argmax over all Mp
+        machines (lowest machine index on ties)."""
+        blocks_np, valid, w0, w1 = payload
+        blocks, bmask = stage_wave_inputs(mesh, blocks_np, valid)
         res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1], dead[w0:w1],
                                cfg, mesh, attr_dim=a, constraint=constraint)
-        # sequential strict-improvement fold over waves == the one-shot
-        # argmax over all Mp machines (lowest machine index on ties).
-        best_rows, best_mask, best_val, total_calls, v_wave = _fold_round(
+        carry[0], carry[1], carry[2], carry[3], v_wave = _fold_round(
             res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
-            best_rows, best_mask, best_val, total_calls)
-        v_round = jnp.maximum(v_round, v_wave)
+            *carry[:4])
+        carry[4] = jnp.maximum(carry[4], v_wave)
         sol_rows.append(res.sol_rows)
         sol_mask.append(res.sol_mask)
+        return v_wave
+
+    estats = run_waves(len(waves), gather, solve, ecfg)
+    best_rows, best_mask, best_val, total_calls, v_round = carry
 
     rows_in = jnp.concatenate(sol_rows).reshape(-1, d + a)  # union A_1
     mask_in = jnp.concatenate(sol_mask).reshape(-1)
+    peak_rows = max(t.rows for t in estats.traces)
     stats = IngestStats(
-        wave_machines=W, waves=math.ceil(Mp / W), peak_wave_rows=peak_rows,
+        wave_machines=W, waves=len(waves), peak_wave_rows=peak_rows,
         peak_wave_bytes=peak_rows * (d + a) * 4, total_machines=Mp,
-        attr_dim=a)
+        attr_dim=a,
+        wave_seconds=[t.gather_s + t.solve_s for t in estats.traces],
+        wave_bytes=[t.bytes_moved for t in estats.traces],
+        total_bytes=estats.bytes_moved, wall_seconds=estats.wall_s)
+    if cfg.capacity_bytes is not None:
+        assert stats.peak_wave_bytes <= cfg.capacity_bytes, (
+            stats.peak_wave_bytes, cfg.capacity_bytes)
     return (best_rows, best_mask, best_val, total_calls, v_round,
-            rows_in, mask_in, stats)
+            rows_in, mask_in, stats, estats)
 
 
 def _attr_setup(data, constraint, attrs, streaming: bool):
@@ -383,6 +490,15 @@ def tree_maximize(
     same seed.  Rounds t ≥ 1 operate on A_t (≤ m_t·k rows) and are already
     capacity-bounded.
 
+    How those waves *execute* is the :mod:`repro.engine` subsystem's job:
+    ``cfg.engine="pipelined"`` double-buffers so wave t+1's gather overlaps
+    wave t's solve (bounded by ``cfg.max_in_flight`` host buffers),
+    ``cfg.hosts > 1`` shards each gather across ingestion hosts, and
+    ``cfg.capacity_bytes`` sizes W by a device-byte budget (weighted-μ:
+    bytes include the attribute columns) instead of a machine count.  All
+    three are execution knobs only — outputs are bit-identical to the
+    synchronous single-host engine, which stays the reference path.
+
     ``constraint`` applies a hereditary constraint from
     :mod:`repro.core.constraints` to every machine's solve (Theorem 3.5).
     Per-item attributes come from ``attrs`` (host ``(n, a)`` matrix) or an
@@ -396,7 +512,10 @@ def tree_maximize(
     the legacy NumPy-between-rounds driver (identical results, kept as the
     comparison baseline).
     """
-    streaming = isinstance(data, GroundSetSource) or wave_machines is not None
+    streaming = (isinstance(data, GroundSetSource)
+                 or wave_machines is not None
+                 or cfg.engine != "sync" or cfg.hosts > 1
+                 or cfg.capacity_bytes is not None)
     if host_rounds:
         if streaming:
             raise ValueError("host_rounds=True supports only all-resident "
@@ -442,6 +561,7 @@ def tree_maximize(
     r_bound = cfg.round_bound_exact(n)
     t = start_round
     ingest: IngestStats | None = None
+    engine_stats: EngineStats | None = None
 
     while True:
         key, kpart, kalg = jax.random.split(key, 3)
@@ -453,7 +573,7 @@ def tree_maximize(
             # ---- wave-scheduled ingestion: ≤ W·μ rows device-resident ----
             machines_per_round.append(L)
             (best_rows, best_mask, best_val, total_calls, v_best,
-             rows_in, mask_in, ingest) = _stream_round0(
+             rows_in, mask_in, ingest, engine_stats) = _stream_round0(
                 obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
                 wave_machines, best_rows, best_mask, best_val, total_calls,
                 constraint=constraint, attrs_np=attrs_np)
@@ -500,7 +620,7 @@ def tree_maximize(
         value=_host_scalar(best_val), rounds=t,
         oracle_calls=int(_host_scalar(total_calls)),
         machines_per_round=machines_per_round, round_values=round_values,
-        ingest=ingest)
+        ingest=ingest, engine_stats=engine_stats)
 
 
 def _finish_result(sel_wide: np.ndarray, sel_mask: np.ndarray, d: int,

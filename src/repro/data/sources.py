@@ -10,6 +10,7 @@ used by the scaling benchmark and the selection stage.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Sequence
 
 import numpy as np
@@ -64,6 +65,25 @@ class ShardedSource(GroundSetSource):
             assert len(rows) == self._sizes[i], (i, len(rows), self._sizes[i])
             yield int(self._starts[i]), rows
 
+    def host_split_points(self, hosts: int) -> list[int]:
+        """Host boundaries snapped to shard boundaries (each lazy shard
+        loader then belongs to exactly one ingestion host — a host never
+        loads a shard to serve another host's rows).  Falls back to the
+        near-equal item split when there are fewer shards than hosts."""
+        if hosts > len(self._sizes):
+            return super().host_split_points(hosts)
+        ideal = [p * self.n / hosts for p in range(hosts + 1)]
+        bounds = [0]
+        for tgt in ideal[1:-1]:
+            # nearest interior shard boundary strictly after the previous
+            cands = [int(s) for s in self._starts[1:-1] if s > bounds[-1]]
+            if not cands:                  # irregular shards exhausted the
+                return super().host_split_points(hosts)  # interior starts
+            bounds.append(min(cands, key=lambda s: abs(s - tgt)))
+        bounds.append(self.n)
+        assert bounds == sorted(set(bounds)), bounds
+        return bounds
+
     def _attr_shard(self, i: int) -> np.ndarray:
         if self._attr_loaders is None:
             return np.zeros((self._sizes[i], 0), np.float32)
@@ -114,7 +134,8 @@ class ShardedSource(GroundSetSource):
 def synthetic_sharded_source(n: int, d: int, shard_rows: int = 50_000,
                              seed: int = 0, n_clusters: int = 20,
                              spread: float = 0.3,
-                             attr_gen=None, a: int = 0) -> ShardedSource:
+                             attr_gen=None, a: int = 0,
+                             io_latency_s: float = 0.0) -> ShardedSource:
     """Deterministic clustered point-cloud source generated shard-by-shard.
 
     Each shard is a pure function of (seed, shard index) — the benchmark's
@@ -123,6 +144,13 @@ def synthetic_sharded_source(n: int, d: int, shard_rows: int = 50_000,
     ``attr_gen(rng, rows) -> (rows, a)`` (optional) generates the per-item
     attribute shard from the *same* per-shard rng stream position, so
     attributes are as deterministic as the rows; declare the width ``a``.
+
+    ``io_latency_s`` sleeps that long per shard load, modeling the
+    storage/network stall of a real pipeline read (a sleep holds no core
+    and no GIL, exactly like blocking I/O) — the engine benchmark uses it
+    to measure latency-bound ingestion separately from the CPU-bound
+    regeneration cost, which on a CPU-backend container competes with the
+    solve for cores.
     """
     centers = np.random.default_rng(seed).standard_normal(
         (n_clusters, d)).astype(np.float32)
@@ -132,6 +160,8 @@ def synthetic_sharded_source(n: int, d: int, shard_rows: int = 50_000,
 
     def make_loader(i: int, rows: int):
         def load():
+            if io_latency_s:
+                time.sleep(io_latency_s)
             r = shard_rng(i)
             assign = r.integers(0, n_clusters, rows)
             return (centers[assign] + spread * r.standard_normal(

@@ -1,0 +1,20 @@
+"""repro.engine — asynchronous round-0 execution engine.
+
+Three layers (see each module's docstring):
+
+  * :mod:`repro.engine.scheduler` — sync reference + double-buffered
+    pipelined wave drivers with bounded in-flight backpressure.
+  * :mod:`repro.engine.planner` — multi-host sharding of the round-0
+    gather (single-process emulation with enforced locality for CI).
+  * :mod:`repro.engine.stats` — per-wave trace + overlap accounting,
+    surfaced on ``TreeResult.engine_stats``.
+"""
+from repro.engine.planner import HostShard, IngestionPlan
+from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
+                                    run_waves)
+from repro.engine.stats import EngineStats, WaveTrace, overlap_ratio
+
+__all__ = [
+    "ENGINES", "EngineConfig", "EngineStats", "HostShard", "HostWave",
+    "IngestionPlan", "WaveTrace", "overlap_ratio", "run_waves",
+]

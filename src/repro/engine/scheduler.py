@@ -1,0 +1,215 @@
+"""Prefetching wave scheduler — the asynchronous round-0 execution engine.
+
+Round-0 ingestion is a sequence of waves; each wave is (1) a host *gather*
+(source reads + numpy assembly of the ``(W·μ, d+a)`` candidate matrix) and
+(2) a device *solve* (upload, ``run_round`` dispatch, best-solution fold).
+The synchronous reference serializes the two per wave:
+
+    g0 → s0 → g1 → s1 → g2 → s2 ...          wall = Σg + Σs
+
+The pipelined engine double-buffers: a producer thread gathers wave t+1
+while the consumer (caller thread) solves wave t, with a bounded in-flight
+buffer budget providing backpressure:
+
+    g0 → s0  s1  s2 ...
+          g1  g2  g3 ...                     wall ≈ g0 + max(Σg, Σs)
+
+Correctness contract (pinned by tests/test_engine.py):
+
+  * **Bit-identity** — the consumer invokes ``solve`` strictly in wave
+    order on exactly the host buffers ``gather`` produced, so fold order,
+    PRNG key alignment, and failure injection are untouched; pipelined
+    output is bit-identical to the sync engine's for any gather/solve
+    pair that is itself deterministic.
+  * **Backpressure** — at most ``max_in_flight`` gathered host wave
+    buffers exist at any instant (a counting semaphore is acquired before
+    a gather starts and released once the wave's buffers have been handed
+    to the device); the observed high-water mark is recorded on
+    :class:`EngineStats` and asserted ≤ the bound in tests.
+  * **All JAX work stays on the caller thread** — the producer touches
+    only the source and numpy, so device order is identical to the sync
+    engine even under a mesh.
+
+``solve`` returns a device value the engine blocks on; both engines block
+identically, which is what makes their per-wave ``solve_s`` columns (and
+therefore the measured overlap ratio) comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, NamedTuple
+
+import jax
+
+from repro.engine.stats import EngineStats, WaveTrace, overlap_ratio
+
+ENGINES = ("sync", "pipelined")
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """How round-0 ingestion executes (orthogonal to *what* it computes)."""
+    mode: str = "sync"          # sync | pipelined
+    max_in_flight: int = 2      # host wave buffers alive at once (pipelined)
+    hosts: int = 1              # ingestion hosts sharding the gather
+
+    def __post_init__(self):
+        assert self.mode in ENGINES, self.mode
+        assert self.max_in_flight >= 2, (
+            f"pipelining needs ≥ 2 wave buffers (got {self.max_in_flight})")
+        assert self.hosts >= 1, self.hosts
+
+
+class HostWave(NamedTuple):
+    """One gathered wave: host payload + accounting, produced by ``gather``."""
+    payload: Any                # opaque to the engine; consumed by ``solve``
+    machines: int
+    rows: int
+    bytes_moved: int
+    per_host_rows: list[int] | None = None
+
+
+class _Abort(Exception):
+    """Producer-side signal that the consumer bailed; never escapes."""
+
+
+def run_waves(n_waves: int,
+              gather: Callable[[int], HostWave],
+              solve: Callable[[int, Any], Any],
+              cfg: EngineConfig) -> EngineStats:
+    """Drive ``n_waves`` gather→solve wave pairs under ``cfg.mode``.
+
+    ``gather(i)`` produces wave i's host buffers (called from a background
+    thread in pipelined mode — it must not touch JAX); ``solve(i, payload)``
+    uploads and dispatches wave i (always called on the caller thread, in
+    wave order) and returns a device value to block on.
+    """
+    if cfg.mode == "sync":
+        return _run_sync(n_waves, gather, solve, cfg)
+    return _run_pipelined(n_waves, gather, solve, cfg)
+
+
+def _block(x) -> None:
+    if x is not None:
+        jax.block_until_ready(x)
+
+
+def _finalize(engine: str, cfg: EngineConfig, traces: list[WaveTrace],
+              wall_s: float, max_live: int) -> EngineStats:
+    g = sum(t.gather_s for t in traces)
+    s = sum(t.solve_s for t in traces)
+    return EngineStats(
+        engine=engine, hosts=cfg.hosts, waves=len(traces), wall_s=wall_s,
+        gather_s=g, solve_s=s,
+        bytes_moved=sum(t.bytes_moved for t in traces),
+        overlap_ratio=overlap_ratio(g, s, wall_s) if engine == "pipelined"
+        else 0.0,
+        max_in_flight=max_live, traces=traces)
+
+
+def _run_sync(n_waves, gather, solve, cfg) -> EngineStats:
+    """The bit-identity reference: gather and solve strictly serialized."""
+    traces: list[WaveTrace] = []
+    t_start = time.perf_counter()
+    for i in range(n_waves):
+        t0 = time.perf_counter()
+        hw = gather(i)
+        t1 = time.perf_counter()
+        _block(solve(i, hw.payload))
+        t2 = time.perf_counter()
+        traces.append(WaveTrace(
+            wave=i, machines=hw.machines, rows=hw.rows,
+            bytes_moved=hw.bytes_moved, gather_s=t1 - t0, solve_s=t2 - t1,
+            per_host_rows=hw.per_host_rows))
+    return _finalize("sync", cfg, traces,
+                     time.perf_counter() - t_start, max_live=1)
+
+
+class _BufferGauge:
+    """Counts live gathered wave buffers; enforces and records the bound."""
+
+    def __init__(self, limit: int):
+        self._sem = threading.Semaphore(limit)
+        self._lock = threading.Lock()
+        self._live = 0
+        self.high_water = 0
+
+    def acquire(self, abort: threading.Event) -> bool:
+        while not self._sem.acquire(timeout=0.1):
+            if abort.is_set():
+                return False
+        with self._lock:
+            self._live += 1
+            self.high_water = max(self.high_water, self._live)
+        return True
+
+    def release(self) -> None:
+        with self._lock:
+            self._live -= 1
+        self._sem.release()
+
+
+def _run_pipelined(n_waves, gather, solve, cfg) -> EngineStats:
+    """Double-buffered engine: wave t+1 gathers while wave t solves."""
+    out: queue.Queue = queue.Queue(maxsize=max(1, cfg.max_in_flight - 1))
+    abort = threading.Event()
+    gauge = _BufferGauge(cfg.max_in_flight)
+
+    def _put(item) -> bool:
+        """Bounded put that honors the abort flag (never blocks forever)."""
+        while not abort.is_set():
+            try:
+                out.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def produce():
+        try:
+            for i in range(n_waves):
+                # backpressure: a wave's buffer is born here and freed by
+                # the consumer only after its payload reached the device
+                if not gauge.acquire(abort):
+                    raise _Abort
+                t0 = time.perf_counter()
+                hw = gather(i)
+                dt = time.perf_counter() - t0
+                if not _put((i, hw, dt, None)):
+                    raise _Abort
+        except _Abort:
+            pass
+        except BaseException as exc:  # surface source errors on the caller;
+            _put((-1, None, 0.0, exc))  # dropped if the consumer already bailed
+
+    producer = threading.Thread(target=produce, name="wave-prefetch",
+                                daemon=True)
+    traces: list[WaveTrace] = []
+    t_start = time.perf_counter()
+    producer.start()
+    try:
+        for expect in range(n_waves):
+            i, hw, gather_s, exc = out.get()
+            if exc is not None:
+                raise exc
+            assert i == expect, f"wave order broke: got {i}, want {expect}"
+            t1 = time.perf_counter()
+            handle = solve(i, hw.payload)
+            # payload is on device once solve returns — free its buffer
+            # credit so the producer may start gathering the wave after next
+            gauge.release()
+            _block(handle)
+            t2 = time.perf_counter()
+            traces.append(WaveTrace(
+                wave=i, machines=hw.machines, rows=hw.rows,
+                bytes_moved=hw.bytes_moved, gather_s=gather_s,
+                solve_s=t2 - t1, per_host_rows=hw.per_host_rows))
+    finally:
+        abort.set()
+        producer.join(timeout=30.0)
+    return _finalize("pipelined", cfg, traces,
+                     time.perf_counter() - t_start,
+                     max_live=gauge.high_water)

@@ -4,6 +4,7 @@
         --dataset csn-20k --k 50 --capacity 400 \
         [--algorithm greedy|stochastic_greedy|threshold_greedy] \
         [--source resident|chunked|sharded] [--wave-machines W] \
+        [--engine sync|pipelined] [--hosts P] [--capacity-bytes B] \
         [--constraint knapsack:budget=2.5 | partition:caps=4,4,4 | ...] \
         [--permutation dense|feistel] \
         [--ckpt-dir DIR --resume] [--fail round:ids]
@@ -17,6 +18,17 @@ GroundSetSource and dispatched in capacity-bounded waves, so the device
 footprint is O(W·μ·(d+a)) instead of O(n·(d+a)) — output bit-identical to
 the resident path for the same seed.  ``--permutation feistel`` swaps the
 O(n) host slot permutation for the O(1)-state counter-based cipher.
+
+``--engine pipelined`` runs the waves through the asynchronous execution
+engine (``repro.engine``): wave t+1's gather overlaps wave t's solve under
+a 2-buffer backpressure bound, ``--hosts P`` shards every gather across P
+ingestion hosts (emulated in one process, locality asserted), and
+``--capacity-bytes B`` sizes W from a device-byte budget (weighted-μ
+capacity: bytes include attribute columns) instead of a machine count.
+All of it is bit-identical to ``--engine sync``; the reported engine line
+gives per-run gather/solve seconds and the measured overlap ratio.  With a
+non-resident source the centralized comparison column also streams (the
+chunked lazy-greedy pass — no all-resident array anywhere in the run).
 
 ``--constraint`` applies a hereditary constraint to every machine's solve
 (grammar: ``knapsack:budget=F[:col=I]``, ``partition:caps=I,I,..[:col=I]``,
@@ -42,6 +54,7 @@ from repro.core import (ChunkedSource, ExemplarClustering, Intersection,
                         constraint_from_spec, make_submod_mesh, randgreedi,
                         tree_maximize)
 from repro.core.tree import PERMUTATIONS
+from repro.engine import ENGINES
 from repro.data import datasets
 from repro.data.sources import ShardedSource
 
@@ -97,6 +110,15 @@ def main():
                          "round 0 in capacity-bounded waves")
     ap.add_argument("--wave-machines", type=int, default=None,
                     help="streaming wave size W (default: one mesh sweep)")
+    ap.add_argument("--engine", default="sync", choices=ENGINES,
+                    help="wave execution engine; pipelined overlaps wave "
+                         "t+1's gather with wave t's solve (bit-identical)")
+    ap.add_argument("--hosts", type=int, default=1,
+                    help="ingestion hosts sharding the round-0 gather "
+                         "(emulated in-process; locality asserted)")
+    ap.add_argument("--capacity-bytes", type=int, default=None,
+                    help="device-byte wave budget; derives W from bytes "
+                         "including attribute columns (weighted-μ capacity)")
     ap.add_argument("--chunk-rows", type=int, default=4096,
                     help="rows per chunk/shard for --source chunked|sharded")
     ap.add_argument("--constraint", default=None,
@@ -146,11 +168,13 @@ def main():
     print(f"n={len(data)} d={data.shape[1]} k={args.k} mu={args.capacity} "
           f"devices={mesh.devices.size} alg={args.algorithm} "
           f"source={args.source} permutation={args.permutation} "
+          f"engine={args.engine} hosts={args.hosts} "
           f"constraint={args.constraint or 'none'}")
     cfg = TreeConfig(k=args.k, capacity=args.capacity,
                      algorithm=args.algorithm, eps=args.eps, seed=args.seed,
                      checkpoint_dir=args.ckpt_dir, resume=args.resume,
-                     permutation=args.permutation)
+                     permutation=args.permutation, engine=args.engine,
+                     hosts=args.hosts, capacity_bytes=args.capacity_bytes)
     res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
                         wave_machines=args.wave_machines,
                         constraint=constraint, attrs=attrs_arg)
@@ -164,14 +188,26 @@ def main():
               f"peak_wave_rows={ing.peak_wave_rows} "
               f"peak_wave_bytes={ing.peak_wave_bytes} attr_dim={ing.attr_dim} "
               f"(resident would hold {len(data) * width * 4} bytes)")
+    if res.engine_stats is not None:
+        es = res.engine_stats
+        print(f"engine: {es.engine} hosts={es.hosts} "
+              f"wall={es.wall_s:.3f}s gather={es.gather_s:.3f}s "
+              f"solve={es.solve_s:.3f}s overlap={es.overlap_ratio:.2%} "
+              f"bytes={es.bytes_moved} max_in_flight={es.max_in_flight}")
     if constraint is not None:
         ok, detail = check_feasible(constraint, res.sel_attrs, res.sel_mask)
         print(f"feasibility: {'OK' if ok else 'VIOLATED'} ({detail})")
         assert ok
     if not args.no_centralized:
-        cg = centralized_greedy(obj, dj, args.k, constraint=constraint,
-                                attrs=attrs)
-        print(f"centralized greedy{' (constrained)' if constraint else ''}: "
+        # non-resident runs stream the centralized column too (chunked lazy
+        # greedy) — nothing in the comparison needs the all-resident array
+        cg = centralized_greedy(
+            obj, dj if args.source == "resident" else ground, args.k,
+            constraint=constraint,
+            attrs=attrs if args.source == "resident" else None,
+            chunk_rows=args.chunk_rows)
+        print(f"centralized greedy{' (constrained)' if constraint else ''}"
+              f"{' [streamed]' if args.source != 'resident' else ''}: "
               f"f={float(cg.value):.6f} "
               f"(TREE at {res.value / float(cg.value):.2%})")
         m_base = args.baseline_machines or max(

@@ -89,12 +89,15 @@ def test_failure_injection_streaming_identity():
     _assert_identical(resident, streamed)
 
 
-def test_footprint_guard_wave_never_exceeds_W_mu(monkeypatch):
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_footprint_guard_wave_never_exceeds_W_mu(monkeypatch, engine):
     """The ingestion waves must never materialize more than W·μ candidate
-    rows on device — checked at the actual round-dispatch boundary."""
+    rows on device — checked at the actual round-dispatch boundary, under
+    both wave engines (pipelining overlaps *host* gathers; it must not
+    widen the device-resident window)."""
     data, obj = _setup(n=900, seed=3)
     mu, W = 60, 2
-    cfg = TreeConfig(k=8, capacity=mu, seed=1)
+    cfg = TreeConfig(k=8, capacity=mu, seed=1, engine=engine)
     shapes = []
     real_run_round = tree_lib.run_round
 
@@ -114,6 +117,28 @@ def test_footprint_guard_wave_never_exceeds_W_mu(monkeypatch):
     assert max(M * cap for M, cap, _ in shapes) < len(data)
     assert res.ingest.peak_wave_rows == max(M * cap for M, cap, _ in ingest_shapes)
     assert res.ingest.peak_wave_bytes == res.ingest.peak_wave_rows * data.shape[1] * 4
+
+
+def test_footprint_guard_capacity_bytes(monkeypatch):
+    """Weighted-μ capacity: a device-byte budget must bound every wave's
+    dispatched bytes at the round-dispatch boundary (width = d + a)."""
+    data, obj = _setup(n=900, seed=3)
+    mu, d = 60, data.shape[1]
+    budget = 3 * mu * d * 4
+    shapes = []
+    real_run_round = tree_lib.run_round
+
+    def spy(obj_, blocks, bmask, keys, **kw):
+        shapes.append(tuple(blocks.shape))
+        return real_run_round(obj_, blocks, bmask, keys, **kw)
+
+    monkeypatch.setattr(tree_lib, "run_round", spy)
+    res = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=mu, seed=1,
+                                   capacity_bytes=budget))
+    for M, cap, width in shapes[:res.ingest.waves]:
+        assert M * cap * width * 4 <= budget, (M, cap, width)
+    assert res.ingest.peak_wave_bytes <= budget
 
 
 def test_synthetic_sharded_source_streams_and_matches_materialized():
