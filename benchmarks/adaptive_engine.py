@@ -1,0 +1,218 @@
+"""Adaptive execution benchmark (PR 5): rate-tuned wave autoscaler +
+async checkpoint writer vs the static fixed-W policies.
+
+Sweep: {fixed-W sync, fixed-W pipelined, adaptive pipelined} × {io,
+compute gather profile} × {checkpoint off, on}.  The fixed W is the PR 4
+default scale (a small machine count), which pays one near-constant
+gather bill per wave — re-streaming / regenerating the shards a wave's
+randomly-permuted slots touch costs almost the same at W=4 as at W=128 —
+so the autoscaler's ladder climb amortizes that per-wave fixed cost into
+a measured wall win.  Checkpoint-on cells write every round boundary:
+synchronously under the sync engine (the serialized baseline wall) and
+through the async double-buffered writer under the pipelined engines
+(the write overlaps round t+1; its hidden fraction is the claim).
+
+Asserted acceptance (ISSUE 5):
+  * adaptive pipelined round-0 wall ≤ fixed-W pipelined, both profiles;
+  * async checkpoint cells hide ≥ 50% of the measured serialized
+    checkpoint wall on this host;
+  * the adaptive runs dispatch ≤ the log2 ladder bound of distinct wave
+    shapes (also asserted inside the tree driver itself);
+  * EVERY cell — including a fused partition-matroid constrained pair —
+    is bit-identical to its fixed-W synchronous reference.
+
+All ladder rungs are pre-compiled with a deterministic width schedule
+before timing, so the sweep compares steady-state execution policy, not
+XLA compile luck (the in-run re-jit cost is bounded by the ladder and
+documented in PERF.md §PR5).  Record lands in ``BENCH_PR5.json`` via
+``benchmarks/run.py --only adaptive``.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import (ExemplarClustering, PartitionMatroid, TreeConfig,
+                        run_round, tree_maximize)
+from repro.data.sources import synthetic_sharded_source
+from repro.engine import bucket_ladder, shape_bound, suggest_prefetch_depth
+
+
+def _source(n, d, io_latency_s=0.0):
+    return synthetic_sharded_source(n=n, d=d, shard_rows=max(2048, n // 16),
+                                    seed=0, io_latency_s=io_latency_s)
+
+
+def _run_one(n, d, k, mu, mode, io_latency_s=0.0, wave=None, ckpt_dir=None,
+             seed=0):
+    src = _source(n, d, io_latency_s=io_latency_s)
+    rng = np.random.default_rng(0)
+    ev = _source(n, d).gather(rng.choice(n, 256, replace=False))
+    obj = ExemplarClustering(jnp.asarray(ev))
+    engine = "sync" if mode == "fixed-sync" else "pipelined"
+    cfg = TreeConfig(k=k, capacity=mu, seed=seed, engine=engine,
+                     wave_autotune=(mode == "adaptive-pipelined"),
+                     checkpoint_dir=ckpt_dir,
+                     async_checkpoint=(ckpt_dir is not None
+                                       and engine == "pipelined"))
+    with Timer() as t:
+        res = tree_maximize(obj, src, cfg, wave_machines=wave)
+    es = res.engine_stats
+    rec = {
+        "mode": mode, **es.summary(), "total_sec": round(t.s, 3),
+        "value": float(res.value), "oracle_calls": res.oracle_calls,
+        "peak_wave_bytes": res.ingest.peak_wave_bytes,
+    }
+    if res.checkpoint_stats is not None:
+        rec["checkpoint"] = res.checkpoint_stats.summary()
+    return res, rec
+
+
+def run(quick: bool = True):
+    n = 100_000 if quick else 1_000_000
+    d, k, mu, wave = 16, 16, 500, 4
+    io_latency = 0.01
+    Mp = -(-n // mu)                   # machines in round 0 (ndev = 1)
+    ladder = bucket_ladder(1, Mp)
+
+    # deterministic warm-up: compile every ladder rung's solve shape
+    # directly (a width *schedule* would clamp to the machines remaining
+    # and miss the top rungs — Σladder > Mp), plus one fixed-W run for the
+    # later-round repartition shapes, so no timed cell pays XLA compile
+    print(f"adaptive: warming {len(ladder)} ladder rungs "
+          f"(bound {shape_bound(1, Mp)})")
+    rng = np.random.default_rng(0)
+    ev = _source(n, d).gather(rng.choice(n, 256, replace=False))
+    obj = ExemplarClustering(jnp.asarray(ev))
+    for w in ladder:
+        run_round(obj, jnp.zeros((w, mu, d), jnp.float32),
+                  jnp.ones((w, mu), bool),
+                  jax.random.split(jax.random.PRNGKey(0), w),
+                  k=k, alg="greedy", eps=0.5,
+                  dead_mask=jnp.zeros((w,), bool), mesh=None)
+    _run_one(n, d, k, mu, "fixed-sync", wave=wave)
+
+    print("adaptive: profile,mode,ckpt,waves,wall_s,gather_s,solve_s,"
+          "overlap,shapes,ckpt_hidden,total_sec,value")
+    rows, results = [], {}
+    for profile, lat in (("io", io_latency), ("compute", 0.0)):
+        for ckpt in (False, True):
+            for mode in ("fixed-sync", "fixed-pipelined",
+                         "adaptive-pipelined"):
+                ckpt_dir = tempfile.mkdtemp() if ckpt else None
+                try:
+                    res, rec = _run_one(
+                        n, d, k, mu, mode, io_latency_s=lat,
+                        wave=None if mode == "adaptive-pipelined" else wave,
+                        ckpt_dir=ckpt_dir)
+                finally:
+                    if ckpt_dir:
+                        shutil.rmtree(ckpt_dir, ignore_errors=True)
+                rec["profile"], rec["ckpt"] = profile, ckpt
+                results[(profile, mode, ckpt)] = (res, rec)
+                rows.append(rec)
+                hid = rec.get("checkpoint", {}).get("hidden_fraction", "")
+                print(f"adaptive,{profile},{mode},{int(ckpt)},"
+                      f"{rec['waves']},{rec['wall_s']},{rec['gather_s']},"
+                      f"{rec['solve_s']},{rec['overlap_ratio']},"
+                      f"{rec['distinct_shapes']},{hid},{rec['total_sec']},"
+                      f"{rec['value']:.6f}")
+
+    # ---- bit-identity: every cell vs the fixed-W sync reference ----------
+    for profile in ("io", "compute"):
+        ref = results[(profile, "fixed-sync", False)][0]
+        for (p, mode, ckpt), (res, _) in results.items():
+            if p != profile:
+                continue
+            assert res.value == ref.value, (p, mode, ckpt)
+            assert np.array_equal(res.sel_rows, ref.sel_rows), (p, mode, ckpt)
+            assert res.oracle_calls == ref.oracle_calls, (p, mode, ckpt)
+    print(f"adaptive,bit-identity,{len(results)}-way,OK")
+
+    # ---- fused partition-matroid constrained pair ------------------------
+    r = np.random.default_rng(1)
+    attrs = r.integers(0, 4, n)[:, None].astype(np.float32)
+    cons = PartitionMatroid(caps=(5, 5, 5, 5), col=0)
+
+    def _constrained(mode):
+        src = _source(n, d)
+        rng = np.random.default_rng(0)
+        ev = _source(n, d).gather(rng.choice(n, 256, replace=False))
+        obj = ExemplarClustering(jnp.asarray(ev))
+        cfg = TreeConfig(k=k, capacity=mu, seed=0,
+                         engine="sync" if mode == "fixed-sync"
+                         else "pipelined",
+                         wave_autotune=(mode == "adaptive-pipelined"))
+        return tree_maximize(obj, src, cfg, constraint=cons, attrs=attrs,
+                             wave_machines=wave if mode == "fixed-sync"
+                             else None)
+
+    c_ref = _constrained("fixed-sync")
+    c_ada = _constrained("adaptive-pipelined")
+    assert c_ada.value == c_ref.value
+    assert np.array_equal(c_ada.sel_rows, c_ref.sel_rows)
+    assert np.array_equal(c_ada.sel_attrs, c_ref.sel_attrs)
+    assert c_ada.oracle_calls == c_ref.oracle_calls
+    print("adaptive,bit-identity,fused-partition-constrained,OK")
+
+    # ---- acceptance: adaptive ≤ fixed pipelined on both profiles ---------
+    claims = {}
+    for profile in ("io", "compute"):
+        fixed = results[(profile, "fixed-pipelined", False)][1]
+        adapt = results[(profile, "adaptive-pipelined", False)][1]
+        saving = (fixed["wall_s"] - adapt["wall_s"]) / max(fixed["wall_s"],
+                                                          1e-9)
+        claims[profile] = {
+            "fixed_pipelined_wall_s": fixed["wall_s"],
+            "adaptive_wall_s": adapt["wall_s"],
+            "saving": round(saving, 4),
+            "adaptive_widths": adapt["width_trajectory"],
+            "distinct_shapes": adapt["distinct_shapes"],
+        }
+        assert adapt["wall_s"] <= fixed["wall_s"], (profile, adapt, fixed)
+        assert adapt["distinct_shapes"] <= shape_bound(1, Mp), adapt
+        print(f"adaptive,claim,{profile},saving={saving:.3f},"
+              f"shapes={adapt['distinct_shapes']}<=bound")
+
+    # ---- acceptance: async checkpoints hide ≥ 50% of the serialized wall -
+    ckpt_claims = {}
+    for profile in ("io", "compute"):
+        sync_ck = results[(profile, "fixed-sync", True)][1]["checkpoint"]
+        for mode in ("fixed-pipelined", "adaptive-pipelined"):
+            ck = results[(profile, mode, True)][1]["checkpoint"]
+            assert ck["mode"] == "async"
+            assert ck["hidden_fraction"] >= 0.5, (profile, mode, ck)
+            ckpt_claims[f"{profile}/{mode}"] = {
+                "serialized_wall_s": sync_ck["write_s"],
+                "async_write_s": ck["write_s"],
+                "async_stall_s": ck["wait_s"],
+                "hidden_fraction": ck["hidden_fraction"],
+            }
+    print("adaptive,claim,checkpoint-hiding,>=50%,OK")
+
+    adapt_io = results[("io", "adaptive-pipelined", False)][1]
+    depth = suggest_prefetch_depth(adapt_io["gather_s"],
+                                   adapt_io["solve_s"])
+    print(f"adaptive,suggested-prefetch-depth,{depth}")
+
+    return {
+        "shape": {"n": n, "d": d, "k": k, "mu": mu, "fixed_wave": wave,
+                  "io_latency_s": io_latency, "machines": Mp,
+                  "ladder": ladder, "shape_bound": shape_bound(1, Mp)},
+        "runs": rows,
+        "bit_identical_all_cells": True,
+        "bit_identical_fused_partition": True,
+        "claims": claims,
+        "checkpoint_claims": ckpt_claims,
+        "suggested_prefetch_depth": depth,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -10,12 +10,13 @@
   tree     — streaming-ingestion scaling sweep            (PR 2)
   constrained — hereditary-constraint streaming sweep     (PR 3)
   engine   — async engine overlap + multi-host ingestion  (PR 4)
+  adaptive — wave autoscaler + async checkpoint writer    (PR 5)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
-``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``; everything
-else goes to ``BENCH_PR1.json`` (repo root).  ``--only engine`` is the
-PR 4 refresh.
+``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``, ``adaptive``
+writes ``BENCH_PR5.json``; everything else goes to ``BENCH_PR1.json``
+(repo root).  ``--only adaptive`` is the PR 5 refresh.
 """
 import argparse
 import json
@@ -28,6 +29,7 @@ BENCH_JSON = os.path.join(_ROOT, "BENCH_PR1.json")
 BENCH_PR2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 BENCH_PR3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 BENCH_PR4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
+BENCH_PR5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 
 
 def main() -> None:
@@ -38,9 +40,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (constrained_tree, engine_overlap,
-                            fault_tolerance_bench, fig2_capacity,
-                            fig2_large_scale, kernel_bench,
+    from benchmarks import (adaptive_engine, constrained_tree,
+                            engine_overlap, fault_tolerance_bench,
+                            fig2_capacity, fig2_large_scale, kernel_bench,
                             table1_complexity, table3_relative_error,
                             tree_scaling)
     suites = {
@@ -53,11 +55,13 @@ def main() -> None:
         "tree": tree_scaling.run,
         "constrained": constrained_tree.run,
         "engine": engine_overlap.run,
+        "adaptive": adaptive_engine.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
                "constrained": (BENCH_PR3_JSON, 3),
-               "engine": (BENCH_PR4_JSON, 4)}
+               "engine": (BENCH_PR4_JSON, 4),
+               "adaptive": (BENCH_PR5_JSON, 5)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

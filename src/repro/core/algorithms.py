@@ -27,7 +27,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.constraints import Knapsack, Unconstrained
+from repro.core.constraints import (Intersection, Knapsack, PartitionMatroid,
+                                    Unconstrained)
 
 NEG_INF = -1e30
 
@@ -57,23 +58,61 @@ def _dummy_attrs(T: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 
+def _fused_parts(constraint) -> tuple | None:
+    """Decompose a constraint into fused-encodable parts, or None.
+
+    Fused encodings exist for :class:`Knapsack` (one SMEM used-weight
+    scalar) and :class:`PartitionMatroid` (one SMEM per-group count
+    vector); an :class:`Intersection` of at most one of each composes
+    (masks AND = the scan's conjunction).  Anything else — duplicated
+    classes (two knapsacks need two scalars the kernel doesn't carry),
+    nested intersections, custom constraints — returns None.
+    """
+    parts = (constraint.parts if isinstance(constraint, Intersection)
+             else (constraint,))
+    kinds = [type(p) for p in parts]
+    if not set(kinds) <= {Knapsack, PartitionMatroid}:
+        return None
+    if kinds.count(Knapsack) > 1 or kinds.count(PartitionMatroid) > 1:
+        return None
+    return parts
+
+
+def _fused_constraint_kwargs(constraint, attrs) -> dict:
+    """``fused_select`` operands for a fused-encodable constraint."""
+    kw = {}
+    for p in _fused_parts(constraint):
+        if isinstance(p, Knapsack):
+            kw["weights"] = attrs[:, p.col]
+            kw["budget"] = p.budget
+        else:
+            kw["group_ids"] = attrs[:, p.col]
+            kw["caps"] = p.caps
+    return kw
+
+
 def _fusable(obj, constraint, attrs) -> bool:
     """May the fused single-launch selection replace the step-wise scan?
 
     Unconstrained selection fuses whenever the objective exposes a
-    ``fused_select`` hook.  Of the hereditary constraint classes only
-    :class:`Knapsack` has a fused encoding (a weight operand threaded into
-    the megakernel — ``fused_knapsack`` on the objective advertises it);
-    everything else (partition matroids, intersections) takes the
-    feasibility-masked step-wise scan below.
+    ``fused_select`` hook.  Of the hereditary constraint classes,
+    :class:`Knapsack` (a weight operand + SMEM used-weight scalar —
+    ``fused_knapsack`` on the objective advertises it) and
+    :class:`PartitionMatroid` (a group-id operand + SMEM per-group count
+    vector — ``fused_partition``) have fused encodings, as does an
+    :class:`Intersection` of at most one of each; everything else takes
+    the feasibility-masked step-wise scan below.
     """
     if not (getattr(obj, "rowwise_gains", False)
             and hasattr(obj, "fused_select")):
         return False
     if constraint is None or isinstance(constraint, Unconstrained):
         return attrs is None
-    return (isinstance(constraint, Knapsack) and attrs is not None
-            and getattr(obj, "fused_knapsack", False))
+    parts = _fused_parts(constraint)
+    if parts is None or attrs is None:
+        return False
+    flags = {Knapsack: "fused_knapsack", PartitionMatroid: "fused_partition"}
+    return all(getattr(obj, flags[type(p)], False) for p in parts)
 
 
 def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
@@ -85,11 +124,12 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
     bound ``k`` (for pure cardinality problems pass ``constraint=None``).
 
     ``fused=None`` (auto) routes unconstrained — and, when the objective
-    advertises ``fused_knapsack``, knapsack-constrained — selection through
-    the objective's ``fused_select`` hook: the whole k-step loop runs as one
-    fused kernel launch (kernels/greedy_select.py), with output bit-identical
-    to the step-wise scan, tie-breaking and oracle-call counts included.
-    Other constraint classes always take the feasibility-masked scan.
+    advertises the matching encoding, knapsack- / partition-matroid- /
+    knapsack∩partition-constrained — selection through the objective's
+    ``fused_select`` hook: the whole k-step loop runs as one fused kernel
+    launch (kernels/greedy_select.py), with output bit-identical to the
+    step-wise scan, tie-breaking and oracle-call counts included.  Other
+    constraint classes always take the feasibility-masked scan.
     ``fused=False`` forces the scan; ``fused=True`` asserts the fast path.
     """
     if fused is None:
@@ -97,11 +137,11 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
     if fused:
         assert _fusable(obj, constraint, attrs), (
             "fused=True needs a rowwise objective with a fused_select hook "
-            "and an unconstrained or fused-knapsack selection")
+            "and an unconstrained, fused-knapsack, or fused-partition "
+            "selection")
         if constraint is not None and not isinstance(constraint, Unconstrained):
             sel_idx, sel_mask, value, calls = obj.fused_select(
-                T, mask, k, weights=attrs[:, constraint.col],
-                budget=constraint.budget)
+                T, mask, k, **_fused_constraint_kwargs(constraint, attrs))
         else:
             sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k)
         return SelectResult(sel_idx, sel_mask, value, calls)

@@ -31,7 +31,8 @@ class BaselineResult(NamedTuple):
 
 
 def centralized_greedy(obj, data, k: int, *, constraint=None, attrs=None,
-                       chunk_rows: int = 8192) -> BaselineResult:
+                       chunk_rows: int = 8192,
+                       prefetch_depth: int = 2) -> BaselineResult:
     """GREEDY on the full ground set (μ ≥ n regime; 1 - 1/e).
 
     ``data`` may be an all-resident ``(n, d)`` array (legacy path) or any
@@ -45,7 +46,8 @@ def centralized_greedy(obj, data, k: int, *, constraint=None, attrs=None,
         return streaming_centralized_greedy(obj, data, k,
                                             constraint=constraint,
                                             attrs=attrs,
-                                            chunk_rows=chunk_rows)
+                                            chunk_rows=chunk_rows,
+                                            prefetch_depth=prefetch_depth)
     n = data.shape[0]
     attrs_j = None if attrs is None else jnp.asarray(attrs, jnp.float32)
     res = algorithms.greedy(obj, data, jnp.ones((n,), bool), k,
@@ -80,7 +82,8 @@ def _chunk_scan(obj, state, rows, cand, cstate, chunk_attrs,
 
 def streaming_centralized_greedy(obj, source: GroundSetSource, k: int, *,
                                  constraint=None, attrs=None,
-                                 chunk_rows: int = 8192) -> BaselineResult:
+                                 chunk_rows: int = 8192,
+                                 prefetch_depth: int = 2) -> BaselineResult:
     """Centralized lazy greedy over a chunk-streamable ground set.
 
     Classic greedy needs all n marginal gains per step; this pass streams
@@ -99,6 +102,12 @@ def streaming_centralized_greedy(obj, source: GroundSetSource, k: int, *,
     Requires a row-wise objective (``obj.rowwise_gains`` — gains and state
     must not depend on block positions), which all streaming-capable
     objectives in :mod:`repro.core.objectives` are.
+
+    ``prefetch_depth`` bounds the background chunk-prefetch buffer (see
+    :func:`repro.core.sources.prefetch_chunks`); the CLI defaults it from
+    the wave autotuner's measured gather/solve rates
+    (:func:`repro.engine.autotune.suggest_prefetch_depth`) when the tree
+    run tuned them, else 2.  Depth never changes chunk order or content.
     """
     assert getattr(obj, "rowwise_gains", False), (
         "streaming centralized greedy needs a row-wise objective "
@@ -128,9 +137,11 @@ def streaming_centralized_greedy(obj, source: GroundSetSource, k: int, *,
         # overlaps this chunk's gain evaluation (repro.engine-style async
         # at the baseline's scale — order and content are unchanged)
         if a and attrs_np is None:
-            yield from prefetch_chunks(source, chunk_rows, with_attrs=True)
+            yield from prefetch_chunks(source, chunk_rows,
+                                       depth=prefetch_depth, with_attrs=True)
         else:
-            for start, rows in prefetch_chunks(source, chunk_rows):
+            for start, rows in prefetch_chunks(source, chunk_rows,
+                                               depth=prefetch_depth):
                 yield start, rows, (attrs_np[start:start + len(rows)]
                                     if a else None)
 

@@ -56,6 +56,7 @@ class ExemplarClustering:
 
     rowwise_gains = True  # gains depend only on candidate rows, not block index
     fused_knapsack = True  # fused_select accepts a weights/budget encoding
+    fused_partition = True  # fused_select accepts a group_ids/caps encoding
 
     # -- pytree plumbing -------------------------------------------------
     def tree_flatten(self):
@@ -89,27 +90,31 @@ class ExemplarClustering:
     # -- fused selection hook (algorithms.greedy fast path) ---------------
     def fused_select(self, T: jax.Array, mask: jax.Array, k: int,
                      weights: jax.Array | None = None,
-                     budget: float | None = None):
+                     budget: float | None = None,
+                     group_ids: jax.Array | None = None,
+                     caps: tuple[int, ...] | None = None):
         """Whole k-step greedy in one fused kernel launch.
 
         Bit-identical to the step-wise greedy scan (lowest-index ties,
         value, oracle-call count) — see kernels/greedy_select.py.  Returns
         ``(sel_idx, sel_mask, value, oracle_calls)``.
 
-        ``weights``/``budget`` encode a knapsack constraint: the kernel
-        feasibility-masks candidates against the running used-weight and
-        the oracle-call count is reconstructed from the selection sequence
-        by replaying the same sequential weight accumulation (O(k·n) jnp,
-        negligible next to the selection itself).
+        ``weights``/``budget`` encode a knapsack constraint and
+        ``group_ids``/``caps`` a partition matroid (they compose — masks
+        AND, exactly the ``Intersection`` conjunction): the kernel
+        feasibility-masks candidates against the running used-weight /
+        per-group counts, and the oracle-call count is reconstructed from
+        the selection sequence by replaying the same sequential state
+        accumulation (O(k·n) jnp, negligible next to the selection itself).
         """
         import jax.numpy as _jnp
         cd = _jnp.bfloat16 if self.score_dtype == "bfloat16" else None
         state = self.init_state(T, mask)
         sel_idx, cur_min = kops.greedy_select(
             T, self.eval_set, state["cur_min"], mask, k, compute_dtype=cd,
-            weights=weights, budget=budget)
+            weights=weights, budget=budget, group_ids=group_ids, caps=caps)
         value = state["base"] - jnp.mean(cur_min)
-        if weights is None:
+        if weights is None and caps is None:
             # step t evaluates one gain per still-available candidate, and a
             # step succeeds iff any candidate remains — closed-form in n_avail
             n_avail = jnp.sum(mask.astype(jnp.int32))
@@ -120,19 +125,31 @@ class ExemplarClustering:
         from repro.core.constraints import KNAPSACK_TOL
         n = T.shape[0]
         sel_mask = sel_idx >= 0
-        w32 = weights.astype(jnp.float32)
+        w32 = None if weights is None else weights.astype(jnp.float32)
+        gid = None if group_ids is None else group_ids.astype(jnp.int32)
+        caps_arr = None if caps is None else jnp.asarray(caps, jnp.int32)
 
         def count_step(carry, idx):
-            used, avail = carry
-            cand = avail & (used + w32 <= budget + KNAPSACK_TOL)
+            used, counts, avail = carry
+            cand = avail
+            if w32 is not None:
+                cand = cand & (used + w32 <= budget + KNAPSACK_TOL)
+            if gid is not None:
+                cand = cand & (counts[gid] < caps_arr[gid])
             c = jnp.sum(cand.astype(jnp.int32))
             ok = idx >= 0
-            used = jnp.where(ok, used + w32[jnp.maximum(idx, 0)], used)
+            safe = jnp.maximum(idx, 0)
+            if w32 is not None:
+                used = jnp.where(ok, used + w32[safe], used)
+            if gid is not None:
+                counts = jnp.where(ok, counts.at[gid[safe]].add(1), counts)
             avail = avail & ~(ok & (jnp.arange(n) == idx))
-            return (used, avail), c
+            return (used, counts, avail), c
 
-        _, per_step = jax.lax.scan(count_step, (jnp.float32(0.0), mask),
-                                   sel_idx)
+        counts0 = jnp.zeros((len(caps) if caps is not None else 1,),
+                            jnp.int32)
+        _, per_step = jax.lax.scan(
+            count_step, (jnp.float32(0.0), counts0, mask), sel_idx)
         return sel_idx, sel_mask, value, jnp.sum(per_step)
 
     # -- set-function oracle (for cross-machine comparison / tests) ------

@@ -50,6 +50,13 @@ class GroundSetSource:
     # so yes; a source wrapping a shared non-reentrant reader sets False and
     # the multi-host planner falls back to sequential per-host gathers.
     supports_concurrent_gather: bool = True
+    # Chunk-prefetch depth for the default re-stream gathers below: the
+    # next chunk's source read overlaps this chunk's row-picking
+    # (:func:`prefetch_chunks` backpressure bound).  Execution knob only —
+    # chunk order and content are unchanged.  The tree driver overrides it
+    # from ``TreeConfig.prefetch_depth``; random-access sources that
+    # override gather() never consult it.
+    prefetch_depth: int = 2
 
     def iter_chunks(self, chunk_rows: int = 8192) -> Iterator[Tuple[int, np.ndarray]]:
         """Yield ``(start, rows)`` covering items [0, n) in index order.
@@ -76,13 +83,15 @@ class GroundSetSource:
     def gather(self, idx: np.ndarray) -> np.ndarray:
         """Rows for host int indices ``idx`` (any shape's flat order).
 
-        Default implementation re-streams :meth:`iter_chunks` and picks the
+        Default implementation re-streams the chunks and picks the
         requested rows as they go by — O(n/chunk) chunk reads, but host
-        memory bounded by O(chunk_rows + len(idx)) rows.
+        memory bounded by O(prefetch_depth·chunk_rows + len(idx)) rows:
+        the pass runs through :func:`prefetch_chunks`, so the next chunk's
+        source read overlaps this chunk's row-picking.
         """
         idx = np.asarray(idx, np.int64).reshape(-1)
         out = np.zeros((idx.size, self.d), self.dtype)
-        for start, rows in self.iter_chunks():
+        for start, rows in prefetch_chunks(self, depth=self.prefetch_depth):
             hit = (idx >= start) & (idx < start + len(rows))
             if hit.any():
                 out[hit] = rows[idx[hit] - start]
@@ -91,14 +100,16 @@ class GroundSetSource:
     def gather_attrs(self, idx: np.ndarray) -> np.ndarray:
         """Attribute rows for host int indices ``idx`` — ``(len(idx), a)``.
 
-        Default re-streams :meth:`iter_chunks_attrs` like :meth:`gather`;
-        sources with random access override with a direct take.
+        Default re-streams the chunks like :meth:`gather` (prefetched at
+        the same depth); sources with random access override with a
+        direct take.
         """
         idx = np.asarray(idx, np.int64).reshape(-1)
         out = np.zeros((idx.size, self.a), np.float32)
         if self.a == 0:
             return out
-        for start, rows, attrs in self.iter_chunks_attrs():
+        for start, rows, attrs in prefetch_chunks(
+                self, depth=self.prefetch_depth, with_attrs=True):
             hit = (idx >= start) & (idx < start + len(rows))
             if hit.any():
                 out[hit] = attrs[idx[hit] - start]
@@ -115,7 +126,8 @@ class GroundSetSource:
         idx = np.asarray(idx, np.int64).reshape(-1)
         rows = np.zeros((idx.size, self.d), self.dtype)
         attrs = np.zeros((idx.size, self.a), np.float32)
-        for start, chunk_rows, chunk_attrs in self.iter_chunks_attrs():
+        for start, chunk_rows, chunk_attrs in prefetch_chunks(
+                self, depth=self.prefetch_depth, with_attrs=True):
             hit = (idx >= start) & (idx < start + len(chunk_rows))
             if hit.any():
                 rows[hit] = chunk_rows[idx[hit] - start]

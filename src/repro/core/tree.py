@@ -37,6 +37,7 @@ from __future__ import annotations
 import dataclasses
 import math
 import os
+import time
 from typing import Any, Callable
 
 import jax
@@ -49,10 +50,14 @@ from repro.core.distributed import (RoundResult, run_round,
                                     shard_round_inputs, stage_wave_inputs)
 from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import ArraySource, GroundSetSource, as_source
+from repro.engine.autotune import (AutotunePlanner, FixedWidthPlanner,
+                                   ScheduledWidthPlanner, WavePlanner,
+                                   bucket_ladder, shape_bound, snap_down)
+from repro.engine.checkpoint import AsyncCheckpointWriter
 from repro.engine.planner import IngestionPlan
 from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
                                     run_waves)
-from repro.engine.stats import EngineStats
+from repro.engine.stats import CheckpointStats, EngineStats, RoundCheckpoint
 
 PERMUTATIONS = ("dense", "feistel")
 
@@ -71,6 +76,10 @@ class TreeConfig:
     hosts: int = 1                     # ingestion hosts sharding the gather
     max_in_flight: int = 2             # pipelined host wave buffers (≥ 2)
     capacity_bytes: int | None = None  # device-byte wave budget (derives W)
+    wave_autotune: bool = False        # rate-tuned per-wave width controller
+    async_checkpoint: bool = False     # background round-boundary writes
+    prefetch_depth: int | None = None  # chunk-prefetch depth (None = default
+    #                                    2, or autotuner-suggested downstream)
 
     def __post_init__(self):
         assert self.capacity > self.k, (
@@ -81,6 +90,11 @@ class TreeConfig:
         assert self.max_in_flight >= 2, self.max_in_flight
         assert self.capacity_bytes is None or self.capacity_bytes > 0, (
             self.capacity_bytes)
+        assert self.prefetch_depth is None or self.prefetch_depth >= 1, (
+            self.prefetch_depth)
+        assert not self.async_checkpoint or self.checkpoint_dir, (
+            "async_checkpoint=True without checkpoint_dir would silently "
+            "write nothing — pass checkpoint_dir (CLI: --ckpt-dir)")
 
     def round_bound(self, n: int) -> int:
         """Prop. 3.1: r ≤ ⌈log_{μ/k}(n/μ)⌉ + 1."""
@@ -116,7 +130,9 @@ class IngestStats:
     ``wall_seconds`` — that gap is exactly the hidden work the engine's
     ``overlap_ratio`` reports.
     """
-    wave_machines: int          # W — machines dispatched per wave
+    wave_machines: int          # W — starting machines per wave (the fixed
+    #                             width, or the autotuner's initial rung;
+    #                             per-wave widths: engine_stats trajectory)
     waves: int                  # number of waves in round 0
     peak_wave_rows: int         # max candidate rows materialized per wave
     peak_wave_bytes: int        # peak_wave_rows · (d + attr_dim) · itemsize
@@ -140,6 +156,7 @@ class TreeResult:
     ingest: IngestStats | None = None   # set by the streaming round-0 path
     sel_attrs: np.ndarray | None = None  # (k, a) attrs of the selection
     engine_stats: EngineStats | None = None  # wave engine trace (round 0)
+    checkpoint_stats: CheckpointStats | None = None  # per-round ckpt overlap
 
 
 # ---------------------------------------------------------------------------
@@ -323,10 +340,44 @@ def _wave_size(cfg: TreeConfig, wave_machines, ndev: int, Mp: int,
     return min(Mp, ndev)
 
 
+def _wave_planner(cfg: TreeConfig, W0: int, ndev: int, Mp: int, mu: int,
+                  width: int, wave_machines, wave_schedule
+                  ) -> tuple[WavePlanner, list[int] | None]:
+    """Width policy for one round-0 run: ``(planner, ladder_or_None)``.
+
+    Precedence: an explicit ``wave_schedule`` (test hook — adversarial
+    trajectories) → ``cfg.wave_autotune`` (EWMA rate controller on the
+    bucket ladder) → the legacy fixed width.
+
+    The autoscaler's ladder cap is the caller's *capacity statement*:
+    ``capacity_bytes`` when given (derived by the same :func:`_wave_size`
+    the fixed path uses, so the weighted-μ byte semantics can never
+    diverge), else an explicit ``wave_machines`` (the user bounded device
+    rows at W·μ — retuning may only shrink waves below that, never grow
+    past it), else the machine count Mp (no bound stated).  The ladder is
+    returned so the caller can assert the re-jit bound; fixed/scheduled
+    policies return None (fixed dispatches ≤ 2 shapes by construction,
+    schedules are test-owned).
+    """
+    if wave_schedule is not None:
+        return ScheduledWidthPlanner(list(wave_schedule)), None
+    if not cfg.wave_autotune:
+        return FixedWidthPlanner(W0), None
+    if cfg.capacity_bytes is not None:
+        w_cap = _wave_size(cfg, None, ndev, Mp, mu, width)
+    elif wave_machines is not None:
+        w_cap = W0                 # W·μ rows is the stated device budget
+    else:
+        w_cap = Mp
+    ladder = bucket_ladder(ndev, max(w_cap, ndev))
+    return AutotunePlanner(ladder, snap_down(ladder, max(W0, ndev))), ladder
+
+
 def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
                    cfg: TreeConfig, mesh, fail_machines, wave_machines,
                    best_rows, best_mask, best_val, total_calls,
-                   constraint=None, attrs_np: np.ndarray | None = None):
+                   constraint=None, attrs_np: np.ndarray | None = None,
+                   wave_schedule=None):
     """Wave-scheduled round-0 ingestion: capacity-bounded replacement for
     ``gather_partition`` over an all-resident ground set.
 
@@ -345,9 +396,13 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     picks the synchronous reference or the double-buffered pipelined
     scheduler (gather of wave t+1 overlaps solve of wave t), and
     ``cfg.hosts`` shards every wave's gather across ingestion hosts via
-    the :class:`repro.engine.planner.IngestionPlan`.  Both knobs change
-    only *when and where* host work happens — the blocks, keys, fold order
-    and outputs stay bit-identical across every engine × hosts combination.
+    the :class:`repro.engine.planner.IngestionPlan`.  Wave *widths* come
+    from a :mod:`repro.engine.autotune` planner — fixed W (legacy), the
+    rate-tuned autoscaler (``cfg.wave_autotune``), or an injected test
+    schedule — decided per wave while the round runs.  All of these are
+    execution knobs only — the blocks, keys, fold order and outputs stay
+    bit-identical across every engine × hosts × width-trajectory
+    combination (machine→wave batching is pure execution policy).
     """
     n, d, mu = source.n, source.d, cfg.capacity
     a = 0
@@ -363,8 +418,28 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     slot_block = _round0_slot_blocks(kpart, n, L, Mp, mu, cfg.permutation)
     ecfg = EngineConfig(mode=cfg.engine, max_in_flight=cfg.max_in_flight,
                         hosts=cfg.hosts)
+    # the depth knob lands on the source: its default re-stream gathers
+    # prefetch chunks at this depth (sliced host views delegate to the
+    # parent, so one assignment covers every shard's gathers).  Only an
+    # explicit config value overrides — a depth the caller already set on
+    # the source object itself must survive the run
+    if cfg.prefetch_depth is not None:
+        source.prefetch_depth = cfg.prefetch_depth
     plan = IngestionPlan.build(source, cfg.hosts) if cfg.hosts > 1 else None
-    waves = [(w0, min(w0 + W, Mp)) for w0 in range(0, Mp, W)]
+    planner, ladder = _wave_planner(cfg, W, ndev, Mp, mu, d + a,
+                                    wave_machines, wave_schedule)
+    cursor = {"w0": 0}    # wave spans are decided per wave by the planner;
+    #                       gather runs on one thread in wave order, so a
+    #                       plain dict cursor is race-free by construction
+
+    def next_span():
+        w0 = cursor["w0"]
+        if w0 >= Mp:
+            return None
+        w = min(planner.next_width(Mp - w0), Mp - w0)
+        assert w >= 1, w
+        cursor["w0"] = w0 + w
+        return w0, w0 + w
 
     def gather_rows(idx_flat: np.ndarray):
         """Rows (+ attrs when constrained) for one wave, a single source
@@ -385,10 +460,13 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         rows, row_attrs = source.gather_with_attrs(idx_flat)
         return rows, row_attrs, None
 
-    def gather(i: int) -> HostWave:
+    def gather(i: int) -> HostWave | None:
         """Host side of wave i: source reads + numpy block assembly.
         Runs on the prefetch thread under the pipelined engine — no JAX."""
-        w0, w1 = waves[i]
+        span = next_span()
+        if span is None:
+            return None                                     # machines done
+        w0, w1 = span
         idx_w = slot_block(w0, w1)                          # (Wb, cap)
         idx_flat = np.maximum(idx_w, 0).reshape(-1)
         rows, row_attrs, per_host = gather_rows(idx_flat)
@@ -426,14 +504,24 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         sol_mask.append(res.sol_mask)
         return v_wave
 
-    estats = run_waves(len(waves), gather, solve, ecfg)
+    estats = run_waves(None, gather, solve, ecfg, on_trace=planner.observe)
     best_rows, best_mask, best_val, total_calls, v_round = carry
+
+    assert cursor["w0"] == Mp and sum(
+        t.machines for t in estats.traces) == Mp, (cursor["w0"], Mp)
+    if ladder is not None:
+        # the re-jit bound: every dispatched width is a ladder rung, so a
+        # run compiles at most ⌊log2(W_max/ndev)⌋ + 2 distinct wave shapes
+        assert set(estats.width_trajectory) <= set(ladder), (
+            estats.width_trajectory, ladder)
+        assert estats.distinct_shapes <= shape_bound(ndev, ladder[-1]), (
+            estats.distinct_shapes, ladder)
 
     rows_in = jnp.concatenate(sol_rows).reshape(-1, d + a)  # union A_1
     mask_in = jnp.concatenate(sol_mask).reshape(-1)
     peak_rows = max(t.rows for t in estats.traces)
     stats = IngestStats(
-        wave_machines=W, waves=len(waves), peak_wave_rows=peak_rows,
+        wave_machines=W, waves=estats.waves, peak_wave_rows=peak_rows,
         peak_wave_bytes=peak_rows * (d + a) * 4, total_machines=Mp,
         attr_dim=a,
         wave_seconds=[t.gather_s + t.solve_s for t in estats.traces],
@@ -478,6 +566,8 @@ def tree_maximize(
     wave_machines: int | None = None,   # streaming round-0 wave size W
     constraint=None,                    # hereditary constraint (constraints.*)
     attrs: np.ndarray | None = None,    # (n, a) per-item attribute rows
+    wave_schedule: list[int] | None = None,  # test hook: forced per-wave
+    #                                     widths (adversarial trajectories)
 ) -> TreeResult:
     """Run Algorithm 1. With ``mesh``, machines shard over devices.
 
@@ -495,9 +585,18 @@ def tree_maximize(
     wave t's solve (bounded by ``cfg.max_in_flight`` host buffers),
     ``cfg.hosts > 1`` shards each gather across ingestion hosts, and
     ``cfg.capacity_bytes`` sizes W by a device-byte budget (weighted-μ:
-    bytes include the attribute columns) instead of a machine count.  All
-    three are execution knobs only — outputs are bit-identical to the
-    synchronous single-host engine, which stays the reference path.
+    bytes include the attribute columns) instead of a machine count.
+    ``cfg.wave_autotune`` hands the per-wave width to the rate-tuned
+    autoscaler (:mod:`repro.engine.autotune`): widths move on a power-of-
+    two bucket ladder, driven by EWMA gather/solve rates from the live
+    wave traces, still hard-capped by the byte budget.
+    ``cfg.async_checkpoint`` overlaps each round-boundary checkpoint write
+    with the next round's repartition + solves (write barrier before the
+    next snapshot and the final result — exact resume preserved;
+    per-round overlap record on ``TreeResult.checkpoint_stats``).  All
+    of these are execution knobs only — outputs are bit-identical to the
+    synchronous single-host fixed-W engine, which stays the reference
+    path, for every width trajectory.
 
     ``constraint`` applies a hereditary constraint from
     :mod:`repro.core.constraints` to every machine's solve (Theorem 3.5).
@@ -515,7 +614,8 @@ def tree_maximize(
     streaming = (isinstance(data, GroundSetSource)
                  or wave_machines is not None
                  or cfg.engine != "sync" or cfg.hosts > 1
-                 or cfg.capacity_bytes is not None)
+                 or cfg.capacity_bytes is not None
+                 or cfg.wave_autotune or wave_schedule is not None)
     if host_rounds:
         if streaming:
             raise ValueError("host_rounds=True supports only all-resident "
@@ -562,56 +662,87 @@ def tree_maximize(
     t = start_round
     ingest: IngestStats | None = None
     engine_stats: EngineStats | None = None
+    # -- checkpoint policy: inline (timed) vs async double-buffered --------
+    # the writer is handed the module-global _save_round lazily so the two
+    # paths share one serializer (and tests may monkeypatch it for both)
+    writer = (AsyncCheckpointWriter(lambda *wa: _save_round(*wa))
+              if cfg.async_checkpoint and cfg.checkpoint_dir else None)
+    ckpt_rounds: list[RoundCheckpoint] = []
 
-    while True:
-        key, kpart, kalg = jax.random.split(key, 3)
-        if t != 0:
-            n_items = int(_host_scalar(jnp.sum(mask_in.astype(jnp.int32))))
-        L = part_lib.n_parts(n_items, mu)
+    try:
+        while True:
+            key, kpart, kalg = jax.random.split(key, 3)
+            if t != 0:
+                n_items = int(_host_scalar(jnp.sum(mask_in.astype(jnp.int32))))
+            L = part_lib.n_parts(n_items, mu)
 
-        if t == 0 and streaming:
-            # ---- wave-scheduled ingestion: ≤ W·μ rows device-resident ----
-            machines_per_round.append(L)
-            (best_rows, best_mask, best_val, total_calls, v_best,
-             rows_in, mask_in, ingest, engine_stats) = _stream_round0(
-                obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
-                wave_machines, best_rows, best_mask, best_val, total_calls,
-                constraint=constraint, attrs_np=attrs_np)
-            round_values.append(_host_scalar(v_best))
-        else:
-            # ---- partition A_t into L balanced parts (virtual-location) --
-            if t == 0:
-                part = _round0_partition(kpart, n, L, mu, cfg.permutation)
-                blocks, bmask = part_lib.gather_partition(data, part)
+            if t == 0 and streaming:
+                # ---- wave-scheduled ingestion: ≤ W·μ rows device-resident
+                machines_per_round.append(L)
+                (best_rows, best_mask, best_val, total_calls, v_best,
+                 rows_in, mask_in, ingest, engine_stats) = _stream_round0(
+                    obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
+                    wave_machines, best_rows, best_mask, best_val,
+                    total_calls, constraint=constraint, attrs_np=attrs_np,
+                    wave_schedule=wave_schedule)
+                round_values.append(_host_scalar(v_best))
             else:
-                blocks, bmask = part_lib.repartition_rows(
-                    rows_in, mask_in, kpart, L, mu)
+                # ---- partition A_t into L balanced parts (virtual-location)
+                if t == 0:
+                    part = _round0_partition(kpart, n, L, mu, cfg.permutation)
+                    blocks, bmask = part_lib.gather_partition(data, part)
+                else:
+                    blocks, bmask = part_lib.repartition_rows(
+                        rows_in, mask_in, kpart, L, mu)
 
-            machines_per_round.append(blocks.shape[0])
-            res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
-                                  fail_machines, attr_dim=a,
-                                  constraint=constraint)
+                machines_per_round.append(blocks.shape[0])
+                res = _dispatch_round(obj, blocks, bmask, kalg, t, cfg, mesh,
+                                      fail_machines, attr_dim=a,
+                                      constraint=constraint)
 
-            best_rows, best_mask, best_val, total_calls, v_best = _fold_round(
-                res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
-                best_rows, best_mask, best_val, total_calls)
-            round_values.append(_host_scalar(v_best))
+                (best_rows, best_mask, best_val, total_calls,
+                 v_best) = _fold_round(
+                    res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
+                    best_rows, best_mask, best_val, total_calls)
+                round_values.append(_host_scalar(v_best))
 
-            # ---- union of partial solutions = next A (stays on device) ---
-            rows_in = res.sol_rows.reshape(-1, d + a)
-            mask_in = res.sol_mask.reshape(-1)
-        t += 1
+                # ---- union of partial solutions = next A (device-resident)
+                rows_in = res.sol_rows.reshape(-1, d + a)
+                mask_in = res.sol_mask.reshape(-1)
+            t += 1
 
-        if cfg.checkpoint_dir:
-            _save_round(cfg.checkpoint_dir, t, _host_array(rows_in),
+            if cfg.checkpoint_dir:
+                # snapshot on the caller thread (device→host pulls produce
+                # fresh buffers the writer owns outright) ...
+                snap = (cfg.checkpoint_dir, t, _host_array(rows_in),
                         _host_array(mask_in), _host_array(best_rows),
-                        _host_array(best_mask),
-                        _host_scalar(best_val), int(_host_scalar(total_calls)))
+                        _host_array(best_mask), _host_scalar(best_val),
+                        int(_host_scalar(total_calls)))
+                if writer is not None:
+                    # ... then overlap the serialize+write with round t+1
+                    # (submit's internal barrier drained write t-1 already)
+                    writer.submit(t, *snap)
+                else:
+                    t0 = time.perf_counter()
+                    _save_round(*snap)
+                    dt = time.perf_counter() - t0
+                    ckpt_rounds.append(RoundCheckpoint(
+                        round=t, write_s=dt, wait_s=dt))
 
-        if L == 1:        # that was the final single-machine round
-            break
-        assert t <= r_bound + 1, (
-            f"round bound violated: {t} > {r_bound} (Prop 3.1)")
+            if L == 1:        # that was the final single-machine round
+                break
+            assert t <= r_bound + 1, (
+                f"round bound violated: {t} > {r_bound} (Prop 3.1)")
+    except BaseException:
+        if writer is not None:
+            writer.abort()    # drain in-flight write; keep the root cause
+        raise
+    ckpt_stats: CheckpointStats | None = None
+    if writer is not None:
+        writer.wait()         # final write barrier: resume-complete on disk
+        ckpt_stats = writer.stats()
+    elif cfg.checkpoint_dir:
+        ckpt_stats = CheckpointStats(mode="sync", rounds=ckpt_rounds)
 
     sel_wide = _host_array(best_rows)
     sel_mask_np = _host_array(best_mask)
@@ -620,7 +751,8 @@ def tree_maximize(
         value=_host_scalar(best_val), rounds=t,
         oracle_calls=int(_host_scalar(total_calls)),
         machines_per_round=machines_per_round, round_values=round_values,
-        ingest=ingest, engine_stats=engine_stats)
+        ingest=ingest, engine_stats=engine_stats,
+        checkpoint_stats=ckpt_stats)
 
 
 def _finish_result(sel_wide: np.ndarray, sel_mask: np.ndarray, d: int,

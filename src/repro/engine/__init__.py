@@ -1,20 +1,34 @@
 """repro.engine — asynchronous round-0 execution engine.
 
-Three layers (see each module's docstring):
+Five layers (see each module's docstring):
 
   * :mod:`repro.engine.scheduler` — sync reference + double-buffered
-    pipelined wave drivers with bounded in-flight backpressure.
+    pipelined wave drivers with bounded in-flight backpressure and
+    dynamic (planner-driven) wave iteration.
+  * :mod:`repro.engine.autotune` — rate-tuned wave autoscaler: bucket-
+    ladder width planners fed by the live per-wave trace stream.
+  * :mod:`repro.engine.checkpoint` — async double-buffered round-boundary
+    checkpoint writer with an explicit write barrier.
   * :mod:`repro.engine.planner` — multi-host sharding of the round-0
     gather (single-process emulation with enforced locality for CI).
-  * :mod:`repro.engine.stats` — per-wave trace + overlap accounting,
-    surfaced on ``TreeResult.engine_stats``.
+  * :mod:`repro.engine.stats` — per-wave trace + overlap accounting and
+    the checkpoint-overlap record, surfaced on ``TreeResult``.
 """
+from repro.engine.autotune import (AutotunePlanner, FixedWidthPlanner,
+                                   ScheduledWidthPlanner, WavePlanner,
+                                   bucket_ladder, shape_bound, snap_down,
+                                   suggest_prefetch_depth)
+from repro.engine.checkpoint import AsyncCheckpointWriter
 from repro.engine.planner import HostShard, IngestionPlan
 from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
                                     run_waves)
-from repro.engine.stats import EngineStats, WaveTrace, overlap_ratio
+from repro.engine.stats import (CheckpointStats, EngineStats,
+                                RoundCheckpoint, WaveTrace, overlap_ratio)
 
 __all__ = [
-    "ENGINES", "EngineConfig", "EngineStats", "HostShard", "HostWave",
-    "IngestionPlan", "WaveTrace", "overlap_ratio", "run_waves",
+    "ENGINES", "AsyncCheckpointWriter", "AutotunePlanner", "CheckpointStats",
+    "EngineConfig", "EngineStats", "FixedWidthPlanner", "HostShard",
+    "HostWave", "IngestionPlan", "RoundCheckpoint", "ScheduledWidthPlanner",
+    "WavePlanner", "WaveTrace", "bucket_ladder", "overlap_ratio",
+    "run_waves", "shape_bound", "snap_down", "suggest_prefetch_depth",
 ]

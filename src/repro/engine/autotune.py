@@ -1,0 +1,268 @@
+"""Rate-tuned wave autoscaler — measurement-driven wave-width control.
+
+The streaming round-0 driver dispatches machine blocks in waves of W
+machines.  PR 4 made W a *static* knob (a machine count or a device-byte
+budget); this module closes the loop: a :class:`WavePlanner` decides every
+wave's width while the round runs, fed by the live :class:`WaveTrace`
+stream the engine already emits.
+
+## Controller model (see PERF.md §PR5)
+
+Per-wave cost of each track decomposes as ``fixed + per_machine·W``:
+
+  * gather — re-streaming a sequential source (or touching every shard of
+    a sharded one) costs nearly the same whether the wave wants 4 or 64
+    machines' worth of rows, so the *fixed* term dominates and per-machine
+    gather cost falls like ``1/W``;
+  * solve — each wave pays one dispatch + fold + host sync, so the same
+    shape applies with a smaller fixed term.
+
+The pipelined engine's wall bound is ``g₀ + max(Σgather, Σsolve)``: the
+bound is *reached* when the two tracks balance (``Σg ≈ Σs``) and the
+binding track's per-wave overhead is amortized away.  The controller
+drives there by greedy descent on the measured **binding-track cost per
+machine** — EWMA-smoothed ``max(gather_s, solve_s) / machines`` per width
+bucket — moving one ladder step per wave in the improving direction and
+holding inside a deadband.  Gather/solve EWMA rates are tracked alongside
+and exported for the trajectory record and the prefetch-depth default.
+
+## Bucket ladder — bounded re-jits
+
+Widths are quantized to ``ndev · 2^j`` buckets (capped by the byte budget
+/ explicit W and by the total machine count), and ragged tails snap *down*
+to the largest bucket that fits, so every dispatched wave shape is a
+ladder rung: a run compiles at most ``⌊log2(W_max/ndev)⌋ + 2`` distinct
+wave shapes (the +2 covers a non-power-of-two cap rung), asserted by the
+tree driver.
+
+## Execution-policy invariant
+
+A planner only ever changes *when* machine blocks are batched into device
+dispatches.  Block contents, per-machine PRNG keys, failure injection and
+the strict wave-order fold are all functions of the machine index alone,
+so ANY width trajectory — adaptive, adversarially scheduled, oscillating —
+is bit-identical to the fixed-W synchronous reference (pinned by
+tests/test_autotune.py).
+"""
+from __future__ import annotations
+
+import math
+import threading
+
+from repro.engine.stats import WaveTrace
+
+_EPS = 1e-9
+
+
+def bucket_ladder(ndev: int, w_max: int) -> list[int]:
+    """Power-of-two width buckets ``ndev·2^j ≤ w_max``, plus ``w_max``
+    itself when the cap is not a rung (budget-derived caps rarely are).
+
+    Every rung is a device multiple; ``w_max`` must be one already.
+    """
+    assert ndev >= 1 and w_max >= ndev, (ndev, w_max)
+    assert w_max % ndev == 0, f"w_max={w_max} not a multiple of ndev={ndev}"
+    ladder = []
+    w = ndev
+    while w <= w_max:
+        ladder.append(w)
+        w *= 2
+    if ladder[-1] != w_max:
+        ladder.append(w_max)
+    return ladder
+
+
+def shape_bound(ndev: int, w_max: int) -> int:
+    """Max distinct wave shapes any planner trajectory may dispatch."""
+    return int(math.floor(math.log2(max(1, w_max // ndev)))) + 2
+
+
+def snap_down(ladder: list[int], width: int) -> int:
+    """Largest rung ≤ ``width`` (``width`` ≥ ladder[0] required)."""
+    assert width >= ladder[0], (width, ladder[0])
+    best = ladder[0]
+    for w in ladder:
+        if w <= width:
+            best = w
+    return best
+
+
+class WavePlanner:
+    """Width decision + trace feedback for one round-0 run.
+
+    ``next_width(remaining)`` is called once per wave, in wave order, from
+    the gather side (the pipelined engine's producer thread);
+    ``observe(trace)`` is called once per *completed* wave from the solve
+    side (always the caller thread).  Implementations are locked because
+    the two sides overlap under the pipelined engine.
+    """
+
+    def next_width(self, remaining: int) -> int:
+        raise NotImplementedError
+
+    def observe(self, trace: WaveTrace) -> None:  # pragma: no cover - default
+        pass
+
+
+class FixedWidthPlanner(WavePlanner):
+    """The legacy static policy: W machines per wave, exact ragged tail.
+
+    Byte-for-byte the wave boundaries PR 2–4 produced, so every existing
+    bit-identity baseline keeps meaning "the fixed-W sync reference".
+    """
+
+    def __init__(self, width: int):
+        assert width >= 1, width
+        self.width = width
+
+    def next_width(self, remaining: int) -> int:
+        return min(self.width, remaining)
+
+
+class ScheduledWidthPlanner(WavePlanner):
+    """Replay an explicit width schedule (test hook: adversarial width
+    trajectories, forced oscillation, resume-trajectory mismatches).
+
+    Widths are clamped to ``remaining``; an exhausted schedule repeats its
+    last entry so any schedule covers any machine count.
+    """
+
+    def __init__(self, widths: list[int]):
+        assert widths and all(w >= 1 for w in widths), widths
+        self._widths = list(widths)
+        self._i = 0
+        self._lock = threading.Lock()
+
+    def next_width(self, remaining: int) -> int:
+        with self._lock:
+            w = self._widths[min(self._i, len(self._widths) - 1)]
+            self._i += 1
+        return min(w, remaining)
+
+
+class AutotunePlanner(WavePlanner):
+    """EWMA rate controller on the bucket ladder (the adaptive policy).
+
+    State per bucket: EWMA of the binding-track cost per machine,
+    ``max(gather_s, solve_s) / machines``.  Decision per wave:
+
+      * warmup — hold the starting bucket until ``warmup`` traces landed;
+      * explore — step one rung in the current direction (initially up:
+        overhead amortization nearly always pays first);
+      * compare — once the new rung has a measurement, keep going while it
+        improved by more than ``deadband``, reverse on a regression, hold
+        when the change is inside the deadband (converged);
+      * clamp at the ladder ends, reversing the direction so a later rate
+        shift (source contention, device slowdown) can still re-tune.
+
+    Gather/solve per-machine EWMAs are tracked for the trajectory record
+    and :func:`suggest_prefetch_depth`.
+    """
+
+    def __init__(self, ladder: list[int], start: int, *, alpha: float = 0.5,
+                 deadband: float = 0.10, warmup: int = 1):
+        assert ladder == sorted(ladder) and len(set(ladder)) == len(ladder)
+        assert start in ladder, (start, ladder)
+        assert 0.0 < alpha <= 1.0 and deadband >= 0.0 and warmup >= 1
+        self._ladder = list(ladder)
+        self._j = ladder.index(start)
+        self._prev_j: int | None = None
+        self._dir = +1
+        self._alpha = alpha
+        self._deadband = deadband
+        self._warmup = warmup
+        self._cost: dict[int, float] = {}   # bucket index -> EWMA s/machine
+        self._visits: dict[int, int] = {}   # bucket index -> waves observed
+        self._n_traces = 0
+        self.ewma_gather_per_machine: float | None = None
+        self.ewma_solve_per_machine: float | None = None
+        self._lock = threading.Lock()
+
+    # -- feedback (solve side) --------------------------------------------
+    def _ewma(self, old: float | None, new: float) -> float:
+        return new if old is None else (1 - self._alpha) * old + self._alpha * new
+
+    def observe(self, trace: WaveTrace) -> None:
+        m = max(1, trace.machines)
+        with self._lock:
+            self._n_traces += 1
+            self.ewma_gather_per_machine = self._ewma(
+                self.ewma_gather_per_machine, trace.gather_s / m)
+            self.ewma_solve_per_machine = self._ewma(
+                self.ewma_solve_per_machine, trace.solve_s / m)
+            # attribute the sample to the rung actually dispatched (ragged
+            # tails snap to rungs, so this always hits the ladder)
+            if trace.machines in self._ladder:
+                j = self._ladder.index(trace.machines)
+                self._visits[j] = self._visits.get(j, 0) + 1
+                # a rung's first wave pays its XLA compile; the controller
+                # scores steady-state rates, so that sample is discarded
+                if self._visits[j] > 1:
+                    self._cost[j] = self._ewma(
+                        self._cost.get(j),
+                        max(trace.gather_s, trace.solve_s) / m)
+
+    # -- decision (gather side) -------------------------------------------
+    def _decide(self) -> int:
+        if self._n_traces < self._warmup:
+            return self._j
+        cur = self._cost.get(self._j)
+        if cur is None:                       # current rung not measured yet
+            return self._j                    # (its first wave is in flight)
+        if self._prev_j is None or self._prev_j not in self._cost:
+            # first exploration move: a ladder-end start flips and probes
+            # the only available direction instead of pinning forever
+            return self._step(self._dir, flip_on_bounce=True)
+        prev = self._cost[self._prev_j]
+        if cur > prev * (1.0 + self._deadband):
+            self._dir = -self._dir            # regressed: go back
+            return self._step(self._dir)
+        if cur < prev * (1.0 - self._deadband):
+            # improving: keep going — unless the next rung in this
+            # direction is already measured meaningfully worse than here.
+            # Without that guard an interior optimum never converges: the
+            # regression flip walks back to the best rung, the best rung
+            # beats the rung just departed, and "improving" would step
+            # straight past the optimum again — a permanent 3-rung cycle.
+            # (At a ladder end this holds: the end rung IS the optimum
+            # until a later regression flips us back.)
+            nxt = self._cost.get(self._j + self._dir)
+            if nxt is not None and nxt > cur * (1.0 + self._deadband):
+                return self._j                # both neighbours worse: hold
+            return self._step(self._dir)
+        return self._j                        # inside deadband: converged
+
+    def _step(self, d: int, flip_on_bounce: bool = False) -> int:
+        j_new = self._j + d
+        if not 0 <= j_new < len(self._ladder):
+            if not flip_on_bounce:
+                return self._j                # hold at the end, keep dir
+            self._dir = -d
+            j_new = self._j + self._dir
+            if not 0 <= j_new < len(self._ladder):
+                return self._j                # single-rung ladder
+        self._prev_j, self._j = self._j, j_new
+        return self._j
+
+    def next_width(self, remaining: int) -> int:
+        with self._lock:
+            j = self._decide()
+            return snap_down(self._ladder, min(self._ladder[j], remaining))
+
+
+def suggest_prefetch_depth(gather_s: float, solve_s: float, *,
+                           lo: int = 2, hi: int = 8) -> int:
+    """Chunk-prefetch depth from measured gather/solve rates.
+
+    The prefetch buffer absorbs gather-latency bursts while the consumer
+    computes: when gathers are slower than the compute that drains them
+    (ratio > 1), a deeper buffer keeps the consumer fed through the bursty
+    stretches; when compute dominates, the minimum double-buffer suffices.
+    Depth is ``1 + ⌈Σgather / Σsolve⌉`` clamped to ``[lo, hi]`` — the
+    tree CLI feeds the autotuner's measured sums here when the user did
+    not pin ``prefetch_depth`` explicitly.
+    """
+    assert 1 <= lo <= hi, (lo, hi)
+    if gather_s <= 0.0 or solve_s <= 0.0:
+        return lo
+    return max(lo, min(hi, 1 + math.ceil(gather_s / max(solve_s, _EPS))))

@@ -1,0 +1,122 @@
+"""Async double-buffered checkpoint writer — hiding the round-boundary write.
+
+The tree driver checkpoints ``A_t`` (rows, masks, best solution, PRNG-
+replayable round counter, oracle totals) at every round boundary so a run
+is restartable at any round.  Synchronously, that write serializes the
+boundary:
+
+    round_t → [snapshot → serialize → fsync-rename] → round_{t+1}
+
+This module moves the serialize-and-write off the round loop:
+
+    round_t → snapshot ┐
+                       ├ (background write of ckpt_t)
+    round_{t+1} ───────┘            wall ≈ max(round_{t+1}, ckpt_t)
+
+* **Snapshot** stays on the caller thread: the device→host pulls produce
+  fresh host numpy buffers, so the background writer never touches JAX or
+  shares mutable state with the next round.
+* **Double buffering / write barrier**: at most one write is in flight;
+  ``submit`` first waits out the previous round's write (that stall is
+  the only checkpoint time the round loop pays, recorded as ``wait_s``),
+  then hands the new snapshot to a fresh daemon thread.  ``wait()`` is
+  the explicit barrier before the final result — and ``abort()`` the
+  quiet one on failure paths — so exact resume semantics are preserved:
+  when ``tree_maximize`` returns (or raises), no write is in flight.
+* **Crash safety** is inherited from the serializer: writes land in a tmp
+  file and are atomically renamed, so a process killed mid-write leaves
+  the previous complete checkpoint in place — resume is bit-identical to
+  resuming the synchronous writer's file (pinned by
+  tests/test_autotune.py's kill-mid-write tests).
+* **Failure propagation**: a write error (disk full, serializer bug) is
+  re-raised on the caller thread at the next barrier — never swallowed,
+  never later than the run's return.
+
+The writer is policy-free about the serialization format: it is handed
+the same ``write_fn`` the synchronous path calls (``tree._save_round``),
+so the two paths can never drift.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable
+
+from repro.engine.stats import CheckpointStats, RoundCheckpoint
+
+
+class AsyncCheckpointWriter:
+    """Background round-checkpoint writer with an explicit write barrier."""
+
+    def __init__(self, write_fn: Callable[..., None]):
+        self._write_fn = write_fn
+        self._thread: threading.Thread | None = None
+        self._pending_round: int | None = None
+        self._exc: BaseException | None = None
+        self._write_s: dict[int, float] = {}
+        self._wait_s: dict[int, float] = {}
+        self._order: list[int] = []
+
+    # -- barrier ----------------------------------------------------------
+    def _join_pending(self) -> float:
+        """Wait out the in-flight write; returns the caller's stall time."""
+        if self._thread is None:
+            return 0.0
+        t0 = time.perf_counter()
+        self._thread.join()
+        stall = time.perf_counter() - t0
+        self._thread = None
+        if self._pending_round is not None:
+            self._wait_s[self._pending_round] = stall
+            self._pending_round = None
+        return stall
+
+    def wait(self) -> None:
+        """Write barrier: block until no write is in flight, re-raising any
+        write failure on the caller thread (final result / pre-snapshot)."""
+        self._join_pending()
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise exc
+
+    def abort(self) -> None:
+        """Failure-path barrier: drain the in-flight write but keep the
+        original exception as the one the caller sees (a secondary write
+        error would mask the root cause)."""
+        self._join_pending()
+        self._exc = None
+
+    # -- submission -------------------------------------------------------
+    def submit(self, round_idx: int, *args: Any, **kwargs: Any) -> None:
+        """Hand one round's host-snapshot buffers to the background writer.
+
+        Blocks only while the *previous* round's write is still running
+        (the double-buffer barrier) — that stall is recorded against the
+        previous round; the new write then runs concurrently with
+        whatever the caller does next.
+        """
+        self.wait()
+
+        def work():
+            t0 = time.perf_counter()
+            try:
+                self._write_fn(*args, **kwargs)
+            except BaseException as exc:   # re-raised at the next barrier
+                self._exc = exc
+            finally:
+                self._write_s[round_idx] = time.perf_counter() - t0
+
+        self._pending_round = round_idx
+        self._order.append(round_idx)
+        self._thread = threading.Thread(
+            target=work, name=f"ckpt-write-r{round_idx}", daemon=True)
+        self._thread.start()
+
+    # -- accounting -------------------------------------------------------
+    def stats(self) -> CheckpointStats:
+        """Per-round write/stall record (call after the final barrier)."""
+        assert self._thread is None, "stats() before the final barrier"
+        return CheckpointStats(mode="async", rounds=[
+            RoundCheckpoint(round=r, write_s=self._write_s.get(r, 0.0),
+                            wait_s=self._wait_s.get(r, 0.0))
+            for r in self._order])

@@ -14,13 +14,22 @@ buffer budget providing backpressure:
     g0 → s0  s1  s2 ...
           g1  g2  g3 ...                     wall ≈ g0 + max(Σg, Σs)
 
-Correctness contract (pinned by tests/test_engine.py):
+Wave *count* may be dynamic: with the PR 5 adaptive autoscaler
+(:mod:`repro.engine.autotune`) each wave's width — and therefore how many
+waves a round takes — is decided while the round runs, so ``run_waves``
+accepts either a static wave count or open-ended iteration where
+``gather(i)`` returns ``None`` once the machine range is exhausted.  The
+``on_trace`` hook feeds each completed :class:`WaveTrace` back to the
+caller (always on the caller thread, in wave order) — that is the
+autotuner's measurement stream.
+
+Correctness contract (pinned by tests/test_engine.py + test_autotune.py):
 
   * **Bit-identity** — the consumer invokes ``solve`` strictly in wave
     order on exactly the host buffers ``gather`` produced, so fold order,
     PRNG key alignment, and failure injection are untouched; pipelined
     output is bit-identical to the sync engine's for any gather/solve
-    pair that is itself deterministic.
+    pair that is itself deterministic, under ANY width trajectory.
   * **Backpressure** — at most ``max_in_flight`` gathered host wave
     buffers exist at any instant (a counting semaphore is acquired before
     a gather starts and released once the wave's buffers have been handed
@@ -51,7 +60,13 @@ ENGINES = ("sync", "pipelined")
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """How round-0 ingestion executes (orthogonal to *what* it computes)."""
+    """How round-0 ingestion executes (orthogonal to *what* it computes).
+
+    The chunk-prefetch depth deliberately is NOT here: the engine never
+    touches sources — that knob lives on
+    :class:`repro.core.sources.GroundSetSource.prefetch_depth` (set from
+    ``TreeConfig.prefetch_depth`` by the tree driver).
+    """
     mode: str = "sync"          # sync | pipelined
     max_in_flight: int = 2      # host wave buffers alive at once (pipelined)
     hosts: int = 1              # ingestion hosts sharding the gather
@@ -76,20 +91,31 @@ class _Abort(Exception):
     """Producer-side signal that the consumer bailed; never escapes."""
 
 
-def run_waves(n_waves: int,
-              gather: Callable[[int], HostWave],
+def run_waves(n_waves: int | None,
+              gather: Callable[[int], HostWave | None],
               solve: Callable[[int, Any], Any],
-              cfg: EngineConfig) -> EngineStats:
-    """Drive ``n_waves`` gather→solve wave pairs under ``cfg.mode``.
+              cfg: EngineConfig,
+              on_trace: Callable[[WaveTrace], None] | None = None,
+              ) -> EngineStats:
+    """Drive gather→solve wave pairs under ``cfg.mode``.
 
     ``gather(i)`` produces wave i's host buffers (called from a background
     thread in pipelined mode — it must not touch JAX); ``solve(i, payload)``
     uploads and dispatches wave i (always called on the caller thread, in
     wave order) and returns a device value to block on.
+
+    ``n_waves=None`` selects open-ended iteration: ``gather`` is called
+    with increasing ``i`` until it returns ``None`` (the adaptive planner
+    deciding widths on the fly cannot know the wave count up front).  With
+    an int, exactly that many waves run and ``gather`` never returns None.
+
+    ``on_trace`` (if given) receives each completed :class:`WaveTrace` on
+    the caller thread, in wave order, *before* the next solve starts —
+    the autotuner's feedback point.
     """
     if cfg.mode == "sync":
-        return _run_sync(n_waves, gather, solve, cfg)
-    return _run_pipelined(n_waves, gather, solve, cfg)
+        return _run_sync(n_waves, gather, solve, cfg, on_trace)
+    return _run_pipelined(n_waves, gather, solve, cfg, on_trace)
 
 
 def _block(x) -> None:
@@ -110,13 +136,17 @@ def _finalize(engine: str, cfg: EngineConfig, traces: list[WaveTrace],
         max_in_flight=max_live, traces=traces)
 
 
-def _run_sync(n_waves, gather, solve, cfg) -> EngineStats:
+def _run_sync(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
     """The bit-identity reference: gather and solve strictly serialized."""
     traces: list[WaveTrace] = []
     t_start = time.perf_counter()
-    for i in range(n_waves):
+    i = 0
+    while n_waves is None or i < n_waves:
         t0 = time.perf_counter()
         hw = gather(i)
+        if hw is None:
+            assert n_waves is None, f"gather({i}) returned None mid-count"
+            break
         t1 = time.perf_counter()
         _block(solve(i, hw.payload))
         t2 = time.perf_counter()
@@ -124,6 +154,9 @@ def _run_sync(n_waves, gather, solve, cfg) -> EngineStats:
             wave=i, machines=hw.machines, rows=hw.rows,
             bytes_moved=hw.bytes_moved, gather_s=t1 - t0, solve_s=t2 - t1,
             per_host_rows=hw.per_host_rows))
+        if on_trace is not None:
+            on_trace(traces[-1])
+        i += 1
     return _finalize("sync", cfg, traces,
                      time.perf_counter() - t_start, max_live=1)
 
@@ -152,7 +185,10 @@ class _BufferGauge:
         self._sem.release()
 
 
-def _run_pipelined(n_waves, gather, solve, cfg) -> EngineStats:
+_DONE = object()   # producer → consumer: no more waves (dynamic mode)
+
+
+def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
     """Double-buffered engine: wave t+1 gathers while wave t solves."""
     out: queue.Queue = queue.Queue(maxsize=max(1, cfg.max_in_flight - 1))
     abort = threading.Event()
@@ -170,7 +206,8 @@ def _run_pipelined(n_waves, gather, solve, cfg) -> EngineStats:
 
     def produce():
         try:
-            for i in range(n_waves):
+            i = 0
+            while n_waves is None or i < n_waves:
                 # backpressure: a wave's buffer is born here and freed by
                 # the consumer only after its payload reached the device
                 if not gauge.acquire(abort):
@@ -178,8 +215,14 @@ def _run_pipelined(n_waves, gather, solve, cfg) -> EngineStats:
                 t0 = time.perf_counter()
                 hw = gather(i)
                 dt = time.perf_counter() - t0
+                if hw is None:
+                    assert n_waves is None, f"gather({i}) None mid-count"
+                    gauge.release()
+                    break
                 if not _put((i, hw, dt, None)):
                     raise _Abort
+                i += 1
+            _put((_DONE, None, 0.0, None))
         except _Abort:
             pass
         except BaseException as exc:  # surface source errors on the caller;
@@ -191,10 +234,13 @@ def _run_pipelined(n_waves, gather, solve, cfg) -> EngineStats:
     t_start = time.perf_counter()
     producer.start()
     try:
-        for expect in range(n_waves):
+        expect = 0
+        while True:
             i, hw, gather_s, exc = out.get()
             if exc is not None:
                 raise exc
+            if i is _DONE:
+                break
             assert i == expect, f"wave order broke: got {i}, want {expect}"
             t1 = time.perf_counter()
             handle = solve(i, hw.payload)
@@ -207,6 +253,9 @@ def _run_pipelined(n_waves, gather, solve, cfg) -> EngineStats:
                 wave=i, machines=hw.machines, rows=hw.rows,
                 bytes_moved=hw.bytes_moved, gather_s=gather_s,
                 solve_s=t2 - t1, per_host_rows=hw.per_host_rows))
+            if on_trace is not None:
+                on_trace(traces[-1])
+            expect += 1
     finally:
         abort.set()
         producer.join(timeout=30.0)

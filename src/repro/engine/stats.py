@@ -49,6 +49,19 @@ class EngineStats:
     max_in_flight: int          # high-water mark of live host wave buffers
     traces: list[WaveTrace] = dataclasses.field(default_factory=list)
 
+    @property
+    def width_trajectory(self) -> list[int]:
+        """Machines per dispatched wave, in wave order — the autoscaler's
+        decision record (constant under the fixed-W policy)."""
+        return [t.machines for t in self.traces]
+
+    @property
+    def distinct_shapes(self) -> int:
+        """Distinct wave widths dispatched = distinct XLA wave shapes this
+        run compiled (the autotuner's bucket ladder bounds this by
+        ``⌊log2(W_max/ndev)⌋ + 2`` — see repro.engine.autotune)."""
+        return len(set(self.width_trajectory))
+
     def summary(self) -> dict:
         """JSON-able record for benchmark trajectory files."""
         return {
@@ -59,6 +72,65 @@ class EngineStats:
             "bytes_moved": self.bytes_moved,
             "overlap_ratio": round(self.overlap_ratio, 4),
             "max_in_flight": self.max_in_flight,
+            "width_trajectory": self.width_trajectory,
+            "distinct_shapes": self.distinct_shapes,
+        }
+
+
+@dataclasses.dataclass
+class RoundCheckpoint:
+    """Accounting for one round-boundary checkpoint write."""
+    round: int                  # round index the checkpoint snapshots
+    write_s: float              # serialize + file write (background thread
+    #                             under the async writer, inline otherwise)
+    wait_s: float               # caller stall attributable to this write:
+    #                             the barrier wait before the NEXT snapshot
+    #                             (async) or the whole write (sync)
+
+    @property
+    def hidden_s(self) -> float:
+        """Write seconds overlapped with the next round's compute."""
+        return max(0.0, self.write_s - self.wait_s)
+
+
+@dataclasses.dataclass
+class CheckpointStats:
+    """Per-run checkpoint-overlap record (surfaced on ``TreeResult``).
+
+    The async writer overlaps round t's serialized write with round t+1's
+    repartition + solves; ``wall ≈ max(round_{t+1}, ckpt_t)`` instead of
+    the synchronous ``round_{t+1} + ckpt_t`` (PERF.md §PR5).  ``wait_s``
+    is the only checkpoint time the round loop actually *paid*; the rest
+    of ``write_s`` was hidden.
+    """
+    mode: str                   # "sync" | "async"
+    rounds: list[RoundCheckpoint] = dataclasses.field(default_factory=list)
+
+    @property
+    def write_s(self) -> float:
+        return sum(r.write_s for r in self.rounds)
+
+    @property
+    def wait_s(self) -> float:
+        return sum(r.wait_s for r in self.rounds)
+
+    @property
+    def hidden_s(self) -> float:
+        return sum(r.hidden_s for r in self.rounds)
+
+    @property
+    def hidden_fraction(self) -> float:
+        """Fraction of the total write wall hidden under compute."""
+        w = self.write_s
+        return 0.0 if w <= 0.0 else min(1.0, self.hidden_s / w)
+
+    def summary(self) -> dict:
+        return {
+            "mode": self.mode, "rounds": len(self.rounds),
+            "write_s": round(self.write_s, 4),
+            "wait_s": round(self.wait_s, 4),
+            "hidden_s": round(self.hidden_s, 4),
+            "hidden_fraction": round(self.hidden_fraction, 4),
         }
 
 

@@ -41,18 +41,29 @@ selected); ``E`` rows and ``cur_min`` are zero-padded so padded eval columns
 contribute ``max(0 - ||x||², 0) = 0`` exactly.  The gains normalisation uses
 the *unpadded* eval-set size.
 
-## Knapsack extension
+## Constraint extensions
 
-An optional per-candidate weight operand (``weights``/``budget``) encodes
-the one hereditary constraint with a fused-path representation: the running
-used-weight lives in one SMEM scalar, a step's candidates are masked to
-``used + w ≤ budget + KNAPSACK_TOL`` before the argmax, and the winner's
-weight is committed alongside the ``cur_min`` refresh.  Selection order,
-ties, and the failure step (no feasible candidate → -1 forever after) are
-bit-identical to the feasibility-masked step-wise scan; richer constraint
-classes (partition matroids, intersections) have step-dependent masks that
-do not reduce to a scalar and stay on the scan path (see
-``core/algorithms._fusable``).
+Two hereditary constraint classes reduce to tiny sequential state and ride
+inside the kernel (and compose — their feasibility masks AND, matching the
+step-wise ``Intersection`` conjunction):
+
+  * **Knapsack** (``weights``/``budget``): the running used-weight lives in
+    one SMEM scalar; a step's candidates are masked to
+    ``used + w ≤ budget + KNAPSACK_TOL`` before the argmax, and the
+    winner's weight is committed alongside the ``cur_min`` refresh.
+  * **Partition matroid** (``group_ids``/``caps``): the running per-group
+    selection counts live in a ``(G,)`` SMEM int32 vector (caps are small
+    static ints, G is tiny); a step's candidates are masked to
+    ``counts[gid] < caps[gid]`` via a static unrolled loop over groups
+    (SMEM scalar compares broadcast against the block's gid column — no
+    gather needed), and the winner's group count is incremented on commit.
+    Group ids must lie in ``[0, G)``; the tree layer's independent NumPy
+    checker rejects out-of-range ids before they could reach the kernel.
+
+Selection order, ties, and the failure step (no feasible candidate → -1
+forever after) are bit-identical to the feasibility-masked step-wise scan
+for both classes and their intersection; richer constraint classes keep
+the scan path (see ``core/algorithms._fusable``).
 """
 from __future__ import annotations
 
@@ -75,13 +86,17 @@ def _knapsack_tol() -> float:
 
 
 def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
-            compute_dtype, budget: float | None, tol: float = 0.0):
-    if budget is not None:
-        (w_ref, sel_ref, cmout_ref,
-         cm_s, av_s, bv_s, bi_s, used_s) = rest
-    else:
-        w_ref = used_s = None
-        sel_ref, cmout_ref, cm_s, av_s, bv_s, bi_s = rest
+            compute_dtype, budget: float | None,
+            caps: tuple[int, ...] | None, tol: float = 0.0):
+    # operand/scratch unpacking mirrors the pallas_call assembly below:
+    # inputs [w?, gid?] → outputs (sel, cmout) → scratch [.., used?, cnt?]
+    it = iter(rest)
+    w_ref = next(it) if budget is not None else None
+    gid_ref = next(it) if caps is not None else None
+    sel_ref, cmout_ref, cm_s, av_s, bv_s, bi_s = (
+        next(it), next(it), next(it), next(it), next(it), next(it))
+    used_s = next(it) if budget is not None else None
+    cnt_s = next(it) if caps is not None else None
     s = pl.program_id(0)
     i = pl.program_id(1)
     nb = pl.num_programs(1)
@@ -93,6 +108,9 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
         av_s[...] = av0_ref[...]
         if budget is not None:
             used_s[0] = 0.0
+        if caps is not None:
+            for g in range(len(caps)):
+                cnt_s[g] = 0
 
     # ---- gains for candidate block i against the resident eval set -------
     x = x_ref[pl.ds(i * bn, bn), :]                      # (bn, d)
@@ -112,12 +130,20 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
     g = jnp.sum(jnp.maximum(cm - d2, 0.0), axis=-1,
                 keepdims=True) / m_true                  # (bn, 1)
     av = av_s[pl.ds(i * bn, bn), :]                      # (bn, 1)
+    feas = av > 0
     if budget is not None:
         w = w_ref[pl.ds(i * bn, bn), :]                  # (bn, 1)
-        feas = used_s[0] + w <= budget + tol
-        g = jnp.where((av > 0) & feas, g, NEG_INF)
-    else:
-        g = jnp.where(av > 0, g, NEG_INF)
+        feas = feas & (used_s[0] + w <= budget + tol)
+    if caps is not None:
+        gid = gid_ref[pl.ds(i * bn, bn), :]              # (bn, 1) int32
+        # static unrolled conjunction over the (tiny) group set: each
+        # group's open/closed bit is one SMEM scalar compare, broadcast
+        # against the block's gid column — no SMEM gather required
+        open_any = jnp.zeros_like(gid, dtype=jnp.bool_)
+        for grp in range(len(caps)):
+            open_any = open_any | ((gid == grp) & (cnt_s[grp] < caps[grp]))
+        feas = feas & open_any
+    g = jnp.where(feas, g, NEG_INF)
 
     # ---- cross-block argmax via scratch accumulator ----------------------
     bmax = jnp.max(g)
@@ -152,6 +178,11 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
         if budget is not None:
             wv = w_ref[pl.ds(bi, 1), :]                  # (1, 1) winner weight
             used_s[0] = jnp.where(ok, used_s[0] + wv[0, 0], used_s[0])
+        if caps is not None:
+            gv = gid_ref[pl.ds(bi, 1), :][0, 0]          # winner's group id
+            for grp in range(len(caps)):
+                cnt_s[grp] = jnp.where(ok & (gv == grp), cnt_s[grp] + 1,
+                                       cnt_s[grp])
         sel_ref[0, 0] = jnp.where(ok, bi, jnp.int32(-1))
 
         @pl.when(s == ns - 1)
@@ -161,19 +192,21 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("k", "bn", "m_true", "compute_dtype",
-                                    "budget", "interpret"))
+                                    "budget", "caps", "interpret"))
 def greedy_select_pallas(
     X: jax.Array,        # (n, d) candidates — n % bn == 0 (wrapper pads)
     E: jax.Array,        # (mp, d) eval set — zero-padded rows
     cur_min: jax.Array,  # (mp,)            — zero-padded
     avail: jax.Array,    # (n,) float32 1/0 — padded rows 0
     weights: jax.Array | None = None,  # (n,) knapsack weights — padded rows 0
+    group_ids: jax.Array | None = None,  # (n,) int32 group ids — padded 0
     *,
     k: int,
     bn: int = 256,
     m_true: int | None = None,
     compute_dtype=None,
     budget: float | None = None,
+    caps: tuple[int, ...] | None = None,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     n, d = X.shape
@@ -181,10 +214,12 @@ def greedy_select_pallas(
     m_true = mp if m_true is None else m_true
     assert n % bn == 0, (n, bn)
     assert (weights is None) == (budget is None), "weights and budget pair up"
+    assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
     grid = (k, n // bn)
 
     kern = functools.partial(_kernel, bn=bn, m_true=m_true,
                              compute_dtype=compute_dtype, budget=budget,
+                             caps=caps,
                              tol=_knapsack_tol() if budget is not None else 0.0)
     in_specs = [
         pl.BlockSpec((n, d), lambda s, i: (0, 0)),   # X resident
@@ -203,6 +238,10 @@ def greedy_select_pallas(
         in_specs.append(pl.BlockSpec((n, 1), lambda s, i: (0, 0)))  # weights
         scratch.append(pltpu.SMEM((1,), jnp.float32))    # used weight so far
         operands.append(weights.astype(jnp.float32)[:, None])
+    if caps is not None:
+        in_specs.append(pl.BlockSpec((n, 1), lambda s, i: (0, 0)))  # gids
+        scratch.append(pltpu.SMEM((len(caps),), jnp.int32))  # per-group counts
+        operands.append(group_ids.astype(jnp.int32)[:, None])
     sel, cm = pl.pallas_call(
         kern,
         grid=grid,

@@ -105,9 +105,10 @@ _GREEDY_SELECT_VMEM_BUDGET = 12 * 1024 * 1024
 
 
 def _greedy_select_fits_vmem(n: int, m: int, d: int, bn: int) -> bool:
-    # X, E, cur_min, avail (+ the knapsack weight column, ≤ n words more —
-    # budgeted unconditionally so constrained dispatch can't regress) fp32
-    resident = (n * d + m * d + m + 2 * n) * 4
+    # X, E, cur_min, avail (+ the knapsack weight and partition group-id
+    # columns, ≤ 2n words more — budgeted unconditionally so constrained
+    # dispatch can't regress) fp32/int32
+    resident = (n * d + m * d + m + 3 * n) * 4
     tile = bn * m * 4                             # one gains tile
     return resident + tile <= _GREEDY_SELECT_VMEM_BUDGET
 
@@ -125,6 +126,8 @@ def greedy_select(
     compute_dtype=None,
     weights: jax.Array | None = None,
     budget: float | None = None,
+    group_ids: jax.Array | None = None,
+    caps: tuple[int, ...] | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused k-step greedy selection for exemplar clustering.
 
@@ -135,8 +138,12 @@ def greedy_select(
     ``weights``/``budget`` (both or neither) thread a knapsack constraint
     through both impls: candidates are feasibility-masked against the
     sequentially accumulated used-weight exactly as ``constraints.Knapsack``
-    masks the step-wise scan, so the bit-identity contract extends to the
-    constrained selection.
+    masks the step-wise scan.  ``group_ids``/``caps`` (both or neither)
+    thread a partition matroid the same way — a running per-group count
+    vector (SMEM-resident in the Pallas impl) mirrors
+    ``constraints.PartitionMatroid``.  The two compose (masks AND, states
+    commit independently), matching the step-wise ``Intersection``, so the
+    bit-identity contract extends to every fused-constraint combination.
 
     The Pallas megakernel keeps X and E resident in VMEM, so ``auto``
     additionally requires them to fit (:func:`_greedy_select_fits_vmem`);
@@ -145,12 +152,14 @@ def greedy_select(
     ``impl="pallas"`` overrides the capacity check (tests, experiments).
     """
     assert (weights is None) == (budget is None), "weights and budget pair up"
+    assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
     oversized = not _greedy_select_fits_vmem(X.shape[0], E.shape[0],
                                              X.shape[1], bn)
     if not _use_pallas(impl) or (impl == "auto" and oversized):
         return ref.greedy_select(X, E, cur_min, mask, k,
                                  compute_dtype=compute_dtype,
-                                 weights=weights, budget=budget)
+                                 weights=weights, budget=budget,
+                                 group_ids=group_ids, caps=caps)
     n, m = X.shape[0], E.shape[0]
     bn = min(bn, max(8, n))
     bm = min(bm, max(8, m))
@@ -158,9 +167,12 @@ def greedy_select(
     avp = _pad_rows(mask.astype(jnp.float32), bn)
     Ep = _pad_rows(E, bm)
     cmp_ = _pad_rows(cur_min, bm)  # zero-pad ⇒ padded columns contribute 0
-    # padded weight rows are availability-0, their weight value is inert
+    # padded weight/group rows are availability-0, their values are inert
     wp = None if weights is None else _pad_rows(weights.astype(jnp.float32), bn)
     bud = None if budget is None else float(budget)
+    gp = (None if group_ids is None
+          else _pad_rows(group_ids.astype(jnp.int32), bn))
+    cp = None if caps is None else tuple(int(c) for c in caps)
     # score with the dtype the step-wise oracle would actually use in this
     # environment: exemplar_gains' pallas branch (TPU) always contracts
     # fp32, while its ref branch (interpret testing) honors compute_dtype —
@@ -168,9 +180,9 @@ def greedy_select(
     # different items and void the bit-identity contract
     cd = None if _on_tpu() else (
         None if compute_dtype is None else jnp.dtype(compute_dtype).name)
-    sel, cm = greedy_select_pallas(Xp, Ep, cmp_, avp, wp, k=k, bn=bn, m_true=m,
-                                   compute_dtype=cd, budget=bud,
-                                   interpret=_interpret())
+    sel, cm = greedy_select_pallas(Xp, Ep, cmp_, avp, wp, gp, k=k, bn=bn,
+                                   m_true=m, compute_dtype=cd, budget=bud,
+                                   caps=cp, interpret=_interpret())
     return sel, cm[:m]
 
 

@@ -53,7 +53,10 @@ def exemplar_gains(X: jax.Array, E: jax.Array, cur_min: jax.Array,
 def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
                   mask: jax.Array, k: int,
                   compute_dtype=None, weights: jax.Array | None = None,
-                  budget: float | None = None) -> tuple[jax.Array, jax.Array]:
+                  budget: float | None = None,
+                  group_ids: jax.Array | None = None,
+                  caps: tuple[int, ...] | None = None
+                  ) -> tuple[jax.Array, jax.Array]:
     """Fused k-step exemplar-clustering greedy selection (pure-jnp oracle).
 
     Runs the entire k-item greedy loop in one call and returns
@@ -74,6 +77,15 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
     ``used + weights ≤ budget + KNAPSACK_TOL`` under the sequentially
     accumulated fp32 ``used`` — exactly the feasibility test and update
     order of ``constraints.Knapsack`` inside the step-wise scan.
+
+    ``group_ids``/``caps`` (both or neither) encode a partition matroid:
+    the running per-group count vector admits item i while
+    ``counts[gid_i] < caps[gid_i]`` and the winner's group is incremented
+    on commit — exactly ``constraints.PartitionMatroid``'s feasibility
+    test and update (group ids must lie in ``[0, len(caps))``; the
+    independent NumPy checker rejects out-of-range ids at the tree layer).
+    Both constraint encodings compose (their masks AND), matching the
+    step-wise ``Intersection`` conjunction.
     """
     from repro.core.constraints import KNAPSACK_TOL
 
@@ -82,14 +94,19 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
     d2 = _sqdist(X, E, compute_dtype)                 # (n, m), step-invariant
     neg_inf = jnp.float32(-1e30)
     assert (weights is None) == (budget is None), "weights and budget pair up"
+    assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
+    if caps is not None:
+        caps_arr = jnp.asarray(caps, jnp.int32)
+        gid = group_ids.astype(jnp.int32)
 
     def step(carry, _):
-        cm, avail, used = carry
+        cm, avail, used, counts = carry
         g = jnp.sum(jnp.maximum(cm[None, :] - d2, 0.0), axis=-1) / m
-        if weights is None:
-            cand = avail
-        else:
-            cand = avail & (used + weights <= budget + KNAPSACK_TOL)
+        cand = avail
+        if weights is not None:
+            cand = cand & (used + weights <= budget + KNAPSACK_TOL)
+        if caps is not None:
+            cand = cand & (counts[gid] < caps_arr[gid])
         g = jnp.where(cand, g, neg_inf)
         best = jnp.argmax(g)                          # lowest index on ties
         ok = g[best] > neg_inf / 2
@@ -98,12 +115,15 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
         cm = jnp.where(ok, jnp.minimum(cm, d2b), cm)
         if weights is not None:
             used = jnp.where(ok, used + weights[best], used)
+        if caps is not None:
+            counts = jnp.where(ok, counts.at[gid[best]].add(1), counts)
         avail = avail & ~(ok & (jnp.arange(n) == best))
         idx = jnp.where(ok, best.astype(jnp.int32), jnp.int32(-1))
-        return (cm, avail, used), idx
+        return (cm, avail, used, counts), idx
 
-    (cur_min, _, _), sel_idx = jax.lax.scan(
-        step, (cur_min, mask, jnp.float32(0.0)), None, length=k)
+    counts0 = jnp.zeros((len(caps) if caps is not None else 1,), jnp.int32)
+    (cur_min, _, _, _), sel_idx = jax.lax.scan(
+        step, (cur_min, mask, jnp.float32(0.0), counts0), None, length=k)
     return sel_idx, cur_min
 
 

@@ -5,6 +5,7 @@
         [--algorithm greedy|stochastic_greedy|threshold_greedy] \
         [--source resident|chunked|sharded] [--wave-machines W] \
         [--engine sync|pipelined] [--hosts P] [--capacity-bytes B] \
+        [--wave-autotune] [--async-checkpoint] [--prefetch-depth D] \
         [--constraint knapsack:budget=2.5 | partition:caps=4,4,4 | ...] \
         [--permutation dense|feistel] \
         [--ckpt-dir DIR --resume] [--fail round:ids]
@@ -30,6 +31,19 @@ gives per-run gather/solve seconds and the measured overlap ratio.  With a
 non-resident source the centralized comparison column also streams (the
 chunked lazy-greedy pass — no all-resident array anywhere in the run).
 
+``--wave-autotune`` turns the static W into a measurement-driven policy:
+the rate-tuned autoscaler (``repro.engine.autotune``) retunes the wave
+width per wave from EWMA gather/solve rates, quantized to a power-of-two
+bucket ladder (re-jits stay log2-bounded, asserted) and still hard-capped
+by ``--capacity-bytes``.  ``--async-checkpoint`` (with ``--ckpt-dir``)
+hands each round-boundary checkpoint write to a background thread so it
+overlaps the next round's work — exact resume semantics preserved by a
+write barrier before every snapshot and the final result.  Both are pure
+execution policy: output stays bit-identical to the fixed-W synchronous
+run.  ``--prefetch-depth`` pins the chunk-prefetch depth of the streamed
+centralized column; unset, it defaults from the autotuner's measured
+gather/solve rates when those exist.
+
 ``--constraint`` applies a hereditary constraint to every machine's solve
 (grammar: ``knapsack:budget=F[:col=I]``, ``partition:caps=I,I,..[:col=I]``,
 ``intersection:<spec>+<spec>``).  Per-item attributes are synthesized
@@ -54,7 +68,7 @@ from repro.core import (ChunkedSource, ExemplarClustering, Intersection,
                         constraint_from_spec, make_submod_mesh, randgreedi,
                         tree_maximize)
 from repro.core.tree import PERMUTATIONS
-from repro.engine import ENGINES
+from repro.engine import ENGINES, suggest_prefetch_depth
 from repro.data import datasets
 from repro.data.sources import ShardedSource
 
@@ -119,6 +133,18 @@ def main():
     ap.add_argument("--capacity-bytes", type=int, default=None,
                     help="device-byte wave budget; derives W from bytes "
                          "including attribute columns (weighted-μ capacity)")
+    ap.add_argument("--wave-autotune", action="store_true",
+                    help="rate-tuned wave autoscaler: retune W per wave "
+                         "from measured gather/solve rates (bucket ladder, "
+                         "log2-bounded re-jits, bit-identical output)")
+    ap.add_argument("--async-checkpoint", action="store_true",
+                    help="background round-boundary checkpoint writes "
+                         "overlapping the next round (needs --ckpt-dir; "
+                         "exact resume preserved)")
+    ap.add_argument("--prefetch-depth", type=int, default=None,
+                    help="chunk-prefetch depth for streamed source passes "
+                         "(default: 2, or autotuner-suggested when "
+                         "--wave-autotune measured the rates)")
     ap.add_argument("--chunk-rows", type=int, default=4096,
                     help="rows per chunk/shard for --source chunked|sharded")
     ap.add_argument("--constraint", default=None,
@@ -174,7 +200,10 @@ def main():
                      algorithm=args.algorithm, eps=args.eps, seed=args.seed,
                      checkpoint_dir=args.ckpt_dir, resume=args.resume,
                      permutation=args.permutation, engine=args.engine,
-                     hosts=args.hosts, capacity_bytes=args.capacity_bytes)
+                     hosts=args.hosts, capacity_bytes=args.capacity_bytes,
+                     wave_autotune=args.wave_autotune,
+                     async_checkpoint=args.async_checkpoint,
+                     prefetch_depth=args.prefetch_depth)
     res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
                         wave_machines=args.wave_machines,
                         constraint=constraint, attrs=attrs_arg)
@@ -194,18 +223,33 @@ def main():
               f"wall={es.wall_s:.3f}s gather={es.gather_s:.3f}s "
               f"solve={es.solve_s:.3f}s overlap={es.overlap_ratio:.2%} "
               f"bytes={es.bytes_moved} max_in_flight={es.max_in_flight}")
+        if args.wave_autotune:
+            print(f"autotune: widths={es.width_trajectory} "
+                  f"distinct_shapes={es.distinct_shapes}")
+    if res.checkpoint_stats is not None:
+        ck = res.checkpoint_stats
+        print(f"checkpoint: {ck.mode} rounds={len(ck.rounds)} "
+              f"write={ck.write_s:.3f}s stalled={ck.wait_s:.3f}s "
+              f"hidden={ck.hidden_fraction:.2%}")
     if constraint is not None:
         ok, detail = check_feasible(constraint, res.sel_attrs, res.sel_mask)
         print(f"feasibility: {'OK' if ok else 'VIOLATED'} ({detail})")
         assert ok
     if not args.no_centralized:
         # non-resident runs stream the centralized column too (chunked lazy
-        # greedy) — nothing in the comparison needs the all-resident array
+        # greedy) — nothing in the comparison needs the all-resident array.
+        # prefetch depth: explicit flag, else the autotuner's measured rates
+        depth = args.prefetch_depth
+        if depth is None and args.wave_autotune and res.engine_stats is not None:
+            depth = suggest_prefetch_depth(res.engine_stats.gather_s,
+                                           res.engine_stats.solve_s)
+            print(f"prefetch-depth: {depth} (from autotuned gather/solve "
+                  f"rates)")
         cg = centralized_greedy(
             obj, dj if args.source == "resident" else ground, args.k,
             constraint=constraint,
             attrs=attrs if args.source == "resident" else None,
-            chunk_rows=args.chunk_rows)
+            chunk_rows=args.chunk_rows, prefetch_depth=depth or 2)
         print(f"centralized greedy{' (constrained)' if constraint else ''}"
               f"{' [streamed]' if args.source != 'resident' else ''}: "
               f"f={float(cg.value):.6f} "

@@ -1,0 +1,455 @@
+"""Adaptive execution (PR 5): the rate-tuned wave autoscaler and the async
+checkpoint writer must be pure *execution* changes — output bit-identical
+to the fixed-W synchronous reference for EVERY width trajectory (adaptive,
+adversarially scheduled, oscillating, ragged-tailed) and every checkpoint
+mode (sync, async, async killed mid-write) — with the bucket ladder's
+re-jit bound asserted and exact resume semantics preserved."""
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ChunkedSource, ExemplarClustering, Knapsack,
+                        PartitionMatroid, TreeConfig, centralized_greedy,
+                        tree_maximize)
+from repro.data.sources import ShardedSource
+from repro.engine import (AutotunePlanner, FixedWidthPlanner,
+                          ScheduledWidthPlanner, WaveTrace, bucket_ladder,
+                          shape_bound, snap_down, suggest_prefetch_depth)
+
+
+def _setup(n=601, d=8, ne=128, seed=0):
+    r = np.random.default_rng(seed)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    E = data[r.choice(n, ne, replace=False)]
+    return data, ExemplarClustering(jnp.asarray(E))
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.sel_rows, b.sel_rows)
+    np.testing.assert_array_equal(a.sel_mask, b.sel_mask)
+    assert a.value == b.value                      # bit-identical, no rtol
+    assert a.oracle_calls == b.oracle_calls
+    assert a.rounds == b.rounds
+    assert a.machines_per_round == b.machines_per_round
+    assert a.round_values == b.round_values
+
+
+def _trace(machines, gather_s, solve_s, wave=0):
+    return WaveTrace(wave=wave, machines=machines, rows=machines,
+                     bytes_moved=4 * machines, gather_s=gather_s,
+                     solve_s=solve_s)
+
+
+# ---------------------------------------------------------------------------
+# controller units: ladder, snapping, planner policies
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ladder_and_shape_bound():
+    assert bucket_ladder(1, 8) == [1, 2, 4, 8]
+    assert bucket_ladder(2, 16) == [2, 4, 8, 16]
+    assert bucket_ladder(2, 12) == [2, 4, 8, 12]   # non-pow2 cap is a rung
+    assert bucket_ladder(4, 4) == [4]
+    for ndev, wmax in ((1, 8), (2, 12), (1, 1000), (4, 64)):
+        ladder = bucket_ladder(ndev, wmax)
+        assert len(ladder) <= shape_bound(ndev, wmax)
+        assert all(w % ndev == 0 for w in ladder)
+        assert ladder[-1] == wmax
+    assert snap_down([1, 2, 4, 8], 7) == 4
+    assert snap_down([1, 2, 4, 8], 8) == 8
+    assert snap_down([2, 4], 3) == 2
+
+
+def test_fixed_planner_keeps_legacy_wave_boundaries():
+    p = FixedWidthPlanner(3)
+    assert [p.next_width(r) for r in (10, 7, 4, 1)] == [3, 3, 3, 1]
+
+
+def test_scheduled_planner_replays_and_clamps():
+    p = ScheduledWidthPlanner([1, 7, 2])
+    assert p.next_width(100) == 1
+    assert p.next_width(100) == 7
+    assert p.next_width(100) == 2
+    assert p.next_width(100) == 2          # exhausted: repeat last
+    assert p.next_width(1) == 1            # clamped to remaining
+
+
+def test_autotuner_climbs_when_larger_buckets_measure_better():
+    """Per-wave cost dominated by a fixed term ⇒ per-machine cost falls
+    with width ⇒ the controller must walk up the ladder and stay there."""
+    ladder = bucket_ladder(1, 16)
+    p = AutotunePlanner(ladder, start=1, warmup=1)
+    widths = []
+    for _ in range(24):
+        w = p.next_width(1_000)
+        widths.append(w)
+        # fixed 10ms per wave + 1ms per machine on the binding track
+        p.observe(_trace(w, gather_s=0.010 + 0.001 * w, solve_s=0.001))
+    assert widths[-1] == 16, widths          # reached (and held) the top
+    assert widths == sorted(widths), widths  # monotone climb, no thrash
+    assert set(widths) <= set(ladder)
+
+
+def test_autotuner_backs_off_on_regression():
+    """When a larger bucket measures *worse* per machine (e.g. it blows a
+    host cache), the controller must step back and settle below it."""
+    ladder = bucket_ladder(1, 16)
+    p = AutotunePlanner(ladder, start=1, warmup=1)
+    widths = []
+    for _ in range(30):
+        w = p.next_width(1_000)
+        widths.append(w)
+        # amortizing fixed overhead rewards climbing — until width ≥ 8
+        # falls off a cliff (10× per-machine cost)
+        g = 0.008 + 0.001 * w if w < 8 else 0.020 * w
+        p.observe(_trace(w, gather_s=g, solve_s=0.0001))
+    assert widths[-1] < 8, widths            # settled under the cliff
+    assert 8 in widths or 16 in widths       # it did probe upward first
+
+
+def test_autotuner_converges_at_interior_optimum():
+    """An optimum strictly inside the ladder must be a fixed point: after
+    probing the worse rung above it, the controller holds — it must NOT
+    re-compare against the rung it just left, read 'improving', and cycle
+    past the optimum forever."""
+    ladder = bucket_ladder(1, 16)
+    cost = {1: 1.0, 2: 0.55, 4: 0.30, 8: 0.45, 16: 0.90}   # optimum W=4
+    p = AutotunePlanner(ladder, start=1, warmup=1)
+    widths = []
+    for _ in range(40):
+        w = p.next_width(10_000)
+        widths.append(w)
+        p.observe(_trace(w, gather_s=cost[w] * w, solve_s=0.0001))
+    assert 8 in widths                       # it probed past the optimum
+    assert all(w == 4 for w in widths[-10:]), widths  # then held at it
+
+
+def test_autotuner_survives_forced_oscillation():
+    """Adversarial feedback — costs that always make the *other* rung look
+    better — must keep the controller on the ladder (never an invalid
+    width, never outside [1, remaining]) and keep making progress."""
+    ladder = bucket_ladder(1, 8)
+    p = AutotunePlanner(ladder, start=2, warmup=1)
+    flip = [False]
+    total = 0
+    for _ in range(40):
+        w = p.next_width(10_000 - total)
+        assert w in ladder and 1 <= w <= 10_000 - total
+        total += w
+        flip[0] = not flip[0]
+        # alternate which width looks expensive → worst-case thrash
+        per_m = 0.01 if flip[0] else 0.0001
+        p.observe(_trace(w, gather_s=per_m * w, solve_s=0.0001))
+    assert total > 40                        # progress was made regardless
+
+
+def test_autotuner_discards_first_sample_at_new_rung():
+    """The first wave at a fresh rung pays XLA compile; that sample must
+    not poison the rung's score (the controller would bounce off every
+    new rung and never climb)."""
+    ladder = bucket_ladder(1, 8)
+    p = AutotunePlanner(ladder, start=1, warmup=1)
+    visits: dict[int, int] = {}
+    widths = []
+    for _ in range(24):
+        w = p.next_width(1_000)
+        widths.append(w)
+        visits[w] = visits.get(w, 0) + 1
+        # steady-state per-machine cost falls with width, but the FIRST
+        # wave at each width is 50× more expensive (compile)
+        per_m = (0.050 if visits[w] == 1 else 0.001) * (8.0 / w)
+        p.observe(_trace(w, gather_s=per_m * w, solve_s=0.0001))
+    assert widths[-1] == 8, widths           # compile spikes did not pin it
+
+
+def test_suggest_prefetch_depth():
+    assert suggest_prefetch_depth(0.0, 0.0) == 2          # no data → default
+    assert suggest_prefetch_depth(0.1, 10.0) == 2         # compute-bound
+    assert suggest_prefetch_depth(10.0, 2.0) == 6         # gather-bound
+    assert suggest_prefetch_depth(100.0, 0.1) == 8        # clamped hi
+    assert suggest_prefetch_depth(10.0, 2.0, lo=3, hi=4) == 4
+
+
+# ---------------------------------------------------------------------------
+# tentpole: every width trajectory is bit-identical to fixed-W sync
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_autotune_bit_identical_to_fixed_sync(engine):
+    data, obj = _setup(n=901, seed=1)
+    ref = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=5),
+                        wave_machines=3)
+    auto = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                         TreeConfig(k=8, capacity=60, seed=5, engine=engine,
+                                    wave_autotune=True))
+    _assert_identical(ref, auto)
+    es = auto.engine_stats
+    assert sum(es.width_trajectory) == ref.ingest.total_machines
+    ndev = 1
+    assert es.distinct_shapes <= shape_bound(ndev, ref.ingest.total_machines)
+
+
+def test_autotune_respects_explicit_wave_machines_cap():
+    """wave_machines without a byte budget is a capacity statement (W·μ
+    device rows): the autoscaler may shrink waves below it but must never
+    grow past it toward the full-resident footprint."""
+    data, obj = _setup(n=901, seed=7)
+    res = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=9,
+                                   engine="pipelined", wave_autotune=True),
+                        wave_machines=4)
+    assert max(res.engine_stats.width_trajectory) <= 4
+    assert res.ingest.peak_wave_rows <= 4 * 60
+    ref = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=9),
+                        wave_machines=4)
+    _assert_identical(ref, res)
+
+
+def test_autotune_respects_byte_budget_ladder_cap():
+    data, obj = _setup(n=901, seed=2)
+    mu, d = 60, data.shape[1]
+    budget = 5 * mu * d * 4                  # ladder capped at W=5
+    res = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=mu, seed=3,
+                                   engine="pipelined", wave_autotune=True,
+                                   capacity_bytes=budget))
+    assert max(res.engine_stats.width_trajectory) <= 5
+    assert res.ingest.peak_wave_bytes <= budget
+    ref = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=mu, seed=3),
+                        wave_machines=3)
+    _assert_identical(ref, res)
+
+
+@pytest.mark.parametrize("schedule", [
+    [1], [2], [4], [8], [16],                    # every rung, ragged tails
+    [1, 8, 1, 8, 1, 8],                          # forced oscillation
+    [5, 1, 7, 2, 16, 1],                         # arbitrary adversarial mix
+    [16, 16],                                    # oversized → clamped tail
+], ids=["w1", "w2", "w4", "w8", "w16", "oscillate", "mixed", "oversized"])
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_adversarial_width_schedules_bit_identical(engine, schedule):
+    data, obj = _setup(n=901, seed=3)
+    ref = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=7),
+                        wave_machines=3)
+    got = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=7, engine=engine),
+                        wave_schedule=schedule)
+    _assert_identical(ref, got)
+    assert sum(got.engine_stats.width_trajectory) == ref.ingest.total_machines
+
+
+def test_adversarial_schedule_constrained_and_sharded():
+    data, obj = _setup(n=780, seed=4)
+    r = np.random.default_rng(11)
+    attrs = np.stack([r.uniform(0.2, 1.0, len(data)),
+                      r.integers(0, 3, len(data))], 1).astype(np.float32)
+    cons = PartitionMatroid(caps=(3, 3, 3), col=1)
+
+    def mk():
+        return ShardedSource.from_arrays(
+            [data[s:s + 130] for s in range(0, len(data), 130)],
+            attrs=[attrs[s:s + 130] for s in range(0, len(data), 130)])
+
+    ref = tree_maximize(obj, mk(), TreeConfig(k=8, capacity=60, seed=2),
+                        wave_machines=2, constraint=cons)
+    got = tree_maximize(obj, mk(),
+                        TreeConfig(k=8, capacity=60, seed=2,
+                                   engine="pipelined", hosts=2),
+                        wave_schedule=[3, 1, 5, 1], constraint=cons)
+    _assert_identical(ref, got)
+    np.testing.assert_array_equal(ref.sel_attrs, got.sel_attrs)
+
+
+def test_resume_across_different_width_trajectories(tmp_path, monkeypatch):
+    """A checkpoint written by an adaptively-waved pipelined run must
+    resume bit-identically under a *different* trajectory (fixed W, other
+    schedule) — the checkpoint is width-agnostic state."""
+    from repro.core import tree as tree_lib
+
+    data, obj = _setup(n=700, seed=5)
+
+    def run(ckpt=None, resume=False, **kw):
+        return tree_maximize(
+            obj, ChunkedSource.from_array(data, 100),
+            TreeConfig(k=8, capacity=60, seed=6, checkpoint_dir=ckpt,
+                       resume=resume, **kw.pop("cfg", {})), **kw)
+
+    full = run(wave_machines=2)
+    assert full.rounds >= 2
+
+    ck = str(tmp_path / "ck")
+    real_save = tree_lib._save_round
+
+    def crash_after_round_1(d, round_idx, *a):
+        real_save(d, round_idx, *a)
+        if round_idx == 1:
+            raise KeyboardInterrupt("simulated crash")
+
+    monkeypatch.setattr(tree_lib, "_save_round", crash_after_round_1)
+    with pytest.raises(KeyboardInterrupt):
+        run(ckpt=ck, wave_schedule=[1, 5, 2],
+            cfg=dict(engine="pipelined"))     # crash under trajectory A
+    monkeypatch.setattr(tree_lib, "_save_round", real_save)
+
+    for i, kw in enumerate((dict(wave_machines=2),          # fixed W
+                            dict(wave_schedule=[7, 1, 1]),  # trajectory B
+                            dict(cfg=dict(wave_autotune=True,
+                                          engine="pipelined")))):  # adaptive
+        import shutil
+        ck_i = str(tmp_path / f"ck{i}")     # each variant resumes the CRASH
+        shutil.copytree(ck, ck_i)           # checkpoint, not a predecessor's
+        resumed = run(ckpt=ck_i, resume=True, **dict(kw))
+        np.testing.assert_array_equal(resumed.sel_rows, full.sel_rows)
+        np.testing.assert_array_equal(resumed.sel_mask, full.sel_mask)
+        assert resumed.value == full.value
+        assert resumed.oracle_calls == full.oracle_calls
+        assert resumed.rounds == full.rounds
+        assert resumed.machines_per_round == full.machines_per_round[1:]
+
+
+# ---------------------------------------------------------------------------
+# async checkpoint writer: identity, overlap stats, kill-mid-write
+# ---------------------------------------------------------------------------
+
+
+def test_async_checkpoint_bit_identical_and_overlapped(tmp_path):
+    data, obj = _setup(n=901, seed=6)
+
+    def run(mode_kw, ckpt):
+        return tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                             TreeConfig(k=8, capacity=60, seed=4,
+                                        checkpoint_dir=ckpt, **mode_kw),
+                             wave_machines=3)
+
+    plain = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                          TreeConfig(k=8, capacity=60, seed=4),
+                          wave_machines=3)
+    sync = run({}, str(tmp_path / "s"))
+    asyn = run(dict(async_checkpoint=True, engine="pipelined"),
+               str(tmp_path / "a"))
+    _assert_identical(plain, sync)
+    _assert_identical(plain, asyn)
+    assert plain.checkpoint_stats is None
+    assert sync.checkpoint_stats.mode == "sync"
+    assert sync.checkpoint_stats.hidden_s == 0.0
+    cs = asyn.checkpoint_stats
+    assert cs.mode == "async"
+    assert len(cs.rounds) == asyn.rounds - 0  # one write per round boundary
+    assert cs.write_s > 0
+    assert 0.0 <= cs.hidden_fraction <= 1.0
+    s = cs.summary()
+    assert s["mode"] == "async" and s["rounds"] == len(cs.rounds)
+    # both checkpoint files are complete and identical (same final round)
+    a = np.load(os.path.join(str(tmp_path / "s"), "tree_round.npz"))
+    b = np.load(os.path.join(str(tmp_path / "a"), "tree_round.npz"))
+    for key in ("round", "rows", "mask", "best_rows", "best_mask",
+                "best_val", "calls"):
+        np.testing.assert_array_equal(a[key], b[key])
+
+
+def test_async_checkpoint_killed_mid_write_resumes_exactly(tmp_path,
+                                                          monkeypatch):
+    """Kill the background writer mid-write (before the atomic rename):
+    the error surfaces at the next barrier, the previous round's complete
+    checkpoint survives on disk, and resuming from it finishes
+    bit-identically to the uninterrupted run."""
+    from repro.core import tree as tree_lib
+
+    data, obj = _setup(n=700, seed=7)
+    ck = str(tmp_path / "ck")
+
+    def cfg(resume=False, async_ckpt=True):
+        return TreeConfig(k=8, capacity=60, seed=6, checkpoint_dir=ck,
+                          resume=resume, async_checkpoint=async_ckpt,
+                          engine="pipelined")
+
+    full = tree_maximize(obj, ChunkedSource.from_array(data, 100),
+                         TreeConfig(k=8, capacity=60, seed=6),
+                         wave_machines=2)
+    assert full.rounds >= 3                  # need a round beyond the kill
+
+    real_save = tree_lib._save_round
+
+    def die_mid_write_round_2(d, round_idx, *a):
+        if round_idx == 2:
+            # partial tmp write then death — exactly what a kill leaves
+            with open(os.path.join(d, "tree_round.tmp.npz"), "wb") as f:
+                f.write(b"partial garbage")
+            raise RuntimeError("writer killed mid-write")
+        real_save(d, round_idx, *a)
+
+    monkeypatch.setattr(tree_lib, "_save_round", die_mid_write_round_2)
+    with pytest.raises(RuntimeError, match="killed mid-write"):
+        tree_maximize(obj, ChunkedSource.from_array(data, 100), cfg(),
+                      wave_machines=2)
+    monkeypatch.setattr(tree_lib, "_save_round", real_save)
+
+    # the atomic-rename contract: round 1's complete checkpoint survives
+    saved = np.load(os.path.join(ck, "tree_round.npz"))
+    assert int(saved["round"]) == 1
+
+    resumed = tree_maximize(obj, ChunkedSource.from_array(data, 100),
+                            cfg(resume=True), wave_machines=2)
+    np.testing.assert_array_equal(resumed.sel_rows, full.sel_rows)
+    np.testing.assert_array_equal(resumed.sel_mask, full.sel_mask)
+    assert resumed.value == full.value
+    assert resumed.oracle_calls == full.oracle_calls
+    assert resumed.rounds == full.rounds
+    assert resumed.machines_per_round == full.machines_per_round[1:]
+
+
+def test_async_checkpoint_failure_injection_identity(tmp_path):
+    """Failure injection + async checkpoints: the write barrier on the
+    normal path must not disturb dropped-machine semantics."""
+    data, obj = _setup(n=700, seed=8)
+    fail = {0: [0, 2], 1: [1]}
+    ref = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=7),
+                        wave_machines=2, fail_machines=fail)
+    got = tree_maximize(obj, ChunkedSource.from_array(data, 128),
+                        TreeConfig(k=8, capacity=60, seed=7,
+                                   engine="pipelined", wave_autotune=True,
+                                   async_checkpoint=True,
+                                   checkpoint_dir=str(tmp_path / "ck")),
+                        fail_machines=fail)
+    _assert_identical(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# prefetch-depth plumbing (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_depth_plumbs_and_preserves_output():
+    data, obj = _setup(n=500, seed=9)
+    ref = centralized_greedy(obj, jnp.asarray(data), 10)
+    for depth in (1, 2, 5):
+        st = centralized_greedy(obj, ChunkedSource.from_array(data, 97), 10,
+                                chunk_rows=97, prefetch_depth=depth)
+        assert float(st.value) == float(ref.value)
+        np.testing.assert_array_equal(np.asarray(st.sel_rows),
+                                      np.asarray(ref.sel_rows))
+    # TreeConfig carries the knob and it lands on the source the wave
+    # gathers actually consult (the default re-stream prefetch depth)
+    src = ChunkedSource.from_array(data, 97)
+    res = tree_maximize(obj, src,
+                        TreeConfig(k=8, capacity=60, seed=1,
+                                   prefetch_depth=4), wave_machines=2)
+    assert res.value is not None
+    assert src.prefetch_depth == 4
+    with pytest.raises(AssertionError):
+        TreeConfig(k=8, capacity=60, prefetch_depth=0)
+
+
+def test_async_checkpoint_requires_checkpoint_dir():
+    """async_checkpoint without a checkpoint_dir must be rejected up
+    front, not silently write nothing."""
+    with pytest.raises(AssertionError, match="checkpoint_dir"):
+        TreeConfig(k=8, capacity=60, async_checkpoint=True)

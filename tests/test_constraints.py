@@ -286,21 +286,75 @@ def test_fused_knapsack_bit_identical_to_scan():
         assert int(scan.oracle_calls) == int(fused.oracle_calls)
 
 
-def test_fused_dispatch_falls_back_for_non_knapsack():
-    """Partition/intersection constraints have no fused encoding: auto
-    dispatch must take the feasibility-masked scan, and fused=True must
-    refuse rather than silently drop the constraint."""
+def test_fused_partition_bit_identical_to_scan():
+    """The megakernel's per-group count-vector encoding must reproduce the
+    feasibility-masked scan exactly: selection order, ties, value bits,
+    the reconstructed oracle-call count, and the failure step when every
+    group saturates (caps are exhausted before k)."""
+    data, obj = _setup(n=128, seed=4)
+    T = jnp.asarray(data)
+    msk = jnp.ones((len(data),), bool)
+    attrs = jnp.asarray(_attrs(len(data), seed=4))
+    for caps in ((1, 1, 1, 1),          # saturating: failure step before k
+                 (3, 2, 4, 1),          # uneven binding caps
+                 (99, 99, 99, 99)):     # never-binding
+        c = PartitionMatroid(caps, col=1)
+        scan = greedy(obj, T, msk, 20, constraint=c, attrs=attrs, fused=False)
+        fused = greedy(obj, T, msk, 20, constraint=c, attrs=attrs, fused=True)
+        np.testing.assert_array_equal(np.asarray(scan.sel_idx),
+                                      np.asarray(fused.sel_idx))
+        np.testing.assert_array_equal(np.asarray(scan.sel_mask),
+                                      np.asarray(fused.sel_mask))
+        assert float(scan.value) == float(fused.value)
+        assert int(scan.oracle_calls) == int(fused.oracle_calls)
+        if caps == (1, 1, 1, 1):
+            assert int(np.asarray(scan.sel_mask).sum()) == 4  # Σcaps
+
+
+def test_fused_intersection_knapsack_partition_bit_identical():
+    """An Intersection of one knapsack + one partition matroid fuses (both
+    operand encodings ride the kernel, masks AND) and must match the
+    scan's conjunction semantics bit for bit."""
+    data, obj = _setup(n=96, seed=6)
+    T = jnp.asarray(data)
+    msk = jnp.ones((len(data),), bool)
+    attrs = jnp.asarray(_attrs(len(data), seed=6))
+    c = Intersection((Knapsack(2.0, col=0),
+                      PartitionMatroid((3, 3, 3, 3), col=1)))
+    scan = greedy(obj, T, msk, 16, constraint=c, attrs=attrs, fused=False)
+    fused = greedy(obj, T, msk, 16, constraint=c, attrs=attrs, fused=True)
+    np.testing.assert_array_equal(np.asarray(scan.sel_idx),
+                                  np.asarray(fused.sel_idx))
+    np.testing.assert_array_equal(np.asarray(scan.sel_mask),
+                                  np.asarray(fused.sel_mask))
+    assert float(scan.value) == float(fused.value)
+    assert int(scan.oracle_calls) == int(fused.oracle_calls)
+
+
+def test_fused_dispatch_falls_back_for_unfusable_constraints():
+    """Only knapsack, partition matroid, and an intersection of at most
+    one of each have fused encodings: anything else must take the
+    feasibility-masked scan, and fused=True must refuse rather than
+    silently drop the constraint."""
     from repro.core.algorithms import _fusable
     data, obj = _setup(n=64, seed=5)
     attrs = jnp.asarray(_attrs(len(data), seed=5))
     assert _fusable(obj, None, None)
     assert _fusable(obj, Knapsack(1.0), attrs)
-    assert not _fusable(obj, PartitionMatroid((2, 2, 2, 2), col=1), attrs)
-    assert not _fusable(obj, Intersection((Knapsack(1.0),)), attrs)
+    assert _fusable(obj, PartitionMatroid((2, 2, 2, 2), col=1), attrs)
+    assert _fusable(obj, Intersection((Knapsack(1.0),)), attrs)
+    assert _fusable(obj, Intersection(
+        (Knapsack(1.0), PartitionMatroid((2, 2, 2, 2), col=1))), attrs)
+    # two knapsacks would need two SMEM used-weight scalars — scan path
+    assert not _fusable(obj, Intersection(
+        (Knapsack(1.0, col=0), Knapsack(2.0, col=0))), attrs)
+    assert not _fusable(obj, Intersection(
+        (PartitionMatroid((2, 2), col=1), PartitionMatroid((3, 3), col=1))),
+        attrs)
     with pytest.raises(AssertionError):
         greedy(obj, jnp.asarray(data), jnp.ones((len(data),), bool), 4,
-               constraint=PartitionMatroid((2, 2, 2, 2), col=1), attrs=attrs,
-               fused=True)
+               constraint=Intersection((Knapsack(1.0), Knapsack(2.0))),
+               attrs=attrs, fused=True)
 
 
 def test_ops_greedy_select_knapsack_pallas_matches_ref():
@@ -323,6 +377,62 @@ def test_ops_greedy_select_knapsack_pallas_matches_ref():
     sel = np.asarray(s_ref)
     first_fail = np.argmax(sel < 0) if (sel < 0).any() else len(sel)
     assert (sel[first_fail:] < 0).all()
+
+
+def test_ops_greedy_select_partition_pallas_matches_ref():
+    """Kernel-level contract: interpret-mode Pallas == pure-jnp reference
+    for the per-group count-vector path, alone and composed with the
+    weight operand (padding rows exercise the inert-gid contract)."""
+    r = np.random.default_rng(8)
+    X = jnp.asarray(r.standard_normal((100, 8)).astype(np.float32))  # pads
+    E = jnp.asarray(r.standard_normal((48, 8)).astype(np.float32))
+    gid = jnp.asarray(r.integers(0, 3, 100).astype(np.float32))
+    w = jnp.asarray(r.uniform(0.1, 1.0, 100).astype(np.float32))
+    cm0 = jnp.sum(E * E, axis=-1)
+    mask = jnp.ones((100,), bool)
+    for kw in (dict(group_ids=gid, caps=(4, 2, 3)),
+               dict(group_ids=gid, caps=(2, 2, 2),
+                    weights=w, budget=2.0)):
+        s_ref, c_ref = ops.greedy_select(X, E, cm0, mask, 12, impl="ref",
+                                         **kw)
+        s_pal, c_pal = ops.greedy_select(X, E, cm0, mask, 12, impl="pallas",
+                                         **kw)
+        np.testing.assert_array_equal(np.asarray(s_ref), np.asarray(s_pal))
+        np.testing.assert_allclose(np.asarray(c_ref), np.asarray(c_pal),
+                                   rtol=1e-6)
+        # selected group counts never exceed the caps
+        sel = np.asarray(s_ref)
+        gids = np.asarray(gid)[sel[sel >= 0]].astype(int)
+        counts = np.bincount(gids, minlength=len(kw["caps"]))
+        assert (counts <= np.asarray(kw["caps"])).all(), (counts, kw)
+
+
+def test_constrained_tree_uses_fused_partition_path():
+    """End-to-end: a partition-constrained tree run dispatches the fused
+    selection (no scan fallback on this hot path) and stays bit-identical
+    to the scan-forced driver."""
+    import repro.core.algorithms as alg_lib
+    data, obj = _setup(n=240, seed=9)
+    attrs = _attrs(len(data), seed=9)
+    c = PartitionMatroid((4, 4, 4, 4), col=1)
+    cfg = TreeConfig(k=8, capacity=40, seed=3)
+    res = tree_maximize(obj, jnp.asarray(data), cfg, constraint=c,
+                        attrs=attrs)
+    assert alg_lib._fusable(obj, c, jnp.asarray(attrs))  # the hot path fuses
+    ok, detail = check_feasible(c, res.sel_attrs, res.sel_mask)
+    assert ok, detail
+    # scan-forced reference: monkeypatch _fusable to refuse, outputs equal
+    real = alg_lib._fusable
+    alg_lib._fusable = lambda *a: False
+    try:
+        ref_res = tree_maximize(obj, jnp.asarray(data), cfg, constraint=c,
+                                attrs=attrs)
+    finally:
+        alg_lib._fusable = real
+    np.testing.assert_array_equal(res.sel_rows, ref_res.sel_rows)
+    np.testing.assert_array_equal(res.sel_mask, ref_res.sel_mask)
+    assert res.value == ref_res.value
+    assert res.oracle_calls == ref_res.oracle_calls
 
 
 def test_constrained_baselines_and_source_identity():
