@@ -1,0 +1,139 @@
+"""Fault supervision benchmark (PR 6): recovery overhead + degradation.
+
+One fault-free pipelined baseline, then seeded chaos cells through the
+same run:
+
+  * **transient sweep** — injected transient gather-failure rates; every
+    cell must finish *bit-identical* to the baseline (retries are
+    invisible in the output), so the interesting numbers are the recovery
+    overhead: retry count, wall spent in backoff, wall spent inside
+    recoveries, and the end-to-end wall inflation.
+  * **dead-host cell** — a permanent host loss mid-round-0; the planner
+    re-routes the dead host's contiguous shard range to the survivors and
+    the run again ends bit-identical (eviction is lossless).
+  * **kill-wave cells** — waves that fail every retry are *dropped* and
+    their machines folded as dead.  These cells chart the actual quality
+    loss against the dropped row fraction — the measured counterpart of
+    the Lemma 3.4 / Barbosa et al. (1−p)·f expectation model in
+    PERF.md §PR6 — and each is asserted to clear that bound.
+  * **hedge cell** — deterministic straggler waves (injected latency on
+    the first attempt) under the hedged re-gather policy: the hedge wins,
+    the output stays bit-identical, and the wall saved vs eating the full
+    injected latency is recorded.
+
+Record lands in ``BENCH_PR6.json`` via ``benchmarks/run.py --only
+faults``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import ExemplarClustering, TreeConfig, tree_maximize
+from repro.data.sources import synthetic_sharded_source
+from repro.engine import FaultInjector, FaultPolicy, FaultProfile
+
+
+def _setup(n, d):
+    src = synthetic_sharded_source(n=n, d=d, shard_rows=max(2048, n // 16),
+                                   seed=0)
+    rng = np.random.default_rng(0)
+    ev = synthetic_sharded_source(
+        n=n, d=d, shard_rows=max(2048, n // 16),
+        seed=0).gather(rng.choice(n, 256, replace=False))
+    return src, ExemplarClustering(jnp.asarray(ev))
+
+
+def _run_one(n, d, k, mu, wave, hosts=1, policy=None, profile=None, seed=0):
+    src, obj = _setup(n, d)
+    cfg = TreeConfig(k=k, capacity=mu, seed=seed, engine="pipelined",
+                     hosts=hosts, fault_policy=policy)
+    inj = FaultInjector(profile) if profile is not None else None
+    with Timer() as t:
+        res = tree_maximize(obj, src, cfg, wave_machines=wave,
+                            fault_injector=inj)
+    rec = {"wall_sec": round(t.s, 3), "value": float(res.value),
+           "oracle_calls": res.oracle_calls}
+    if res.fault_stats is not None:
+        rec["faults"] = res.fault_stats.summary()
+    return res, rec
+
+
+def run(quick: bool = True):
+    n = 20_000 if quick else 200_000
+    d, k, mu, wave = 16, 16, 250, 4
+    policy = FaultPolicy(max_retries=4, backoff_s=0.002, backoff_max_s=0.02,
+                         hedge=False)
+    out: dict = {"config": {"n": n, "d": d, "k": k, "mu": mu, "wave": wave}}
+
+    base, rec = _run_one(n, d, k, mu, wave)
+    out["baseline"] = rec
+    print(f"faults,baseline,wall={rec['wall_sec']},f={rec['value']:.6f}")
+
+    # --- transient sweep: recovery is bit-invisible; record its overhead
+    out["transient"] = []
+    for rate in (0.1, 0.3):
+        res, rec = _run_one(n, d, k, mu, wave, policy=policy,
+                            profile=FaultProfile(transient_rate=rate, seed=7))
+        fs = res.fault_stats
+        assert float(res.value) == float(base.value), (rate, "not identical")
+        assert np.array_equal(res.sel_rows, base.sel_rows)
+        assert fs.dropped_rows == 0
+        rec["transient_rate"] = rate
+        rec["wall_inflation"] = round(
+            rec["wall_sec"] / max(1e-9, out["baseline"]["wall_sec"]), 3)
+        out["transient"].append(rec)
+        print(f"faults,transient,rate={rate},retries={fs.retries},"
+              f"backoff={fs.backoff_s:.3f}s,"
+              f"inflation={rec['wall_inflation']}")
+
+    # --- permanent host loss: lossless eviction mid-round-0
+    res, rec = _run_one(n, d, k, mu, wave, hosts=3, policy=policy,
+                        profile=FaultProfile(dead_host=1, dead_host_wave=2,
+                                             seed=0))
+    base3, rec3 = _run_one(n, d, k, mu, wave, hosts=3)
+    assert float(res.value) == float(base3.value), "eviction not lossless"
+    assert np.array_equal(res.sel_rows, base3.sel_rows)
+    assert res.fault_stats.evictions == 1
+    rec["hosts"] = 3
+    out["dead_host"] = rec
+    print(f"faults,dead_host,evictions=1,wall={rec['wall_sec']}")
+
+    # --- graceful degradation: dropped waves vs the (1−p)·f model
+    out["degradation"] = []
+    for kill in ((1,), (1, 3)):
+        res, rec = _run_one(n, d, k, mu, wave, policy=policy,
+                            profile=FaultProfile(kill_waves=kill, seed=0))
+        fs = res.fault_stats
+        p = fs.dropped_fraction
+        ratio = float(res.value) / float(base.value)
+        assert fs.dropped_waves == len(kill)
+        assert ratio >= 1.0 - p, (ratio, p)    # Barbosa et al. bound
+        rec.update(kill_waves=list(kill), dropped_fraction=round(p, 4),
+                   value_ratio=round(ratio, 4),
+                   expected_floor=round(1.0 - p, 4))
+        out["degradation"].append(rec)
+        print(f"faults,degrade,killed={len(kill)},p={p:.3f},"
+              f"ratio={ratio:.4f},floor={1 - p:.4f}")
+
+    # --- hedged re-gather: straggler latency raced away, output identical
+    latency = 0.25
+    hedge_pol = FaultPolicy(max_retries=4, backoff_s=0.002, hedge=True,
+                            hedge_factor=3.0, hedge_min_waves=2)
+    res, rec = _run_one(n, d, k, mu, wave, policy=hedge_pol,
+                        profile=FaultProfile(slow_waves=(3, 5),
+                                             latency_s=latency, seed=0))
+    fs = res.fault_stats
+    assert float(res.value) == float(base.value), "hedge changed the output"
+    assert np.array_equal(res.sel_rows, base.sel_rows)
+    assert fs.hedges >= 1
+    rec["injected_straggler_sec"] = 2 * latency
+    rec["wall_over_baseline_sec"] = round(
+        rec["wall_sec"] - out["baseline"]["wall_sec"], 3)
+    out["hedge"] = rec
+    print(f"faults,hedge,hedges={fs.hedges},won={fs.hedges_won},"
+          f"extra_wall={rec['wall_over_baseline_sec']}s"
+          f",injected={2 * latency}s")
+    return out

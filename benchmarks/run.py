@@ -11,12 +11,14 @@
   constrained — hereditary-constraint streaming sweep     (PR 3)
   engine   — async engine overlap + multi-host ingestion  (PR 4)
   adaptive — wave autoscaler + async checkpoint writer    (PR 5)
+  faults   — fault supervision: retries/eviction/drops    (PR 6)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
 ``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``, ``adaptive``
-writes ``BENCH_PR5.json``; everything else goes to ``BENCH_PR1.json``
-(repo root).  ``--only adaptive`` is the PR 5 refresh.
+writes ``BENCH_PR5.json``, ``faults`` writes ``BENCH_PR6.json``;
+everything else goes to ``BENCH_PR1.json`` (repo root).  ``--only faults``
+is the PR 6 refresh.
 """
 import argparse
 import json
@@ -30,6 +32,7 @@ BENCH_PR2_JSON = os.path.join(_ROOT, "BENCH_PR2.json")
 BENCH_PR3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 BENCH_PR4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 BENCH_PR5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
+BENCH_PR6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
 
 
 def main() -> None:
@@ -41,7 +44,8 @@ def main() -> None:
     quick = not args.full
 
     from benchmarks import (adaptive_engine, constrained_tree,
-                            engine_overlap, fault_tolerance_bench,
+                            engine_overlap, fault_engine,
+                            fault_tolerance_bench,
                             fig2_capacity, fig2_large_scale, kernel_bench,
                             table1_complexity, table3_relative_error,
                             tree_scaling)
@@ -56,12 +60,14 @@ def main() -> None:
         "constrained": constrained_tree.run,
         "engine": engine_overlap.run,
         "adaptive": adaptive_engine.run,
+        "faults": fault_engine.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
                "constrained": (BENCH_PR3_JSON, 3),
                "engine": (BENCH_PR4_JSON, 4),
-               "adaptive": (BENCH_PR5_JSON, 5)}
+               "adaptive": (BENCH_PR5_JSON, 5),
+               "faults": (BENCH_PR6_JSON, 6)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -124,6 +124,25 @@ def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
     return RoundResult(*jax.jit(fn)(obj, blocks, bmask, keys, dead))
 
 
+def dead_wave_result(machines: int, k: int, width: int) -> RoundResult:
+    """The fold contribution of machines that never ran.
+
+    When the fault supervisor drops a whole ingestion wave past its retry
+    budget, the wave's machines fold exactly like ``dead_mask`` machines —
+    value −inf (can never win the best-solution max), solutions masked out
+    (contribute nothing to A_{t+1}; the between-round repartition zeroes
+    masked rows, so downstream is bit-identical to any other dead-machine
+    encoding) — except their oracle calls are zero: unlike a declared
+    ``fail_machines`` failure, which models a machine dying *after* doing
+    its work, a dropped wave's machines never received their blocks.
+    """
+    return RoundResult(
+        sol_rows=jnp.zeros((machines, k, width), jnp.float32),
+        sol_mask=jnp.zeros((machines, k), bool),
+        values=jnp.full((machines,), -jnp.inf, jnp.float32),
+        oracle_calls=jnp.zeros((machines,), jnp.int32))
+
+
 def shard_round_inputs(mesh: Mesh, blocks, bmask, keys):
     """Place round inputs with the machine axis sharded over the mesh."""
     spec = NamedSharding(mesh, P("machines"))

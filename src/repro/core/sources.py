@@ -38,6 +38,21 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class HostLostError(RuntimeError):
+    """An ingestion host (its :class:`SlicedSource` view) is permanently gone.
+
+    Raised by a gather against a host marked lost (chaos injection, or a
+    real deployment's RPC layer deciding a peer is dead).  Distinct from a
+    transient IO error: the fault supervisor responds by *evicting* the
+    host — re-routing its contiguous range to survivors via
+    ``IngestionPlan.evict`` — rather than retrying against it.
+    """
+
+    def __init__(self, host: int, msg: str = ""):
+        super().__init__(msg or f"ingestion host {host} lost")
+        self.host = int(host)
+
+
 class GroundSetSource:
     """Abstract capacity-bounded view of the ground set V (n items, d dims)."""
 
@@ -278,12 +293,21 @@ class SlicedSource(GroundSetSource):
         self.d, self.a = parent.d, parent.a
         self.dtype = parent.dtype
         self.supports_concurrent_gather = parent.supports_concurrent_gather
+        self._lost: int | None = None     # host id once marked dead
 
     @property
     def local_n(self) -> int:
         return self.hi - self.lo
 
+    def mark_lost(self, host: int) -> None:
+        """Declare this host view permanently dead: every subsequent gather
+        raises :class:`HostLostError` (how the chaos injector models a
+        machine that stops answering — and stays stopped across retries)."""
+        self._lost = int(host)
+
     def _check_local(self, idx: np.ndarray) -> np.ndarray:
+        if self._lost is not None:
+            raise HostLostError(self._lost)
         idx = np.asarray(idx, np.int64).reshape(-1)
         assert idx.size == 0 or (
             idx.min() >= self.lo and idx.max() < self.hi), (

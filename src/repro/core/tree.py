@@ -46,18 +46,22 @@ import numpy as np
 
 from repro.core import constraints as cons_lib
 from repro.core import partition as part_lib
-from repro.core.distributed import (RoundResult, run_round,
+from repro.core.distributed import (RoundResult, dead_wave_result, run_round,
                                     shard_round_inputs, stage_wave_inputs)
 from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import ArraySource, GroundSetSource, as_source
 from repro.engine.autotune import (AutotunePlanner, FixedWidthPlanner,
                                    ScheduledWidthPlanner, WavePlanner,
                                    bucket_ladder, shape_bound, snap_down)
-from repro.engine.checkpoint import AsyncCheckpointWriter
+from repro.engine.checkpoint import (AsyncCheckpointWriter, clean_stale_tmp,
+                                     latest_round_checkpoint,
+                                     write_round_checkpoint)
+from repro.engine.faults import FaultInjector, FaultPolicy, FaultSupervisor
 from repro.engine.planner import IngestionPlan
 from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
                                     run_waves)
-from repro.engine.stats import CheckpointStats, EngineStats, RoundCheckpoint
+from repro.engine.stats import (CheckpointStats, EngineStats, FaultStats,
+                                RoundCheckpoint)
 
 PERMUTATIONS = ("dense", "feistel")
 
@@ -80,6 +84,11 @@ class TreeConfig:
     async_checkpoint: bool = False     # background round-boundary writes
     prefetch_depth: int | None = None  # chunk-prefetch depth (None = default
     #                                    2, or autotuner-suggested downstream)
+    fault_policy: FaultPolicy | None = None  # wave-gather supervision
+    #                                    (retries/hedges/eviction/drops);
+    #                                    None = legacy abort-on-first-error
+    checkpoint_keep: int = 3           # rotated round checkpoints retained
+    #                                    (≤ 0 keeps every round)
 
     def __post_init__(self):
         assert self.capacity > self.k, (
@@ -157,6 +166,8 @@ class TreeResult:
     sel_attrs: np.ndarray | None = None  # (k, a) attrs of the selection
     engine_stats: EngineStats | None = None  # wave engine trace (round 0)
     checkpoint_stats: CheckpointStats | None = None  # per-round ckpt overlap
+    fault_stats: FaultStats | None = None  # supervision record (retries,
+    #                                        hedges, evictions, drops)
 
 
 # ---------------------------------------------------------------------------
@@ -183,12 +194,23 @@ def _ckpt_path(d: str) -> str:
 
 
 def _save_round(d: str, round_idx: int, rows, mask, best_rows, best_mask,
-                best_val, calls):
-    os.makedirs(d, exist_ok=True)
-    tmp = os.path.join(d, "tree_round.tmp.npz")  # savez appends .npz otherwise
-    np.savez(tmp, round=round_idx, rows=rows, mask=mask, best_rows=best_rows,
-             best_mask=best_mask, best_val=best_val, calls=calls)
-    os.replace(tmp, _ckpt_path(d))  # atomic — crash-safe
+                best_val, calls, keep: int = 3):
+    """One round-boundary snapshot: rotated per-round file + the legacy
+    ``tree_round.npz`` latest pointer, both atomic; only the newest ``keep``
+    rotated rounds survive (engine/checkpoint.py owns the file layout)."""
+    write_round_checkpoint(d, round_idx, keep=keep, rows=rows, mask=mask,
+                           best_rows=best_rows, best_mask=best_mask,
+                           best_val=best_val, calls=calls)
+
+
+def _resume_path(d: str) -> str | None:
+    """Newest complete checkpoint; sweeps crashed writers' tmp litter first."""
+    removed = clean_stale_tmp(d)
+    if removed:
+        import warnings
+        warnings.warn(f"removed {len(removed)} stale checkpoint tmp file(s) "
+                      f"left by a crashed writer in {d}", RuntimeWarning)
+    return latest_round_checkpoint(d)
 
 
 def _round_plan(kalg, M: int, t: int, fail_machines, mesh):
@@ -377,7 +399,7 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
                    cfg: TreeConfig, mesh, fail_machines, wave_machines,
                    best_rows, best_mask, best_val, total_calls,
                    constraint=None, attrs_np: np.ndarray | None = None,
-                   wave_schedule=None):
+                   wave_schedule=None, fault_injector=None):
     """Wave-scheduled round-0 ingestion: capacity-bounded replacement for
     ``gather_partition`` over an all-resident ground set.
 
@@ -431,6 +453,25 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     cursor = {"w0": 0}    # wave spans are decided per wave by the planner;
     #                       gather runs on one thread in wave order, so a
     #                       plain dict cursor is race-free by construction
+    plan_state = {"plan": plan}   # swapped on host eviction (re-plan); only
+    #                               ever touched from the gather side
+
+    # ---- fault supervision (PR 6): active only when asked for — the
+    # legacy abort-on-first-error path is byte-for-byte untouched otherwise
+    supervisor: FaultSupervisor | None = None
+    if cfg.fault_policy is not None or fault_injector is not None:
+        def evict_host(host: int) -> bool:
+            p = plan_state["plan"]
+            if p is None or p.hosts < 2 or host not in p.host_ids:
+                return False
+            plan_state["plan"] = p.evict(host)
+            return True
+
+        supervisor = FaultSupervisor(
+            cfg.fault_policy or FaultPolicy(), total_rows=n,
+            injector=fault_injector, rate_hint=planner.gather_rate,
+            concurrent_ok=source.supports_concurrent_gather,
+            evict_cb=evict_host)
 
     def next_span():
         w0 = cursor["w0"]
@@ -441,15 +482,17 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         cursor["w0"] = w0 + w
         return w0, w0 + w
 
-    def gather_rows(idx_flat: np.ndarray):
+    def gather_rows(idx_flat: np.ndarray, fault_hook=None):
         """Rows (+ attrs when constrained) for one wave, a single source
         pass: sequential sources must not be re-streamed once per matrix.
         With ``hosts > 1`` the pass is sharded: each ingestion host serves
-        the indices it owns and the planner stitches them in index order."""
-        if plan is not None:
-            rows, src_attrs, per_host = plan.gather(
+        the indices it owns and the planner stitches them in index order.
+        ``fault_hook`` is the injector's per-host chaos seam."""
+        p = plan_state["plan"]
+        if p is not None:
+            rows, src_attrs, per_host = p.gather(
                 idx_flat, with_attrs=bool(a) and attrs_np is None,
-                parallel=ecfg.mode == "pipelined")
+                parallel=ecfg.mode == "pipelined", fault_hook=fault_hook)
             row_attrs = (attrs_np[idx_flat] if a and attrs_np is not None
                          else src_attrs)
             return rows, row_attrs, per_host
@@ -469,17 +512,34 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         w0, w1 = span
         idx_w = slot_block(w0, w1)                          # (Wb, cap)
         idx_flat = np.maximum(idx_w, 0).reshape(-1)
-        rows, row_attrs, per_host = gather_rows(idx_flat)
+        valid = idx_w >= 0
+        if supervisor is None:
+            rows, row_attrs, per_host = gather_rows(idx_flat)
+        else:
+            def attempt_fn(attempt: int):
+                hook = (fault_injector.host_hook(i, attempt)
+                        if fault_injector is not None else None)
+                return gather_rows(idx_flat, fault_hook=hook)
+
+            gathered, dropped = supervisor.gather(
+                i, machines=w1 - w0, rows=int(valid.sum()),
+                attempt_fn=attempt_fn)
+            if dropped:
+                # wave forfeited (Lemma 3.4 budget already checked): its
+                # machines fold as dead downstream — no rows move
+                return HostWave(payload=(None, valid, w0, w1, True),
+                                machines=w1 - w0, rows=(w1 - w0) * mu,
+                                bytes_moved=0, per_host_rows=None)
+            rows, row_attrs, per_host = gathered
         rows = np.asarray(rows, np.float32)
         if a:
             rows = np.concatenate(
                 [rows, np.asarray(row_attrs, np.float32)], axis=1)
-        valid = idx_w >= 0
         # zero padded slots on host (gathers may return read-only buffers);
         # bit-identical to the device-side jnp.where masking it replaces
         blocks = np.where(valid[..., None],
                           rows.reshape(w1 - w0, mu, d + a), np.float32(0.0))
-        return HostWave(payload=(blocks, valid, w0, w1),
+        return HostWave(payload=(blocks, valid, w0, w1, False),
                         machines=w1 - w0, rows=(w1 - w0) * mu,
                         bytes_moved=blocks.nbytes, per_host_rows=per_host)
 
@@ -492,10 +552,18 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         the caller thread in wave order, so the sequential strict-
         improvement fold over waves == the one-shot argmax over all Mp
         machines (lowest machine index on ties)."""
-        blocks_np, valid, w0, w1 = payload
-        blocks, bmask = stage_wave_inputs(mesh, blocks_np, valid)
-        res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1], dead[w0:w1],
-                               cfg, mesh, attr_dim=a, constraint=constraint)
+        blocks_np, valid, w0, w1, wave_dropped = payload
+        if wave_dropped:
+            # the gather never succeeded, so these machines never ran:
+            # fold the dead_mask placeholder (−inf values can never win,
+            # masked solutions contribute nothing to A_1, zero oracle
+            # calls — honest accounting) and skip the dispatch entirely
+            res = dead_wave_result(w1 - w0, cfg.k, d + a)
+        else:
+            blocks, bmask = stage_wave_inputs(mesh, blocks_np, valid)
+            res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1],
+                                   dead[w0:w1], cfg, mesh, attr_dim=a,
+                                   constraint=constraint)
         carry[0], carry[1], carry[2], carry[3], v_wave = _fold_round(
             res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
             *carry[:4])
@@ -505,6 +573,8 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         return v_wave
 
     estats = run_waves(None, gather, solve, ecfg, on_trace=planner.observe)
+    if supervisor is not None:
+        estats.fault_stats = supervisor.stats
     best_rows, best_mask, best_val, total_calls, v_round = carry
 
     assert cursor["w0"] == Mp and sum(
@@ -568,6 +638,9 @@ def tree_maximize(
     attrs: np.ndarray | None = None,    # (n, a) per-item attribute rows
     wave_schedule: list[int] | None = None,  # test hook: forced per-wave
     #                                     widths (adversarial trajectories)
+    fault_injector: FaultInjector | None = None,  # seeded chaos harness
+    #                                     (implies supervision even without
+    #                                     an explicit cfg.fault_policy)
 ) -> TreeResult:
     """Run Algorithm 1. With ``mesh``, machines shard over devices.
 
@@ -615,7 +688,9 @@ def tree_maximize(
                  or wave_machines is not None
                  or cfg.engine != "sync" or cfg.hosts > 1
                  or cfg.capacity_bytes is not None
-                 or cfg.wave_autotune or wave_schedule is not None)
+                 or cfg.wave_autotune or wave_schedule is not None
+                 or cfg.fault_policy is not None
+                 or fault_injector is not None)
     if host_rounds:
         if streaming:
             raise ValueError("host_rounds=True supports only all-resident "
@@ -646,14 +721,17 @@ def tree_maximize(
     mask_in: jax.Array | None = None
     n_items = n
 
-    if cfg.resume and cfg.checkpoint_dir and os.path.exists(
-            _ckpt_path(cfg.checkpoint_dir)):
-        ck = np.load(_ckpt_path(cfg.checkpoint_dir))
-        start_round = int(ck["round"])
-        rows_in, mask_in = jnp.asarray(ck["rows"]), jnp.asarray(ck["mask"])
-        best_rows, best_mask = jnp.asarray(ck["best_rows"]), jnp.asarray(ck["best_mask"])
-        best_val = jnp.float32(float(ck["best_val"]))
-        total_calls = jnp.int32(int(ck["calls"]))
+    if cfg.resume and cfg.checkpoint_dir:
+        resume_from = _resume_path(cfg.checkpoint_dir)
+        if resume_from is not None:
+            ck = np.load(resume_from)
+            start_round = int(ck["round"])
+            rows_in, mask_in = jnp.asarray(ck["rows"]), jnp.asarray(ck["mask"])
+            best_rows, best_mask = jnp.asarray(ck["best_rows"]), jnp.asarray(ck["best_mask"])
+            best_val = jnp.float32(float(ck["best_val"]))
+            total_calls = jnp.int32(int(ck["calls"]))
+    elif cfg.checkpoint_dir:
+        clean_stale_tmp(cfg.checkpoint_dir)   # crashed-writer litter
 
     key = _fast_forward_key(key, start_round)
     machines_per_round: list[int] = []
@@ -684,7 +762,8 @@ def tree_maximize(
                     obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
                     wave_machines, best_rows, best_mask, best_val,
                     total_calls, constraint=constraint, attrs_np=attrs_np,
-                    wave_schedule=wave_schedule)
+                    wave_schedule=wave_schedule,
+                    fault_injector=fault_injector)
                 round_values.append(_host_scalar(v_best))
             else:
                 # ---- partition A_t into L balanced parts (virtual-location)
@@ -717,7 +796,7 @@ def tree_maximize(
                 snap = (cfg.checkpoint_dir, t, _host_array(rows_in),
                         _host_array(mask_in), _host_array(best_rows),
                         _host_array(best_mask), _host_scalar(best_val),
-                        int(_host_scalar(total_calls)))
+                        int(_host_scalar(total_calls)), cfg.checkpoint_keep)
                 if writer is not None:
                     # ... then overlap the serialize+write with round t+1
                     # (submit's internal barrier drained write t-1 already)
@@ -752,7 +831,8 @@ def tree_maximize(
         oracle_calls=int(_host_scalar(total_calls)),
         machines_per_round=machines_per_round, round_values=round_values,
         ingest=ingest, engine_stats=engine_stats,
-        checkpoint_stats=ckpt_stats)
+        checkpoint_stats=ckpt_stats,
+        fault_stats=engine_stats.fault_stats if engine_stats else None)
 
 
 def _finish_result(sel_wide: np.ndarray, sel_mask: np.ndarray, d: int,
@@ -802,14 +882,17 @@ def _tree_maximize_host(
     rows_in: np.ndarray | None = None   # carry between rounds (item rows)
     mask_in: np.ndarray | None = None
 
-    if cfg.resume and cfg.checkpoint_dir and os.path.exists(
-            _ckpt_path(cfg.checkpoint_dir)):
-        ck = np.load(_ckpt_path(cfg.checkpoint_dir))
-        start_round = int(ck["round"])
-        rows_in, mask_in = ck["rows"], ck["mask"]
-        best_rows, best_mask = ck["best_rows"], ck["best_mask"]
-        best_val = float(ck["best_val"])
-        total_calls = int(ck["calls"])
+    if cfg.resume and cfg.checkpoint_dir:
+        resume_from = _resume_path(cfg.checkpoint_dir)
+        if resume_from is not None:
+            ck = np.load(resume_from)
+            start_round = int(ck["round"])
+            rows_in, mask_in = ck["rows"], ck["mask"]
+            best_rows, best_mask = ck["best_rows"], ck["best_mask"]
+            best_val = float(ck["best_val"])
+            total_calls = int(ck["calls"])
+    elif cfg.checkpoint_dir:
+        clean_stale_tmp(cfg.checkpoint_dir)   # crashed-writer litter
 
     key = _fast_forward_key(key, start_round)
     machines_per_round: list[int] = []
@@ -857,7 +940,8 @@ def _tree_maximize_host(
 
         if cfg.checkpoint_dir:
             _save_round(cfg.checkpoint_dir, t, rows_in, mask_in, best_rows,
-                        best_mask, best_val, total_calls)
+                        best_mask, best_val, total_calls,
+                        cfg.checkpoint_keep)
 
         if L == 1:        # that was the final single-machine round
             break

@@ -1,6 +1,6 @@
 """repro.engine — asynchronous round-0 execution engine.
 
-Five layers (see each module's docstring):
+Six layers (see each module's docstring):
 
   * :mod:`repro.engine.scheduler` — sync reference + double-buffered
     pipelined wave drivers with bounded in-flight backpressure and
@@ -8,27 +8,45 @@ Five layers (see each module's docstring):
   * :mod:`repro.engine.autotune` — rate-tuned wave autoscaler: bucket-
     ladder width planners fed by the live per-wave trace stream.
   * :mod:`repro.engine.checkpoint` — async double-buffered round-boundary
-    checkpoint writer with an explicit write barrier.
+    checkpoint writer with an explicit write barrier, plus keep-k rotation
+    and crash-safe tmp cleanup of the round-checkpoint file layout.
   * :mod:`repro.engine.planner` — multi-host sharding of the round-0
-    gather (single-process emulation with enforced locality for CI).
-  * :mod:`repro.engine.stats` — per-wave trace + overlap accounting and
-    the checkpoint-overlap record, surfaced on ``TreeResult``.
+    gather (single-process emulation with enforced locality for CI),
+    including lossless re-routing around permanently lost hosts.
+  * :mod:`repro.engine.faults` — fault supervision: retry with backoff,
+    hedged re-gathers of stragglers, host eviction, bounded graceful
+    degradation (Lemma 3.4 budget), and the seeded chaos injector.
+  * :mod:`repro.engine.stats` — per-wave trace + overlap accounting, the
+    checkpoint-overlap record, and the fault/straggler records, surfaced
+    on ``TreeResult``.
 """
 from repro.engine.autotune import (AutotunePlanner, FixedWidthPlanner,
                                    ScheduledWidthPlanner, WavePlanner,
                                    bucket_ladder, shape_bound, snap_down,
                                    suggest_prefetch_depth)
-from repro.engine.checkpoint import AsyncCheckpointWriter
+from repro.engine.checkpoint import (AsyncCheckpointWriter, clean_stale_tmp,
+                                     latest_round_checkpoint,
+                                     list_round_checkpoints,
+                                     write_round_checkpoint)
+from repro.engine.faults import (DroppedFractionExceeded, FaultInjector,
+                                 FaultPolicy, FaultProfile, FaultSupervisor,
+                                 PermanentGatherError, TransientIOError)
 from repro.engine.planner import HostShard, IngestionPlan
 from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
                                     run_waves)
-from repro.engine.stats import (CheckpointStats, EngineStats,
-                                RoundCheckpoint, WaveTrace, overlap_ratio)
+from repro.engine.stats import (CheckpointStats, EngineStats, FaultEvent,
+                                FaultStats, RoundCheckpoint,
+                                StragglerMonitor, WaveTrace, overlap_ratio)
 
 __all__ = [
     "ENGINES", "AsyncCheckpointWriter", "AutotunePlanner", "CheckpointStats",
-    "EngineConfig", "EngineStats", "FixedWidthPlanner", "HostShard",
-    "HostWave", "IngestionPlan", "RoundCheckpoint", "ScheduledWidthPlanner",
-    "WavePlanner", "WaveTrace", "bucket_ladder", "overlap_ratio",
+    "DroppedFractionExceeded", "EngineConfig", "EngineStats", "FaultEvent",
+    "FaultInjector", "FaultPolicy", "FaultProfile", "FaultStats",
+    "FaultSupervisor", "FixedWidthPlanner", "HostShard", "HostWave",
+    "IngestionPlan", "PermanentGatherError", "RoundCheckpoint",
+    "ScheduledWidthPlanner", "StragglerMonitor", "TransientIOError",
+    "WavePlanner", "WaveTrace", "bucket_ladder", "clean_stale_tmp",
+    "latest_round_checkpoint", "list_round_checkpoints", "overlap_ratio",
     "run_waves", "shape_bound", "snap_down", "suggest_prefetch_depth",
+    "write_round_checkpoint",
 ]

@@ -103,6 +103,13 @@ class WavePlanner:
     def observe(self, trace: WaveTrace) -> None:  # pragma: no cover - default
         pass
 
+    def gather_rate(self) -> float | None:
+        """EWMA gather seconds per machine, when this planner measures one
+        (the fault supervisor's preferred hedge-threshold estimate — it is
+        smoothed on the same trace stream the hedge protects).  Static
+        planners measure nothing and return None."""
+        return None
+
 
 class FixedWidthPlanner(WavePlanner):
     """The legacy static policy: W machines per wave, exact ragged tail.
@@ -248,6 +255,10 @@ class AutotunePlanner(WavePlanner):
         with self._lock:
             j = self._decide()
             return snap_down(self._ladder, min(self._ladder[j], remaining))
+
+    def gather_rate(self) -> float | None:
+        with self._lock:
+            return self.ewma_gather_per_machine
 
 
 def suggest_prefetch_depth(gather_s: float, solve_s: float, *,

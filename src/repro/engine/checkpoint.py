@@ -38,11 +38,113 @@ so the two paths can never drift.
 """
 from __future__ import annotations
 
+import os
+import re
+import shutil
 import threading
 import time
 from typing import Any, Callable
 
+import numpy as np
+
 from repro.engine.stats import CheckpointStats, RoundCheckpoint
+
+# ---------------------------------------------------------------------------
+# Round-checkpoint file layout: rotation, crash-safe cleanup, resume lookup.
+#
+# One file per round boundary, ``tree_round_r{t:04d}.npz``, written tmp →
+# atomic rename, plus a legacy "latest" pointer ``tree_round.npz`` refreshed
+# on every write (hardlink + rename, so it is also atomic and never a
+# partial file) — existing resume paths and tests that open the legacy name
+# keep working unchanged.  ``keep`` bounds disk growth the same way train's
+# ``CheckpointManager`` rotates ``step_*`` dirs: only the newest ``keep``
+# rotated rounds survive a write.  A crash mid-write leaves only ``*.tmp*``
+# litter (the rename never ran), which ``clean_stale_tmp`` sweeps at the
+# next run's start.
+# ---------------------------------------------------------------------------
+
+_LEGACY_NAME = "tree_round.npz"
+_ROUND_RE = re.compile(r"tree_round_r(\d+)\.npz")
+
+
+def round_checkpoint_path(d: str, round_idx: int) -> str:
+    return os.path.join(d, f"tree_round_r{round_idx:04d}.npz")
+
+
+def write_round_checkpoint(d: str, round_idx: int, keep: int = 3,
+                           **arrays: Any) -> str:
+    """Atomically write one round's snapshot; rotate to the newest ``keep``.
+
+    The snapshot lands in the rotated per-round file AND the legacy latest
+    pointer (both via atomic rename — a crash at any instant leaves every
+    ``.npz`` in the directory complete).  ``keep <= 0`` disables rotation
+    (every round kept).
+    """
+    os.makedirs(d, exist_ok=True)
+    path = round_checkpoint_path(d, round_idx)
+    tmp = path + ".tmp.npz"               # np.savez appends .npz otherwise
+    np.savez(tmp, round=round_idx, **arrays)
+    os.replace(tmp, path)
+    _refresh_latest(d, path)
+    if keep > 0:
+        for old_round, old_path in list_round_checkpoints(d)[:-keep]:
+            if old_round != round_idx:
+                os.unlink(old_path)
+    return path
+
+
+def _refresh_latest(d: str, path: str) -> None:
+    """Point the legacy ``tree_round.npz`` at ``path`` atomically."""
+    tmp = os.path.join(d, _LEGACY_NAME + ".tmp")
+    try:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        os.link(path, tmp)                # cheap: no data copy
+    except OSError:                       # filesystem without hardlinks
+        shutil.copyfile(path, tmp)
+    os.replace(tmp, os.path.join(d, _LEGACY_NAME))
+
+
+def list_round_checkpoints(d: str) -> list[tuple[int, str]]:
+    """Rotated round checkpoints as ``(round, path)``, oldest first."""
+    if not os.path.isdir(d):
+        return []
+    out = [(int(m.group(1)), os.path.join(d, f))
+           for f in os.listdir(d) if (m := _ROUND_RE.fullmatch(f))]
+    return sorted(out)
+
+
+def latest_round_checkpoint(d: str) -> str | None:
+    """Newest complete round checkpoint to resume from, or None.
+
+    Prefers the highest rotated round; falls back to the legacy latest
+    pointer (directories written before rotation existed hold only that).
+    """
+    rounds = list_round_checkpoints(d)
+    if rounds:
+        return rounds[-1][1]
+    legacy = os.path.join(d, _LEGACY_NAME)
+    return legacy if os.path.exists(legacy) else None
+
+
+def clean_stale_tmp(d: str) -> list[str]:
+    """Remove ``*.tmp`` / ``*.tmp.npz`` litter a crashed writer left behind.
+
+    Safe by construction: every live checkpoint is an atomically renamed
+    ``.npz`` whose name never contains ``.tmp``, so anything matching is an
+    interrupted write (droppable — its round never counted as saved).
+    Called at run start (the writer process owns the directory again).
+    Returns the removed paths, newest-crash debris included, for logging.
+    """
+    removed = []
+    if not os.path.isdir(d):
+        return removed
+    for f in os.listdir(d):
+        if ".tmp" in f and f.startswith("tree_round"):
+            p = os.path.join(d, f)
+            os.unlink(p)
+            removed.append(p)
+    return removed
 
 
 class AsyncCheckpointWriter:

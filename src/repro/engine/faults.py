@@ -1,0 +1,443 @@
+"""Fault supervision for the wave execution engine (PR 6).
+
+The paper's robustness story — Algorithm 1 takes a *max* over machine
+solutions, so a lost partition costs an additive Lemma 3.4 term instead of
+the run (see ``repro.train.fault_tolerance``'s layer 3) — was only wired
+for failures declared *before* the run (``fail_machines``/``dead_mask``).
+This module supervises failures that happen *while* round 0 streams:
+
+  * **Retry with exponential backoff** — a transient gather error (flaky
+    IO, dropped RPC) is retried up to ``max_retries`` times with
+    ``backoff_s · backoff_mult^attempt`` sleeps, optionally bounded by a
+    per-wave ``deadline_s``.
+  * **Host eviction** — a :class:`repro.core.sources.HostLostError` means
+    retrying the same host is pointless; the supervisor asks the driver to
+    re-plan (``IngestionPlan.evict`` routes the dead host's contiguous
+    range to its neighbors) and retries against the survivors.  Re-routing
+    is lossless: the plan stitches by global index, so the recovered wave
+    is bit-identical to the pre-loss gather.
+  * **Hedged re-gather** — when a wave's gather runs past
+    ``hedge_factor ×`` the measured per-machine gather rate (the
+    autotuner's EWMA when it is running, else the ported
+    :class:`repro.engine.stats.StragglerMonitor`'s estimate), a second
+    speculative attempt races the straggler; first completion wins.
+    Hedging changes *when* rows arrive, never *which* rows — gathers are
+    deterministic by content — so it is also bit-identity-safe.
+  * **Bounded graceful degradation** — a wave that exhausts its budget is
+    *dropped*, not fatal: its machines fold as dead (the ``dead_mask``
+    semantics — value −inf, solution masked out) and the run continues.
+    The forfeited row fraction is tracked against
+    ``max_dropped_fraction``; only crossing that Lemma 3.4 budget aborts
+    (:class:`DroppedFractionExceeded`).  PERF.md §PR6 gives the expected
+    quality loss per dropped fraction.
+
+The :class:`FaultInjector` is the chaos harness: a seeded, deterministic
+wrapper over the wave/host gather seams that injects transient IO errors,
+permanent host loss, wave kills, and latency.  Every injection decision is
+a pure function of ``(profile.seed, wave, attempt[, host])`` — replaying a
+profile replays the exact fault sequence, which is what makes recovery
+paths unit-testable for bit-identity (tests/test_faults.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import TYPE_CHECKING, Any, Callable
+
+import numpy as np
+
+from repro.engine.stats import FaultEvent, FaultStats, StragglerMonitor
+
+if TYPE_CHECKING:   # typing only — repro.core imports repro.engine (and
+    from repro.core.sources import HostLostError  # core.tree imports this
+    #               module), so a runtime import here would deadlock either
+    #               package-init order; see _host_lost() below
+
+
+def _host_lost() -> type:
+    """Lazy :class:`repro.core.sources.HostLostError` — resolved at first
+    fault, long after both packages finished initializing."""
+    from repro.core.sources import HostLostError
+    return HostLostError
+
+
+class TransientIOError(IOError):
+    """Injected (or real) transient gather failure — retry is expected to
+    succeed."""
+
+
+class PermanentGatherError(RuntimeError):
+    """A gather failure that persists across retries (injected wave kill);
+    exhausts the retry budget and lands in the drop path."""
+
+
+class DroppedFractionExceeded(RuntimeError):
+    """Cumulative dropped rows crossed ``FaultPolicy.max_dropped_fraction``
+    — the Lemma 3.4 degradation budget; continuing would return a coreset
+    whose quality bound no longer holds, so the run aborts."""
+
+
+class GatherDeadlineExceeded(TimeoutError):
+    """A wave attempt ran past ``FaultPolicy.deadline_s`` (internal: feeds
+    the retry/drop decision like any other retryable failure)."""
+
+
+# what the supervisor will retry; anything else is a bug and propagates
+# immediately (TransientIOError is an OSError via IOError)
+RETRYABLE = (OSError, TimeoutError, PermanentGatherError)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """How the engine responds to gather faults (the *recovery* knobs)."""
+    max_retries: int = 3            # extra attempts after the first
+    backoff_s: float = 0.05         # sleep before retry 1
+    backoff_mult: float = 2.0       # exponential growth per retry
+    backoff_max_s: float = 2.0      # backoff ceiling
+    deadline_s: float | None = None  # per-wave wall budget across attempts
+    hedge: bool = True              # race a second gather against stragglers
+    hedge_factor: float = 3.0       # straggler = this × EWMA gather estimate
+    hedge_min_waves: int = 3        # observed waves before hedging may fire
+    max_dropped_fraction: float = 0.5  # Lemma 3.4 degradation budget
+    evict_hosts: bool = True        # re-plan around permanently lost hosts
+
+    def __post_init__(self):
+        assert self.max_retries >= 0, self.max_retries
+        assert self.backoff_s >= 0 and self.backoff_mult >= 1.0
+        assert self.backoff_max_s >= self.backoff_s
+        assert self.deadline_s is None or self.deadline_s > 0
+        assert self.hedge_factor > 1.0, self.hedge_factor
+        assert self.hedge_min_waves >= 1, self.hedge_min_waves
+        assert 0.0 <= self.max_dropped_fraction <= 1.0
+
+    def backoff(self, retry: int) -> float:
+        """Sleep before the ``retry``-th retry (0-based)."""
+        return min(self.backoff_max_s,
+                   self.backoff_s * self.backoff_mult ** retry)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultProfile:
+    """What the chaos harness injects (the *fault* knobs) — all decisions
+    seeded and deterministic, so a profile is a replayable fault script."""
+    transient_rate: float = 0.0     # P(transient IO error) per wave attempt
+    kill_waves: tuple[int, ...] = ()  # waves whose gather fails EVERY attempt
+    dead_host: int | None = None    # host id that permanently dies ...
+    dead_host_wave: int = 0         # ... from this wave on
+    latency_s: float = 0.0          # injected sleep when latency fires
+    latency_rate: float = 0.0       # P(latency) per wave attempt
+    slow_waves: tuple[int, ...] = ()  # waves whose FIRST attempt always
+    #                                   sleeps latency_s (deterministic
+    #                                   straggler for hedge tests)
+    seed: int = 0
+
+    def __post_init__(self):
+        assert 0.0 <= self.transient_rate < 1.0, self.transient_rate
+        assert 0.0 <= self.latency_rate <= 1.0, self.latency_rate
+        assert self.latency_s >= 0.0, self.latency_s
+
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultProfile":
+        """Parse the CLI form, e.g.
+        ``"transient=0.3,seed=7,dead_host=1,dead_host_wave=2,kill=3;5"``.
+
+        Keys: transient, kill, dead_host, dead_host_wave, latency,
+        latency_rate, slow, seed.  Lists use ``;`` separators.
+        """
+        kw: dict[str, Any] = {}
+        for part in filter(None, (p.strip() for p in spec.split(","))):
+            key, _, val = part.partition("=")
+            assert val, f"malformed --fault-profile entry {part!r} (want k=v)"
+            if key == "transient":
+                kw["transient_rate"] = float(val)
+            elif key == "kill":
+                kw["kill_waves"] = tuple(int(v) for v in val.split(";"))
+            elif key == "slow":
+                kw["slow_waves"] = tuple(int(v) for v in val.split(";"))
+            elif key in ("dead_host", "dead_host_wave", "seed"):
+                kw[key] = int(val)
+            elif key in ("latency_s", "latency"):
+                kw["latency_s"] = float(val)
+            elif key == "latency_rate":
+                kw["latency_rate"] = float(val)
+            else:
+                raise ValueError(f"unknown --fault-profile key {key!r}")
+        return cls(**kw)
+
+
+class FaultInjector:
+    """Seeded chaos harness over the gather seams.
+
+    ``wave_hook(wave, attempt)`` fires at the start of each supervised wave
+    attempt (transient errors, wave kills, latency); ``host_hook(wave,
+    attempt)`` builds the per-host callback :meth:`IngestionPlan.gather`
+    invokes just before each host's local pull (permanent host loss lands
+    there — exactly where a real deployment's RPC would fail).  All
+    randomness is counter-based: ``default_rng((seed, tag, wave, attempt))``
+    — no mutable RNG state, so concurrent hedged attempts and replays see
+    identical draws.
+    """
+
+    _TAG_TRANSIENT = 0xFA01
+    _TAG_LATENCY = 0xFA02
+
+    def __init__(self, profile: FaultProfile):
+        self.profile = profile
+
+    def _roll(self, tag: int, wave: int, attempt: int) -> float:
+        return float(np.random.default_rng(
+            (self.profile.seed, tag, wave, attempt)).random())
+
+    def wave_hook(self, wave: int, attempt: int) -> None:
+        p = self.profile
+        if wave in p.kill_waves:
+            raise PermanentGatherError(
+                f"injected permanent kill of wave {wave}")
+        if p.latency_s > 0.0 and (
+                (wave in p.slow_waves and attempt == 0)
+                or (p.latency_rate > 0.0 and self._roll(
+                    self._TAG_LATENCY, wave, attempt) < p.latency_rate)):
+            time.sleep(p.latency_s)
+        if p.transient_rate > 0.0 and self._roll(
+                self._TAG_TRANSIENT, wave, attempt) < p.transient_rate:
+            raise TransientIOError(
+                f"injected transient fault (wave {wave}, attempt {attempt})")
+
+    def host_hook(self, wave: int, attempt: int):
+        p = self.profile
+        if p.dead_host is None:
+            return None
+
+        def hook(shard) -> None:
+            if shard.host == p.dead_host and wave >= p.dead_host_wave:
+                raise _host_lost()(shard.host)
+
+        return hook
+
+
+class _Race:
+    """First-completion-wins rendezvous for a primary + hedged gather."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._done = threading.Event()
+        self._pending = 0
+        self.result: Any = None
+        self.winner: str | None = None
+        self.errors: list[BaseException] = []
+
+    def register(self) -> None:
+        with self._lock:
+            self._pending += 1
+
+    def complete(self, tag: str, result=None,
+                 exc: BaseException | None = None) -> None:
+        with self._lock:
+            self._pending -= 1
+            if exc is not None:
+                self.errors.append(exc)
+            elif self.winner is None:
+                self.result, self.winner = result, tag
+            settled = self.winner is not None or self._pending == 0
+        if settled:
+            self._done.set()
+
+    def wait(self, timeout: float | None) -> bool:
+        return self._done.wait(timeout)
+
+
+class FaultSupervisor:
+    """Applies a :class:`FaultPolicy` to every supervised wave gather.
+
+    ``gather(wave, machines, rows, attempt_fn)`` drives
+    ``attempt_fn(attempt) -> result`` to success, eviction-assisted
+    success, or a bounded drop — returning ``(result, dropped)``.  The
+    caller folds a dropped wave as dead machines (−inf values, masked
+    solutions, zero oracle calls: the machines never ran).
+
+    Threading: with ``concurrent_ok`` (the source advertises thread-safe
+    gathers) attempts run on disposable daemon threads so a deadline can
+    *abandon* a hung attempt and hedges can race stragglers; otherwise
+    everything is inline and the deadline is only checked between attempts
+    (a non-reentrant source cannot be raced against itself).
+
+    All supervision state is touched from the engine's gather side only
+    (one wave in flight at a time), so no locking beyond :class:`_Race`.
+    """
+
+    def __init__(self, policy: FaultPolicy, total_rows: int, *,
+                 injector: FaultInjector | None = None,
+                 monitor: StragglerMonitor | None = None,
+                 rate_hint: Callable[[], float | None] | None = None,
+                 concurrent_ok: bool = False,
+                 evict_cb: Callable[[int], bool] | None = None):
+        self.policy = policy
+        self.injector = injector
+        self.monitor = monitor or StragglerMonitor(
+            factor=policy.hedge_factor, min_samples=policy.hedge_min_waves)
+        self.rate_hint = rate_hint
+        self.concurrent_ok = concurrent_ok
+        self.evict_cb = evict_cb
+        self.stats = FaultStats(total_rows=total_rows)
+
+    # -- public entry ------------------------------------------------------
+
+    def gather(self, wave: int, machines: int, rows: int,
+               attempt_fn: Callable[[int], Any]) -> tuple[Any, bool]:
+        pol, st = self.policy, self.stats
+        deadline = (None if pol.deadline_s is None
+                    else time.perf_counter() + pol.deadline_s)
+        t_first_fail: float | None = None
+        attempt, retries_left = 0, pol.max_retries
+        host_lost_cls = _host_lost()
+        while True:
+            t0 = time.perf_counter()
+            try:
+                result = self._attempt(wave, machines, attempt, attempt_fn,
+                                       deadline)
+            except host_lost_cls as exc:
+                if self._evict(exc.host, wave):
+                    t_first_fail = t_first_fail or t0
+                    attempt += 1          # fresh route, no backoff: the
+                    continue              # survivors were never the problem
+                drop = self._drop(wave, machines, rows,
+                                  f"host {exc.host} lost, eviction "
+                                  f"unavailable")
+                return None, drop
+            except RETRYABLE as exc:
+                t_first_fail = t_first_fail or t0
+                now = time.perf_counter()
+                out_of_time = deadline is not None and now >= deadline
+                if retries_left <= 0 or out_of_time:
+                    self._drop(wave, machines, rows,
+                               f"{type(exc).__name__}: {exc}"
+                               + (" [deadline]" if out_of_time else
+                                  " [retries exhausted]"))
+                    return None, True
+                pause = pol.backoff(attempt)
+                if deadline is not None:
+                    pause = min(pause, max(0.0, deadline - now))
+                st.retries += 1
+                st.backoff_s += pause
+                st.record(FaultEvent(
+                    kind="transient-retry", wave=wave, attempt=attempt,
+                    detail=f"{type(exc).__name__}: {exc}", seconds=pause))
+                time.sleep(pause)
+                retries_left -= 1
+                attempt += 1
+                continue
+            dt = time.perf_counter() - t0
+            self.monitor.observe(dt, machines)
+            if t_first_fail is not None:
+                st.recovered_s += time.perf_counter() - t_first_fail
+            return result, False
+
+    # -- internals ---------------------------------------------------------
+
+    def _evict(self, host: int, wave: int) -> bool:
+        if not self.policy.evict_hosts or self.evict_cb is None:
+            return False
+        if not self.evict_cb(host):
+            return False
+        self.stats.evictions += 1
+        self.stats.record(FaultEvent(
+            kind="evict", wave=wave, attempt=0,
+            detail=f"host {host} re-routed to survivors"))
+        return True
+
+    def _drop(self, wave: int, machines: int, rows: int, why: str) -> bool:
+        st = self.stats
+        st.dropped_waves += 1
+        st.dropped_machines += machines
+        st.dropped_rows += rows
+        st.record(FaultEvent(kind="drop", wave=wave, attempt=0,
+                             detail=f"{machines} machines ({rows} rows): "
+                                    f"{why}"))
+        if st.dropped_fraction > self.policy.max_dropped_fraction:
+            raise DroppedFractionExceeded(
+                f"dropped {st.dropped_rows}/{st.total_rows} rows "
+                f"({st.dropped_fraction:.3f}) > max_dropped_fraction="
+                f"{self.policy.max_dropped_fraction} — the Lemma 3.4 "
+                f"degradation budget is exhausted")
+        return True
+
+    def _hedge_threshold(self, machines: int) -> float | None:
+        if not (self.policy.hedge and self.concurrent_ok):
+            return None
+        hint = self.rate_hint() if self.rate_hint is not None else None
+        return self.monitor.threshold(machines, rate_hint=hint)
+
+    def _attempt(self, wave: int, machines: int, attempt: int,
+                 attempt_fn: Callable[[int], Any],
+                 deadline: float | None) -> Any:
+        """One (possibly hedged) attempt.  Raises on failure."""
+        thr = self._hedge_threshold(machines)
+        run = self._instrumented(wave, attempt_fn)
+        if not self.concurrent_ok:
+            return run(attempt)           # inline; deadline checked between
+        #                                   attempts by the caller
+        race = _Race()
+        self._spawn(race, run, attempt, tag="primary")
+        t0 = time.perf_counter()
+        hedged = False
+        while True:
+            now = time.perf_counter()
+            waits = [deadline - now] if deadline is not None else []
+            if thr is not None and not hedged:
+                waits.append(t0 + thr - now)
+            done = race.wait(max(0.0, min(waits)) if waits else None)
+            if done:
+                break
+            now = time.perf_counter()
+            if deadline is not None and now >= deadline:
+                # abandon in-flight threads (daemonized; their late results
+                # are discarded by the race) and let the retry loop decide
+                raise GatherDeadlineExceeded(
+                    f"wave {wave} attempt {attempt} past the "
+                    f"{self.policy.deadline_s}s deadline")
+            if thr is not None and not hedged and now - t0 >= thr:
+                hedged = True
+                st = self.stats
+                st.hedges += 1
+                st.record(FaultEvent(
+                    kind="straggler", wave=wave, attempt=attempt,
+                    detail=f"gather past {thr:.3f}s threshold",
+                    seconds=now - t0))
+                st.record(FaultEvent(kind="hedge", wave=wave,
+                                     attempt=attempt | _HEDGE_BIT))
+                self._spawn(race, run, attempt | _HEDGE_BIT, tag="hedge")
+        if race.winner is None:
+            raise race.errors[0]
+        if race.winner == "hedge":
+            self.stats.hedges_won += 1
+        return race.result
+
+    def _instrumented(self, wave: int, attempt_fn):
+        inj = self.injector
+
+        def run(attempt: int):
+            # the raw attempt id (hedge bit included) keys the injector's
+            # draws: a hedge must not replay the primary's injected
+            # latency/fault, or racing it would be pointless
+            if inj is not None:
+                inj.wave_hook(wave, attempt)
+            return attempt_fn(attempt)
+
+        return run
+
+    def _spawn(self, race: _Race, run, attempt: int, tag: str) -> None:
+        race.register()
+
+        def work():
+            try:
+                race.complete(tag, result=run(attempt))
+            except BaseException as exc:
+                race.complete(tag, exc=exc)
+
+        threading.Thread(target=work, daemon=True,
+                         name=f"gather-{tag}").start()
+
+
+_HEDGE_BIT = 1 << 16   # hedged attempts re-roll injector draws under a
+#                        distinct attempt id without renumbering retries

@@ -31,7 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 from concurrent.futures import ThreadPoolExecutor
-from typing import TYPE_CHECKING, Tuple
+from typing import TYPE_CHECKING, Callable, Tuple
 
 import numpy as np
 
@@ -42,7 +42,7 @@ if TYPE_CHECKING:  # typing only — keeps repro.engine importable before
 @dataclasses.dataclass
 class HostShard:
     """One ingestion host's slice of the ground set."""
-    host: int
+    host: int                   # stable host id (survives evictions)
     lo: int                     # first owned global item index
     hi: int                     # one past the last owned global item index
     source: GroundSetSource     # local view; rejects non-local indices
@@ -51,17 +51,23 @@ class HostShard:
 class IngestionPlan:
     """Routing table from global item indices to ingestion hosts."""
 
-    def __init__(self, shards: list[HostShard]):
+    def __init__(self, shards: list[HostShard],
+                 parent: GroundSetSource | None = None):
         assert shards and shards[0].lo == 0
         for a, b in zip(shards, shards[1:]):
             assert a.hi == b.lo, "host ranges must tile [0, n)"
         self.shards = shards
+        self.parent = parent          # unsliced source; enables evict()
         self.n = shards[-1].hi
         self._los = np.asarray([s.lo for s in shards], np.int64)
 
     @property
     def hosts(self) -> int:
         return len(self.shards)
+
+    @property
+    def host_ids(self) -> list[int]:
+        return [s.host for s in self.shards]
 
     @classmethod
     def build(cls, source: GroundSetSource, hosts: int) -> "IngestionPlan":
@@ -77,7 +83,40 @@ class IngestionPlan:
         assert bounds[0] == 0 and bounds[-1] == source.n
         return cls([HostShard(host=p, lo=lo, hi=hi,
                               source=source.slice(lo, hi))
-                    for p, (lo, hi) in enumerate(zip(bounds, bounds[1:]))])
+                    for p, (lo, hi) in enumerate(zip(bounds, bounds[1:]))],
+                   parent=source)
+
+    def evict(self, host: int) -> "IngestionPlan":
+        """Re-plan around a permanently lost host: its contiguous range is
+        re-routed to the surviving neighbors (split at the midpoint when it
+        has two; an end host's whole range goes to its single neighbor).
+
+        The survivors get *fresh* ``parent.slice`` views covering their
+        widened ranges — re-routing changes only who serves which rows, and
+        :meth:`gather` stitches by global index, so a post-eviction gather
+        is elementwise identical to the pre-eviction one (the recovery is
+        lossless; bit-identity is pinned in tests/test_faults.py).  Host
+        ids are stable: survivors keep theirs, which keeps fault traces and
+        ``per_host_rows`` attributable across re-plans.
+        """
+        assert self.parent is not None, "plan built without parent source"
+        assert self.hosts >= 2, "cannot evict the only ingestion host"
+        pos = [i for i, s in enumerate(self.shards) if s.host == host]
+        assert pos, f"host {host} not in plan (already evicted?)"
+        i = pos[0]
+        dead = self.shards[i]
+        survivors = [dataclasses.replace(s) for s in self.shards if s.host != host]
+        if i == 0:
+            survivors[0].lo = dead.lo                      # right neighbor
+        elif i == len(self.shards) - 1:
+            survivors[-1].hi = dead.hi                     # left neighbor
+        else:
+            mid = (dead.lo + dead.hi) // 2
+            survivors[i - 1].hi = mid                      # left takes [lo, mid)
+            survivors[i].lo = mid                          # right takes [mid, hi)
+        shards = [dataclasses.replace(
+            s, source=self.parent.slice(s.lo, s.hi)) for s in survivors]
+        return IngestionPlan(shards, parent=self.parent)
 
     def owner_of(self, idx: np.ndarray) -> np.ndarray:
         """Owning host id for each global index."""
@@ -85,49 +124,61 @@ class IngestionPlan:
                                side="right") - 1
 
     def gather(self, idx: np.ndarray, *, with_attrs: bool = False,
-               parallel: bool = False
+               parallel: bool = False,
+               fault_hook: Callable[[HostShard], None] | None = None
                ) -> Tuple[np.ndarray, np.ndarray | None, list[int]]:
         """Rows (+ attrs) for global ``idx``, gathered host-by-host.
 
         Returns ``(rows, attrs_or_None, per_host_rows)`` with rows in the
         order of ``idx`` — stitching is by boolean index assignment, so the
         result is elementwise identical to a single gather of ``idx``
-        against the unsharded source.  ``parallel=True`` runs the per-host
-        gathers on a thread pool (the emulation of hosts reading their
-        shards concurrently); sources advertise thread-safe gathers via
-        ``supports_concurrent_gather``.
+        against the unsharded source (for ANY plan whose shards tile [0, n),
+        which is what makes post-eviction re-plans lossless).
+        ``per_host_rows`` is positional — ``per_host_rows[p]`` counts rows
+        served by ``self.shards[p]``, whose stable id is ``host_ids[p]``.
+        ``parallel=True`` runs the per-host gathers on a thread pool (the
+        emulation of hosts reading their shards concurrently); sources
+        advertise thread-safe gathers via ``supports_concurrent_gather``.
+
+        ``fault_hook(shard)`` is the chaos-injection seam: called on the
+        pulling thread just before each host's local gather (exactly where
+        a real deployment's RPC to that host would fail), so injected
+        errors/latency land per-host, not per-wave.
         """
         idx = np.asarray(idx, np.int64).reshape(-1)
-        owner = self.owner_of(idx)
+        owner_pos = np.searchsorted(self._los, idx, side="right") - 1
         first = self.shards[0].source
         rows = np.zeros((idx.size, first.d), first.dtype)
         attrs = np.zeros((idx.size, first.a), np.float32) if with_attrs else None
         per_host = [0] * len(self.shards)
 
-        def pull(shard: HostShard):
-            hit = owner == shard.host
+        def pull(pos_shard):
+            pos, shard = pos_shard
+            hit = owner_pos == pos
             if not hit.any():
-                return shard.host, hit, None, None
+                return pos, hit, None, None
+            if fault_hook is not None:
+                fault_hook(shard)
             local_idx = idx[hit]
             if with_attrs:
                 r, a = shard.source.gather_with_attrs(local_idx)
             else:
                 r, a = shard.source.gather(local_idx), None
-            return shard.host, hit, r, a
+            return pos, hit, r, a
 
         parallel = parallel and len(self.shards) > 1 and all(
             s.source.supports_concurrent_gather for s in self.shards)
         if parallel:
             with ThreadPoolExecutor(max_workers=len(self.shards)) as ex:
-                results = list(ex.map(pull, self.shards))
+                results = list(ex.map(pull, enumerate(self.shards)))
         else:
-            results = [pull(s) for s in self.shards]
+            results = [pull(ps) for ps in enumerate(self.shards)]
 
-        for host, hit, r, a in results:
+        for pos, hit, r, a in results:
             if r is None:
                 continue
             rows[hit] = r
             if with_attrs:
                 attrs[hit] = a
-            per_host[host] = int(hit.sum())
+            per_host[pos] = int(hit.sum())
         return rows, attrs, per_host

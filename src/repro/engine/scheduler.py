@@ -47,8 +47,10 @@ from __future__ import annotations
 
 import dataclasses
 import queue
+import sys
 import threading
 import time
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -70,12 +72,15 @@ class EngineConfig:
     mode: str = "sync"          # sync | pipelined
     max_in_flight: int = 2      # host wave buffers alive at once (pipelined)
     hosts: int = 1              # ingestion hosts sharding the gather
+    join_timeout_s: float = 30.0  # producer shutdown grace before the leak
+    #                               is reported instead of silently ignored
 
     def __post_init__(self):
         assert self.mode in ENGINES, self.mode
         assert self.max_in_flight >= 2, (
             f"pipelining needs ≥ 2 wave buffers (got {self.max_in_flight})")
         assert self.hosts >= 1, self.hosts
+        assert self.join_timeout_s > 0, self.join_timeout_s
 
 
 class HostWave(NamedTuple):
@@ -186,6 +191,7 @@ class _BufferGauge:
 
 
 _DONE = object()   # producer → consumer: no more waves (dynamic mode)
+_FAILED = object()  # producer → consumer: exception parked in the slot
 
 
 def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
@@ -193,6 +199,12 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
     out: queue.Queue = queue.Queue(maxsize=max(1, cfg.max_in_flight - 1))
     abort = threading.Event()
     gauge = _BufferGauge(cfg.max_in_flight)
+    # producer exception lands HERE first, before any queue traffic: the
+    # queue wake-up below is best-effort (the consumer may have bailed and
+    # set abort, making _put give up), but the slot is plain shared state —
+    # as long as the consumer is alive it re-checks the slot and the
+    # exception cannot be lost to a queue race.
+    exc_slot: list[BaseException] = []
 
     def _put(item) -> bool:
         """Bounded put that honors the abort flag (never blocks forever)."""
@@ -219,14 +231,15 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
                     assert n_waves is None, f"gather({i}) None mid-count"
                     gauge.release()
                     break
-                if not _put((i, hw, dt, None)):
+                if not _put((i, hw, dt)):
                     raise _Abort
                 i += 1
-            _put((_DONE, None, 0.0, None))
+            _put((_DONE, None, 0.0))
         except _Abort:
             pass
-        except BaseException as exc:  # surface source errors on the caller;
-            _put((-1, None, 0.0, exc))  # dropped if the consumer already bailed
+        except BaseException as exc:  # surface source errors on the caller
+            exc_slot.append(exc)
+            _put((_FAILED, None, 0.0))
 
     producer = threading.Thread(target=produce, name="wave-prefetch",
                                 daemon=True)
@@ -236,9 +249,9 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
     try:
         expect = 0
         while True:
-            i, hw, gather_s, exc = out.get()
-            if exc is not None:
-                raise exc
+            i, hw, gather_s = out.get()
+            if i is _FAILED:
+                raise exc_slot[0]
             if i is _DONE:
                 break
             assert i == expect, f"wave order broke: got {i}, want {expect}"
@@ -258,7 +271,27 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
             expect += 1
     finally:
         abort.set()
-        producer.join(timeout=30.0)
+        producer.join(timeout=cfg.join_timeout_s)
+        if producer.is_alive():
+            # a gather is stuck past the shutdown grace: the thread is
+            # leaked.  Raise when nothing else is propagating; otherwise
+            # annotate the in-flight exception instead of masking it.
+            msg = (f"wave-prefetch producer failed to stop within "
+                   f"{cfg.join_timeout_s}s of shutdown — a gather call is "
+                   f"hung and its thread is leaked (wrap the source in the "
+                   f"fault supervisor's deadline to bound gathers)")
+            in_flight = sys.exc_info()[1]
+            if in_flight is None:
+                raise RuntimeError(msg)
+            if hasattr(in_flight, "add_note"):        # py ≥ 3.11
+                in_flight.add_note(msg)
+            else:
+                warnings.warn(msg, RuntimeWarning)
+        elif exc_slot and sys.exc_info()[1] is None:
+            # producer failed after the consumer finished draining (its
+            # queue wake-up lost the race with a completed loop): the
+            # slot guarantees the error still surfaces
+            raise exc_slot[0]
     return _finalize("pipelined", cfg, traces,
                      time.perf_counter() - t_start,
                      max_live=gauge.high_water)

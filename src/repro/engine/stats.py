@@ -21,6 +21,7 @@ pipeline honestly:
 from __future__ import annotations
 
 import dataclasses
+import time
 
 
 @dataclasses.dataclass
@@ -48,6 +49,7 @@ class EngineStats:
     overlap_ratio: float        # fraction of gather hidden under solve
     max_in_flight: int          # high-water mark of live host wave buffers
     traces: list[WaveTrace] = dataclasses.field(default_factory=list)
+    fault_stats: "FaultStats | None" = None  # set when supervision was active
 
     @property
     def width_trajectory(self) -> list[int]:
@@ -74,7 +76,156 @@ class EngineStats:
             "max_in_flight": self.max_in_flight,
             "width_trajectory": self.width_trajectory,
             "distinct_shapes": self.distinct_shapes,
+            **({"faults": self.fault_stats.summary()}
+               if self.fault_stats is not None else {}),
         }
+
+
+# ---------------------------------------------------------------------------
+# Fault supervision accounting (PR 6).  Lives here — not in engine/faults.py —
+# so core/tree.py and the CLI can consume fault records without importing the
+# supervisor machinery (and faults.py can import the planner freely).
+# ---------------------------------------------------------------------------
+
+FAULT_KINDS = ("transient-retry", "latency", "straggler", "hedge",
+               "evict", "drop")
+
+
+@dataclasses.dataclass
+class FaultEvent:
+    """One supervision decision, in the order the supervisor made it."""
+    kind: str                   # one of FAULT_KINDS
+    wave: int                   # wave index the event belongs to
+    attempt: int                # gather attempt number (0 = first try)
+    detail: str = ""            # human-readable specifics (host id, error, …)
+    seconds: float = 0.0        # time attributable to the event (backoff,
+    #                             straggler overrun, recovered wall, …)
+
+    def __post_init__(self):
+        assert self.kind in FAULT_KINDS, self.kind
+
+
+@dataclasses.dataclass
+class FaultStats:
+    """Per-run fault supervision record (on ``EngineStats``/``TreeResult``).
+
+    ``dropped_rows / total_rows`` is the empirical dropped fraction the
+    Lemma 3.4 budget is checked against: each dropped machine forfeits at
+    most its μ-slice of the round's candidate pool, so the additive quality
+    loss is bounded by the dropped fraction of OPT's items (PERF.md §PR6).
+    """
+    retries: int = 0            # transient gather retries that were issued
+    hedges: int = 0             # speculative re-gathers launched
+    hedges_won: int = 0         # hedges that finished before the original
+    evictions: int = 0          # permanent host losses re-routed to survivors
+    dropped_waves: int = 0      # waves folded as dead past the retry budget
+    dropped_machines: int = 0   # machine blocks inside dropped waves
+    dropped_rows: int = 0       # candidate rows forfeited by dropped waves
+    total_rows: int = 0         # round-0 candidate rows (drop denominator)
+    recovered_s: float = 0.0    # wall spent inside successful recoveries
+    backoff_s: float = 0.0      # wall spent sleeping between retry attempts
+    events: list[FaultEvent] = dataclasses.field(default_factory=list)
+
+    @property
+    def dropped_fraction(self) -> float:
+        return 0.0 if self.total_rows <= 0 else (
+            self.dropped_rows / self.total_rows)
+
+    def record(self, event: FaultEvent) -> None:
+        self.events.append(event)
+
+    def summary(self) -> dict:
+        return {
+            "retries": self.retries,
+            "hedges": self.hedges, "hedges_won": self.hedges_won,
+            "evictions": self.evictions,
+            "dropped_waves": self.dropped_waves,
+            "dropped_machines": self.dropped_machines,
+            "dropped_rows": self.dropped_rows,
+            "total_rows": self.total_rows,
+            "dropped_fraction": round(self.dropped_fraction, 6),
+            "recovered_s": round(self.recovered_s, 4),
+            "backoff_s": round(self.backoff_s, 4),
+            "events": len(self.events),
+        }
+
+    def replay_signature(self) -> dict:
+        """The deterministic slice of the record: counters that must be
+        bit-identical across replays of the same seeded chaos profile.
+        Hedges are excluded — they fire on wall-clock thresholds."""
+        return {
+            "retries": self.retries, "evictions": self.evictions,
+            "dropped_waves": self.dropped_waves,
+            "dropped_machines": self.dropped_machines,
+            "dropped_rows": self.dropped_rows,
+        }
+
+
+class StragglerMonitor:
+    """Per-wave gather-rate tracker feeding the hedge policy.
+
+    Ported from ``repro.train.fault_tolerance.StragglerMonitor`` (per-step
+    wall flagging for the training loop) into the engine stats path: waves
+    vary in width, so the monitor normalizes to seconds *per machine* and
+    keeps both a windowed median (robust flagging, as in train) and an EWMA
+    (the hedge threshold's estimate, matching the autotuner's smoothing).
+    The supervisor asks :meth:`threshold` for "how long should a W-machine
+    gather take before we hedge it?" — ``None`` until ``min_samples`` waves
+    have been observed, so cold starts never hedge.
+    """
+
+    def __init__(self, factor: float = 3.0, window: int = 50,
+                 min_samples: int = 3, alpha: float = 0.3):
+        assert factor > 1.0, factor
+        self.factor = factor
+        self.window = window
+        self.min_samples = min_samples
+        self.alpha = alpha
+        self.rates: list[float] = []    # seconds per machine, recent window
+        self.ewma: float | None = None
+        self._t0: float | None = None
+
+    def observe(self, seconds: float, machines: int) -> None:
+        rate = seconds / max(1, machines)
+        self.rates.append(rate)
+        self.rates = self.rates[-self.window:]
+        self.ewma = rate if self.ewma is None else (
+            self.alpha * rate + (1.0 - self.alpha) * self.ewma)
+
+    # train-style start/stop face, kept for drivers that time externally
+    def start(self) -> None:
+        self._t0 = time.perf_counter()
+
+    def stop(self, machines: int = 1) -> bool:
+        assert self._t0 is not None, "stop() without start()"
+        dt = time.perf_counter() - self._t0
+        self._t0 = None
+        flagged = self.flag(dt, machines)
+        self.observe(dt, machines)
+        return flagged
+
+    def threshold(self, machines: int,
+                  rate_hint: float | None = None) -> float | None:
+        """Hedge deadline (seconds) for a ``machines``-wide gather, or
+        ``None`` while too few waves have been seen to judge.  An external
+        ``rate_hint`` (the autotuner's EWMA, measured on the same stream)
+        takes precedence over the monitor's own estimate."""
+        if len(self.rates) < self.min_samples and rate_hint is None:
+            return None
+        rate = rate_hint if rate_hint is not None else self._robust_rate()
+        return self.factor * rate * max(1, machines)
+
+    def flag(self, seconds: float, machines: int) -> bool:
+        """Would this wall time be flagged as a straggler?"""
+        thr = self.threshold(machines)
+        return thr is not None and seconds > thr
+
+    def _robust_rate(self) -> float:
+        med = sorted(self.rates)[len(self.rates) // 2]
+        # median guards against the stragglers themselves polluting the
+        # estimate; EWMA tracks drift — take the larger to avoid hair-
+        # trigger hedging when the stream is genuinely slowing down
+        return max(med, self.ewma or 0.0)
 
 
 @dataclasses.dataclass

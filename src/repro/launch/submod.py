@@ -8,7 +8,9 @@
         [--wave-autotune] [--async-checkpoint] [--prefetch-depth D] \
         [--constraint knapsack:budget=2.5 | partition:caps=4,4,4 | ...] \
         [--permutation dense|feistel] \
-        [--ckpt-dir DIR --resume] [--fail round:ids]
+        [--ckpt-dir DIR --resume] [--fail round:ids] \
+        [--fault-profile 'transient=0.3,seed=7,...'] [--fault-retries N] \
+        [--fault-backoff S] [--no-hedge] [--max-dropped-fraction F]
 
 Runs TREE-BASED COMPRESSION over all visible devices (machines sharded via
 shard_map), reports value vs centralized greedy + rounds + oracle calls.
@@ -44,6 +46,20 @@ run.  ``--prefetch-depth`` pins the chunk-prefetch depth of the streamed
 centralized column; unset, it defaults from the autotuner's measured
 gather/solve rates when those exist.
 
+``--fault-profile`` arms the seeded chaos injector
+(``repro.engine.faults.FaultInjector``) on the wave-gather path — e.g.
+``transient=0.3,seed=7`` fails ~30% of gather attempts with a retryable IO
+error, ``dead_host=1,dead_host_wave=2`` kills ingestion host 1 permanently
+from wave 2 on (losslessly evicted: the planner re-routes its shard to
+survivors), ``kill=3`` makes wave 3 fail past any retry budget (dropped and
+folded as dead machines under the Lemma 3.4 degradation bound),
+``slow=2,latency=0.5`` injects straggler latency that the hedged re-gather
+races.  ``--fault-retries`` / ``--fault-backoff`` / ``--no-hedge`` /
+``--max-dropped-fraction`` tune the :class:`FaultPolicy`; a ``faults:``
+report line gives grep-able recovery counters (retries, hedges, evictions,
+dropped rows vs the budget).  Transient-only and evicted runs stay
+bit-identical to the fault-free run; only *dropped* waves change output.
+
 ``--constraint`` applies a hereditary constraint to every machine's solve
 (grammar: ``knapsack:budget=F[:col=I]``, ``partition:caps=I,I,..[:col=I]``,
 ``intersection:<spec>+<spec>``).  Per-item attributes are synthesized
@@ -68,7 +84,8 @@ from repro.core import (ChunkedSource, ExemplarClustering, Intersection,
                         constraint_from_spec, make_submod_mesh, randgreedi,
                         tree_maximize)
 from repro.core.tree import PERMUTATIONS
-from repro.engine import ENGINES, suggest_prefetch_depth
+from repro.engine import (ENGINES, FaultInjector, FaultPolicy, FaultProfile,
+                          suggest_prefetch_depth)
 from repro.data import datasets
 from repro.data.sources import ShardedSource
 
@@ -159,6 +176,20 @@ def main():
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--fail", default=None,
                     help="inject failures, e.g. '0:0,1,2' (round 0, ids)")
+    ap.add_argument("--fault-profile", default=None,
+                    help="seeded chaos spec for the wave-gather path, e.g. "
+                         "'transient=0.3,seed=7,dead_host=1,kill=3,"
+                         "slow=2,latency=0.5' (see FaultProfile.from_spec)")
+    ap.add_argument("--fault-retries", type=int, default=None,
+                    help="transient gather retry budget per wave "
+                         "(default: FaultPolicy.max_retries)")
+    ap.add_argument("--fault-backoff", type=float, default=None,
+                    help="base retry backoff seconds (doubles per attempt)")
+    ap.add_argument("--no-hedge", action="store_true",
+                    help="disable hedged re-gathers of straggler waves")
+    ap.add_argument("--max-dropped-fraction", type=float, default=None,
+                    help="Lemma 3.4 degradation budget: abort once the "
+                         "dropped row fraction exceeds this")
     ap.add_argument("--no-centralized", action="store_true")
     args = ap.parse_args()
 
@@ -175,6 +206,19 @@ def main():
     if args.fail:
         rd, ids = args.fail.split(":")
         fail = {int(rd): [int(i) for i in ids.split(",")]}
+
+    injector = None
+    if args.fault_profile:
+        injector = FaultInjector(FaultProfile.from_spec(args.fault_profile))
+    fault_policy = None
+    overrides = {
+        k: v for k, v in (("max_retries", args.fault_retries),
+                          ("backoff_s", args.fault_backoff),
+                          ("hedge", False if args.no_hedge else None),
+                          ("max_dropped_fraction", args.max_dropped_fraction))
+        if v is not None}
+    if overrides or injector is not None:
+        fault_policy = FaultPolicy(**overrides)
 
     if args.source == "chunked":
         ground = ChunkedSource.from_array(data, args.chunk_rows, attrs=attrs)
@@ -203,10 +247,12 @@ def main():
                      hosts=args.hosts, capacity_bytes=args.capacity_bytes,
                      wave_autotune=args.wave_autotune,
                      async_checkpoint=args.async_checkpoint,
-                     prefetch_depth=args.prefetch_depth)
+                     prefetch_depth=args.prefetch_depth,
+                     fault_policy=fault_policy)
     res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
                         wave_machines=args.wave_machines,
-                        constraint=constraint, attrs=attrs_arg)
+                        constraint=constraint, attrs=attrs_arg,
+                        fault_injector=injector)
     print(f"TREE: f={res.value:.6f} rounds={res.rounds} "
           f"machines/round={res.machines_per_round} "
           f"oracle_calls={res.oracle_calls}")
@@ -226,6 +272,14 @@ def main():
         if args.wave_autotune:
             print(f"autotune: widths={es.width_trajectory} "
                   f"distinct_shapes={es.distinct_shapes}")
+    if res.fault_stats is not None:
+        fs = res.fault_stats
+        print(f"faults: retries={fs.retries} hedges={fs.hedges} "
+              f"hedges_won={fs.hedges_won} evictions={fs.evictions} "
+              f"dropped_waves={fs.dropped_waves} "
+              f"dropped_rows={fs.dropped_rows}/{fs.total_rows} "
+              f"dropped_fraction={fs.dropped_fraction:.4f} "
+              f"recovered={fs.recovered_s:.3f}s backoff={fs.backoff_s:.3f}s")
     if res.checkpoint_stats is not None:
         ck = res.checkpoint_stats
         print(f"checkpoint: {ck.mode} rounds={len(ck.rounds)} "

@@ -23,6 +23,18 @@ Elasticity: m_t = ⌈|A_t|/μ⌉ is recomputed every round, so the fleet can
 shrink/grow between rounds (checkpoint → re-mesh → resume); for training,
 re-lowering under a new mesh at checkpoint boundaries gives the same
 semantics (deterministic batches).
+
+**Production path for the tree engine (PR 6):** runtime fault handling for
+round-0 ingestion now lives in :mod:`repro.engine.faults` — retry with
+exponential backoff, hedged re-gathers of stragglers, lossless host
+eviction, and bounded graceful degradation against the Lemma 3.4 budget —
+with the file-rotation/crash-cleanup side in :mod:`repro.engine.checkpoint`
+and a per-wave :class:`repro.engine.stats.StragglerMonitor` (the engine
+port of the per-step monitor below, normalized to seconds per machine)
+feeding the hedge policy.  This module remains the *training*-loop layer
+(step checkpointing + per-step straggler detection for the driver to act
+on); the tree layers 2–3 above are superseded at runtime by the supervised
+engine and kept as the declared-failure (`fail_machines`) reference.
 """
 from __future__ import annotations
 

@@ -1,0 +1,621 @@
+"""Fault supervision chaos matrix (repro.engine.faults, PR 6).
+
+Recovery must be *invisible* in the output: transient retries, host
+evictions, and hedged re-gathers all leave the run bit-identical to the
+fault-free reference.  Only *dropped* waves (past the retry budget) change
+the result — and then the degradation is bounded by the Lemma 3.4 budget
+(``max_dropped_fraction``) and every downstream invariant (fold order,
+feasibility, checkpoint resume) still holds.  The injector is seeded and
+counter-based, so every scenario here is a deterministic replayable
+script."""
+import os
+import time
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ArraySource, ChunkedSource, ExemplarClustering,
+                        Knapsack, TreeConfig, check_feasible, tree_maximize)
+from repro.core.sources import HostLostError
+from repro.data.sources import ShardedSource
+from repro.engine import (DroppedFractionExceeded, EngineConfig, FaultInjector,
+                          FaultPolicy, FaultProfile, FaultStats,
+                          FaultSupervisor, HostWave, IngestionPlan,
+                          PermanentGatherError, StragglerMonitor,
+                          TransientIOError, clean_stale_tmp,
+                          latest_round_checkpoint, list_round_checkpoints,
+                          run_waves, write_round_checkpoint)
+from repro.engine.faults import _HEDGE_BIT
+
+
+def _setup(n=601, d=8, ne=128, seed=0):
+    r = np.random.default_rng(seed)
+    data = r.standard_normal((n, d)).astype(np.float32)
+    E = data[r.choice(n, ne, replace=False)]
+    return data, ExemplarClustering(jnp.asarray(E))
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.sel_rows, b.sel_rows)
+    np.testing.assert_array_equal(a.sel_mask, b.sel_mask)
+    assert a.value == b.value                      # bit-identical, no rtol
+    assert a.oracle_calls == b.oracle_calls
+    assert a.rounds == b.rounds
+    assert a.machines_per_round == b.machines_per_round
+    assert a.round_values == b.round_values
+
+
+# fast-retry policy: exercise the full recovery machinery without test-suite
+# seconds burned in backoff sleeps.  hedge=False where bit-exact *stats*
+# replay is asserted — whether a hedge fires is timing-dependent (the result
+# rows never are); the hedge tests arm it explicitly.
+FAST = FaultPolicy(max_retries=4, backoff_s=0.001, backoff_max_s=0.005,
+                   hedge=False)
+
+
+# ---------------------------------------------------------------------------
+# units: policy, profile, injector
+# ---------------------------------------------------------------------------
+
+
+def test_policy_backoff_exponential_and_capped():
+    pol = FaultPolicy(backoff_s=0.1, backoff_mult=2.0, backoff_max_s=0.5)
+    assert pol.backoff(0) == pytest.approx(0.1)
+    assert pol.backoff(1) == pytest.approx(0.2)
+    assert pol.backoff(2) == pytest.approx(0.4)
+    assert pol.backoff(3) == 0.5                   # ceiling
+    assert pol.backoff(10) == 0.5
+
+
+def test_profile_from_spec_roundtrip():
+    p = FaultProfile.from_spec(
+        "transient=0.3, seed=7, dead_host=1, dead_host_wave=2, kill=3;5, "
+        "slow=2;4, latency=0.05, latency_rate=0.1")
+    assert p == FaultProfile(transient_rate=0.3, seed=7, dead_host=1,
+                             dead_host_wave=2, kill_waves=(3, 5),
+                             slow_waves=(2, 4), latency_s=0.05,
+                             latency_rate=0.1)
+    with pytest.raises(ValueError, match="unknown"):
+        FaultProfile.from_spec("bogus=1")
+
+
+def test_injector_deterministic_and_counter_based():
+    prof = FaultProfile(transient_rate=0.5, seed=11)
+    a, b = FaultInjector(prof), FaultInjector(prof)
+
+    def script(inj):
+        out = []
+        for wave in range(20):
+            for attempt in range(3):
+                try:
+                    inj.wave_hook(wave, attempt)
+                    out.append(True)
+                except TransientIOError:
+                    out.append(False)
+        return out
+
+    sa = script(a)
+    assert sa == script(b)                     # replay == original
+    assert sa == script(a)                     # no mutable RNG state
+    assert not all(sa) and any(sa)             # rate actually fires
+
+
+def test_injector_kill_and_hedge_independence():
+    with pytest.raises(PermanentGatherError):
+        FaultInjector(FaultProfile(kill_waves=(2,))).wave_hook(2, 0)
+    # a hedged attempt id must draw independently of its primary: over many
+    # waves the two decision streams cannot coincide everywhere
+    inj = FaultInjector(FaultProfile(transient_rate=0.5, seed=3))
+
+    def fires(attempt):
+        hits = []
+        for wave in range(64):
+            try:
+                inj.wave_hook(wave, attempt)
+                hits.append(False)
+            except TransientIOError:
+                hits.append(True)
+        return hits
+
+    assert fires(0) != fires(0 | _HEDGE_BIT)
+
+
+def test_injector_host_hook_kills_only_dead_host_from_wave():
+    inj = FaultInjector(FaultProfile(dead_host=1, dead_host_wave=2))
+
+    class Shard:
+        def __init__(self, host):
+            self.host = host
+
+    assert inj.host_hook(0, 0) is not None
+    inj.host_hook(1, 0)(Shard(0))              # other hosts never raise
+    inj.host_hook(1, 0)(Shard(1))              # before the death wave: alive
+    with pytest.raises(HostLostError) as ei:
+        inj.host_hook(2, 0)(Shard(1))
+    assert ei.value.host == 1
+    assert FaultInjector(FaultProfile()).host_hook(0, 0) is None
+
+
+# ---------------------------------------------------------------------------
+# units: straggler monitor
+# ---------------------------------------------------------------------------
+
+
+def test_straggler_monitor_threshold_and_flag():
+    mon = StragglerMonitor(factor=3.0, min_samples=3)
+    assert mon.threshold(1) is None            # no samples, no hint
+    assert mon.threshold(2, rate_hint=0.1) == pytest.approx(0.6)
+    for _ in range(3):
+        mon.observe(0.1, machines=1)
+    thr = mon.threshold(1)
+    assert thr == pytest.approx(0.3)
+    assert not mon.flag(0.1, 1)
+    assert mon.flag(0.5, 1)
+
+
+def test_straggler_monitor_train_style_face():
+    mon = StragglerMonitor(factor=5.0, min_samples=3)
+    for _ in range(4):
+        mon.observe(0.01, machines=1)          # steady 10ms/machine history
+    mon.start()
+    time.sleep(0.002)
+    assert not mon.stop()                      # well under the 50ms threshold
+    mon.start()
+    time.sleep(0.08)
+    assert mon.stop()                          # 8× the rate estimate
+
+
+# ---------------------------------------------------------------------------
+# units: host eviction re-planning
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dead", [0, 1, 2])
+def test_plan_evict_is_lossless(dead):
+    data, _ = _setup(n=500, seed=4)
+    plan = IngestionPlan.build(ArraySource(data), hosts=3)
+    idx = np.random.default_rng(0).integers(0, len(data), 257)
+    before, _, _ = plan.gather(idx)
+    evicted = plan.evict(dead)
+    assert evicted.hosts == 2
+    assert dead not in evicted.host_ids
+    # survivors cover [0, n) contiguously and gather identically
+    los = sorted((s.lo, s.hi) for s in evicted.shards)
+    assert los[0][0] == 0 and los[-1][1] == len(data)
+    assert all(a[1] == b[0] for a, b in zip(los, los[1:]))
+    after, _, _ = evicted.gather(idx)
+    np.testing.assert_array_equal(before, after)
+
+
+def test_plan_evict_refuses_last_host():
+    data, _ = _setup(n=200, seed=4)
+    plan = IngestionPlan.build(ArraySource(data), hosts=2).evict(0)
+    with pytest.raises(AssertionError):
+        plan.evict(1)
+
+
+# ---------------------------------------------------------------------------
+# units: supervisor recovery paths (no tree, no devices)
+# ---------------------------------------------------------------------------
+
+
+def _supervise(policy=FAST, total_rows=1000, **kw):
+    return FaultSupervisor(policy, total_rows=total_rows, **kw)
+
+
+def test_supervisor_retries_transient_then_succeeds():
+    sup = _supervise()
+    calls = []
+
+    def attempt_fn(attempt):
+        calls.append(attempt)
+        if len(calls) < 3:
+            raise TransientIOError("flaky")
+        return "rows"
+
+    result, dropped = sup.gather(0, machines=2, rows=100,
+                                 attempt_fn=attempt_fn)
+    assert (result, dropped) == ("rows", False)
+    assert calls == [0, 1, 2]
+    assert sup.stats.retries == 2
+    assert sup.stats.dropped_waves == 0
+    assert sup.stats.recovered_s > 0
+    assert [e.kind for e in sup.stats.events] == ["transient-retry"] * 2
+
+
+def test_supervisor_drops_past_retry_budget():
+    sup = _supervise(policy=FaultPolicy(max_retries=2, backoff_s=0.0))
+
+    def attempt_fn(attempt):
+        raise TransientIOError("always")
+
+    result, dropped = sup.gather(5, machines=3, rows=150,
+                                 attempt_fn=attempt_fn)
+    assert (result, dropped) == (None, True)
+    assert sup.stats.retries == 2              # budget consumed, then drop
+    assert sup.stats.dropped_waves == 1
+    assert sup.stats.dropped_machines == 3
+    assert sup.stats.dropped_rows == 150
+    assert sup.stats.dropped_fraction == pytest.approx(0.15)
+    assert sup.stats.events[-1].kind == "drop"
+
+
+def test_supervisor_raises_when_budget_exhausted():
+    sup = _supervise(policy=FaultPolicy(max_retries=0, backoff_s=0.0,
+                                        max_dropped_fraction=0.1))
+
+    def attempt_fn(attempt):
+        raise TransientIOError("always")
+
+    with pytest.raises(DroppedFractionExceeded, match="Lemma 3.4"):
+        sup.gather(0, machines=4, rows=200, attempt_fn=attempt_fn)
+
+
+def test_supervisor_deadline_bounds_total_wave_time():
+    sup = _supervise(policy=FaultPolicy(max_retries=50, backoff_s=0.001,
+                                        deadline_s=0.05))
+
+    def attempt_fn(attempt):
+        time.sleep(0.02)
+        raise TransientIOError("slow and flaky")
+
+    t0 = time.perf_counter()
+    result, dropped = sup.gather(0, machines=1, rows=10,
+                                 attempt_fn=attempt_fn)
+    assert dropped and result is None
+    assert time.perf_counter() - t0 < 1.0      # nowhere near 50 retries
+    assert sup.stats.retries < 50
+
+
+def test_supervisor_evicts_dead_host_and_retries_free():
+    evicted = []
+
+    def evict_cb(host):
+        evicted.append(host)
+        return True
+
+    # retries=0: eviction must NOT consume the retry budget
+    sup = _supervise(policy=FaultPolicy(max_retries=0, backoff_s=0.0),
+                     evict_cb=evict_cb)
+    calls = []
+
+    def attempt_fn(attempt):
+        calls.append(attempt)
+        if len(calls) == 1:
+            raise HostLostError(7)
+        return "rerouted"
+
+    result, dropped = sup.gather(0, machines=2, rows=100,
+                                 attempt_fn=attempt_fn)
+    assert (result, dropped) == ("rerouted", False)
+    assert evicted == [7]
+    assert sup.stats.evictions == 1
+    assert sup.stats.retries == 0
+    assert "evict" in [e.kind for e in sup.stats.events]
+
+
+def test_supervisor_drops_when_eviction_unavailable():
+    sup = _supervise(evict_cb=lambda host: False)
+
+    def attempt_fn(attempt):
+        raise HostLostError(0)
+
+    result, dropped = sup.gather(0, machines=2, rows=100,
+                                 attempt_fn=attempt_fn)
+    assert (result, dropped) == (None, True)
+    assert sup.stats.evictions == 0
+    assert sup.stats.dropped_waves == 1
+
+
+def test_supervisor_hedges_straggler_and_first_completion_wins():
+    # primary attempt sleeps; hedge (attempt | _HEDGE_BIT) returns at once.
+    # rate_hint arms the threshold with zero warm-up waves.
+    sup = _supervise(policy=FaultPolicy(hedge_factor=2.0, hedge_min_waves=1),
+                     rate_hint=lambda: 0.01, concurrent_ok=True)
+
+    def attempt_fn(attempt):
+        if not attempt & _HEDGE_BIT:
+            time.sleep(0.5)
+        return ("hedge" if attempt & _HEDGE_BIT else "primary", attempt)
+
+    (tag, attempt), dropped = sup.gather(0, machines=1, rows=10,
+                                         attempt_fn=attempt_fn)
+    assert not dropped
+    assert tag == "hedge" and attempt == _HEDGE_BIT
+    assert sup.stats.hedges == 1
+    assert sup.stats.hedges_won == 1
+    kinds = [e.kind for e in sup.stats.events]
+    assert "straggler" in kinds and "hedge" in kinds
+
+
+def test_supervisor_replay_signature_ignores_timing():
+    a, b = FaultStats(total_rows=10), FaultStats(total_rows=10)
+    a.retries = b.retries = 2
+    a.hedges, b.hedges = 5, 0                  # hedging is timing-dependent
+    a.recovered_s, b.recovered_s = 1.0, 2.0
+    assert a.replay_signature() == b.replay_signature()
+
+
+# ---------------------------------------------------------------------------
+# scheduler shutdown (satellite): producer failures must surface
+# ---------------------------------------------------------------------------
+
+
+def _noop_solve(i, payload):
+    return None
+
+
+def test_pipelined_producer_exception_propagates():
+    def gather(i):
+        if i == 2:
+            raise ValueError("source blew up")
+        return HostWave(payload=i, machines=1, rows=1, bytes_moved=0)
+
+    with pytest.raises(ValueError, match="source blew up"):
+        run_waves(None, gather, _noop_solve,
+                  EngineConfig(mode="pipelined"))
+
+
+def test_pipelined_hung_gather_reported_not_silent():
+    release = time.perf_counter() + 2.0
+
+    def gather(i):
+        if i == 1:                 # in-flight when the consumer dies
+            while time.perf_counter() < release:
+                time.sleep(0.01)
+        return HostWave(payload=i, machines=1, rows=1, bytes_moved=0)
+
+    def solve(i, payload):
+        time.sleep(0.05)       # let the producer enter the hung gather(1)
+        raise RuntimeError("consumer died")
+
+    with pytest.raises(RuntimeError, match="consumer died"):
+        with pytest.warns(RuntimeWarning, match="failed to stop"):
+            run_waves(None, gather, solve,
+                      EngineConfig(mode="pipelined", join_timeout_s=0.2))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint rotation + crash cleanup (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_round_checkpoint_rotation_keeps_k_and_latest_pointer(tmp_path):
+    d = str(tmp_path)
+    for t in range(5):
+        write_round_checkpoint(d, t, keep=2, x=np.full(3, t))
+    rounds = [r for r, _ in list_round_checkpoints(d)]
+    assert rounds == [3, 4]                    # keep-2 rotation
+    latest = latest_round_checkpoint(d)
+    with np.load(latest) as ck:
+        assert int(ck["round"]) == 4
+    # the legacy single-file pointer tracks the latest rotated snapshot
+    legacy = os.path.join(d, "tree_round.npz")
+    assert os.path.exists(legacy)
+    with np.load(legacy) as ck:
+        assert int(ck["round"]) == 4
+
+
+def test_round_checkpoint_keep_zero_disables_rotation(tmp_path):
+    d = str(tmp_path)
+    for t in range(4):
+        write_round_checkpoint(d, t, keep=0, x=np.zeros(1))
+    assert [r for r, _ in list_round_checkpoints(d)] == [0, 1, 2, 3]
+
+
+def test_clean_stale_tmp_removes_only_checkpoint_tmp_files(tmp_path):
+    d = str(tmp_path)
+    write_round_checkpoint(d, 0, x=np.zeros(1))
+    stale = os.path.join(d, "tree_round_r0001.npz.tmp.npz")
+    keepme = os.path.join(d, "unrelated.tmp")
+    open(stale, "w").close()
+    open(keepme, "w").close()
+    removed = clean_stale_tmp(d)
+    assert removed == [stale]
+    assert os.path.exists(keepme)
+    assert latest_round_checkpoint(d) is not None
+    assert clean_stale_tmp(str(tmp_path / "missing")) == []
+
+
+# ---------------------------------------------------------------------------
+# chaos matrix through tree_maximize: recovery is bit-invisible
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_transient_faults_bit_identical_to_fault_free(engine):
+    data, obj = _setup(seed=1)
+    cfg = TreeConfig(k=8, capacity=60, seed=5, engine=engine,
+                     fault_policy=FAST)
+    clean = tree_maximize(obj, ArraySource(data),
+                          TreeConfig(k=8, capacity=60, seed=5, engine=engine),
+                          wave_machines=3)
+    inj = FaultInjector(FaultProfile(transient_rate=0.3, seed=7))
+    faulted = tree_maximize(obj, ArraySource(data), cfg, wave_machines=3,
+                            fault_injector=inj)
+    _assert_identical(clean, faulted)
+    fs = faulted.fault_stats
+    assert fs is not None
+    assert fs.retries > 0                      # chaos actually fired
+    assert fs.dropped_waves == 0 and fs.dropped_rows == 0
+    assert clean.fault_stats is None           # unsupervised path untouched
+
+
+def test_seeded_chaos_replays_bit_identically():
+    data, obj = _setup(seed=2)
+    prof = FaultProfile(transient_rate=0.35, seed=13)
+    cfg = TreeConfig(k=8, capacity=60, seed=5, fault_policy=FAST)
+
+    def run():
+        return tree_maximize(obj, ArraySource(data), cfg, wave_machines=3,
+                             fault_injector=FaultInjector(prof))
+
+    a, b = run(), run()
+    _assert_identical(a, b)
+    assert a.fault_stats.retries == b.fault_stats.retries > 0
+    assert (a.fault_stats.replay_signature()
+            == b.fault_stats.replay_signature())
+
+
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_dead_host_evicted_losslessly(engine):
+    data, obj = _setup(seed=3)
+    mk = lambda: ShardedSource.from_arrays(
+        [data[s:s + 130] for s in range(0, len(data), 130)])
+    clean = tree_maximize(
+        obj, mk(), TreeConfig(k=8, capacity=60, seed=5, engine=engine,
+                              hosts=3), wave_machines=3)
+    inj = FaultInjector(FaultProfile(dead_host=1, dead_host_wave=1, seed=0))
+    faulted = tree_maximize(
+        obj, mk(), TreeConfig(k=8, capacity=60, seed=5, engine=engine,
+                              hosts=3, fault_policy=FAST),
+        wave_machines=3, fault_injector=inj)
+    _assert_identical(clean, faulted)          # re-routing is lossless
+    fs = faulted.fault_stats
+    assert fs.evictions == 1
+    assert fs.dropped_rows == 0
+
+
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_hedged_gathers_preserve_output_and_wave_order(engine):
+    data, obj = _setup(seed=6)
+    clean = tree_maximize(obj, ArraySource(data),
+                          TreeConfig(k=8, capacity=60, seed=5,
+                                     engine=engine), wave_machines=3)
+    # wave 2's first gather stalls 0.25s; the hedge (fresh attempt id, no
+    # injected latency) races past it.  ArraySource advertises concurrent
+    # gathers, so hedging is armed.
+    inj = FaultInjector(FaultProfile(slow_waves=(2,), latency_s=0.25, seed=0))
+    pol = FaultPolicy(max_retries=2, backoff_s=0.001, hedge_factor=2.0,
+                      hedge_min_waves=2)
+    faulted = tree_maximize(obj, ArraySource(data),
+                            TreeConfig(k=8, capacity=60, seed=5,
+                                       engine=engine, fault_policy=pol),
+                            wave_machines=3, fault_injector=inj)
+    _assert_identical(clean, faulted)
+    assert faulted.fault_stats.hedges >= 1
+    assert faulted.fault_stats.dropped_rows == 0
+
+
+# ---------------------------------------------------------------------------
+# bounded graceful degradation: dropped waves fold as dead machines
+# ---------------------------------------------------------------------------
+
+
+def test_killed_wave_degrades_gracefully_and_matches_fail_machines():
+    data, obj = _setup(seed=1)
+    # n=601, μ=60 → 11 machines; W=3 → wave 1 is machines {3, 4, 5}
+    clean = tree_maximize(obj, ArraySource(data),
+                          TreeConfig(k=8, capacity=60, seed=5),
+                          wave_machines=3)
+    inj = FaultInjector(FaultProfile(kill_waves=(1,), seed=0))
+    dropped = tree_maximize(obj, ArraySource(data),
+                            TreeConfig(k=8, capacity=60, seed=5,
+                                       fault_policy=FAST),
+                            wave_machines=3, fault_injector=inj)
+    fs = dropped.fault_stats
+    assert fs.dropped_waves == 1 and fs.dropped_machines == 3
+    # the wave's *valid* slots, not 3·μ raw: padding is never charged
+    assert 0 < fs.dropped_rows <= 180
+    assert fs.dropped_fraction == pytest.approx(fs.dropped_rows / 601)
+    assert fs.dropped_fraction <= FAST.max_dropped_fraction
+    # Lemma 3.4 degradation bound — the loss is bounded, but a drop is NOT
+    # pointwise monotone (greedy over fewer partitions can even end higher,
+    # as it does for this seed); the expectation-level Barbosa et al.
+    # (1−p)·f bound is what must hold per instance here
+    assert dropped.value >= (1 - fs.dropped_fraction) * clean.value
+
+    # a dropped wave folds EXACTLY like declared-dead machines — same
+    # selection, value, and round trajectory; only oracle_calls differ
+    # (fail_machines models dying *after* the work, drops never ran)
+    declared = tree_maximize(obj, ArraySource(data),
+                             TreeConfig(k=8, capacity=60, seed=5),
+                             wave_machines=3, fail_machines={0: [3, 4, 5]})
+    np.testing.assert_array_equal(dropped.sel_rows, declared.sel_rows)
+    np.testing.assert_array_equal(dropped.sel_mask, declared.sel_mask)
+    assert dropped.value == declared.value
+    assert dropped.rounds == declared.rounds
+    assert dropped.machines_per_round == declared.machines_per_round
+    assert dropped.round_values == declared.round_values
+    assert dropped.oracle_calls < declared.oracle_calls
+
+
+def test_killed_wave_keeps_constraint_feasibility():
+    data, obj = _setup(seed=2)
+    r = np.random.default_rng(7)
+    attrs = r.uniform(0.2, 1.0, (len(data), 1)).astype(np.float32)
+    spec = Knapsack(budget=3.0, col=0)
+    inj = FaultInjector(FaultProfile(kill_waves=(0,), transient_rate=0.2,
+                                     seed=5))
+    res = tree_maximize(obj, ChunkedSource.from_array(data, 128, attrs=attrs),
+                        TreeConfig(k=8, capacity=60, seed=4,
+                                   fault_policy=FAST),
+                        wave_machines=2, constraint=spec,
+                        fault_injector=inj)
+    assert res.fault_stats.dropped_waves == 1
+    ok, detail = check_feasible(spec, res.sel_attrs, res.sel_mask)
+    assert ok, detail
+
+
+def test_dropped_fraction_budget_aborts_run():
+    data, obj = _setup(seed=1)
+    inj = FaultInjector(FaultProfile(kill_waves=(0, 1, 2), seed=0))
+    pol = FaultPolicy(max_retries=1, backoff_s=0.0, max_dropped_fraction=0.3)
+    with pytest.raises(DroppedFractionExceeded):
+        tree_maximize(obj, ArraySource(data),
+                      TreeConfig(k=8, capacity=60, seed=5, fault_policy=pol),
+                      wave_machines=3, fault_injector=inj)
+
+
+# ---------------------------------------------------------------------------
+# crash + resume under chaos: rotated checkpoints carry a faulted run
+# ---------------------------------------------------------------------------
+
+
+def test_kill_mid_run_resumes_from_rotated_checkpoint(tmp_path, monkeypatch):
+    """A faulted (transient + retry) run crashed after its round-1 snapshot
+    must resume into the exact same final result as its uninterrupted twin
+    — recovery state needs no persistence beyond the round checkpoint."""
+    from repro.core import tree as tree_lib
+
+    data, obj = _setup(n=700, seed=3)
+    prof = FaultProfile(transient_rate=0.3, seed=9)
+
+    def cfg(ckpt=None, resume=False):
+        return TreeConfig(k=8, capacity=60, seed=6, engine="pipelined",
+                          fault_policy=FAST, checkpoint_dir=ckpt,
+                          resume=resume)
+
+    full = tree_maximize(obj, ChunkedSource.from_array(data, 100), cfg(),
+                         wave_machines=2,
+                         fault_injector=FaultInjector(prof))
+    assert full.rounds >= 2 and full.fault_stats.retries > 0
+
+    ck = str(tmp_path / "ck")
+    real_save = tree_lib._save_round
+
+    def crash_after_round_1(d, round_idx, *a):
+        real_save(d, round_idx, *a)
+        if round_idx == 1:
+            raise KeyboardInterrupt("simulated crash")
+
+    monkeypatch.setattr(tree_lib, "_save_round", crash_after_round_1)
+    with pytest.raises(KeyboardInterrupt):
+        tree_maximize(obj, ChunkedSource.from_array(data, 100), cfg(ckpt=ck),
+                      wave_machines=2, fault_injector=FaultInjector(prof))
+    monkeypatch.setattr(tree_lib, "_save_round", real_save)
+    # snapshots are numbered by the round they resume INTO: the crash after
+    # the round_idx==1 write leaves exactly that one rotated file
+    assert [r for r, _ in list_round_checkpoints(ck)] == [1]
+
+    resumed = tree_maximize(obj, ChunkedSource.from_array(data, 100),
+                            cfg(ckpt=ck, resume=True), wave_machines=2,
+                            fault_injector=FaultInjector(prof))
+    np.testing.assert_array_equal(resumed.sel_rows, full.sel_rows)
+    np.testing.assert_array_equal(resumed.sel_mask, full.sel_mask)
+    assert resumed.value == full.value
+    assert resumed.oracle_calls == full.oracle_calls
+    assert resumed.rounds == full.rounds
+    assert resumed.machines_per_round == full.machines_per_round[1:]
+    assert resumed.round_values == full.round_values[1:]
