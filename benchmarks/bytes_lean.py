@@ -1,0 +1,154 @@
+"""Bytes-lean ingestion benchmark (PR 7): quantized wave streaming.
+
+At a *fixed device byte budget* (``capacity_bytes``), narrowing the wire
+dtype widens each wave: fp32 rows cost ``(d+a)·4`` bytes, bf16 rows
+``d·2 + a·4``, int8 rows ``d·1 + (a+2)·4`` (the +2 is the out-of-band
+per-row quantization scale/zero-point).  Wider waves mean fewer waves,
+and in an I/O-bound ingest (each wave's gather re-reads its storage
+shards, paying latency per read) round-0 wall time tracks the wave
+count — so the same byte budget moves ~2× the rows/s at bf16.
+
+Two gather-cost profiles, each unconstrained and knapsack-constrained,
+for each storage dtype:
+
+  * **io** — one storage shard with an injected per-load latency: every
+    wave's gather pays one full shard read (latency + regeneration), so
+    gather cost is per-wave-constant and throughput is proportional to
+    the wave width the byte budget affords.  This is the read-
+    amplification regime of a real pipeline backend.
+  * **compute** — many small shards, no latency: gather cost is
+    per-row, so the narrow dtypes only save the per-wave dispatch
+    overhead.  Recorded as the honest lower bound of the win.
+
+Every quantized run is finished the Barbosa way: the selected coreset
+is re-gathered from the unquantized parent at fp32 and exactly
+re-scored (``fp32_recheck``); the recorded ``value_fp32`` is that
+number, and the benchmark asserts bf16's is within 1e-3 relative of
+the fp32 pipeline's.  The io profile asserts bf16 moves ≥ 1.7× the
+fp32 rows/s.  Constrained cells re-verify feasibility with the
+independent NumPy checker.
+
+Record lands in ``BENCH_PR7.json`` via ``benchmarks/run.py --only
+bytes_lean``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import (ExemplarClustering, Knapsack, QuantizedSource,
+                        TreeConfig, check_feasible, dtype_itemsize,
+                        tree_maximize)
+from repro.core.sources import as_source
+from repro.data.selection import fp32_recheck
+from repro.data.sources import synthetic_sharded_source
+
+DTYPES = ("fp32", "bf16", "int8")
+CAPACITY_BYTES = 128 * 1024        # fixed device wave budget for every cell
+BF16_MIN_SPEEDUP = 1.7             # io-profile acceptance floor
+BF16_MAX_REL_GAP = 1e-3            # |value_fp32 − fp32 pipeline| / fp32
+#                                    (unconstrained cells: greedy order is
+#                                    stable under ~1e-3 row perturbation)
+CONSTR_MAX_REL_GAP = 5e-2          # constrained cells: a binding knapsack
+#                                    packs discretely — a boundary item
+#                                    flipping is a real value step, so the
+#                                    bound is the CLI re-check threshold
+INT8_MAX_REL_GAP = 5e-2            # coarser lattice (pow-2 scales); same
+#                                    threshold the launch CLI re-check uses
+
+
+def _attr_gen(r, rows: int) -> np.ndarray:
+    return r.uniform(0.2, 1.0, (rows, 1)).astype(np.float32)
+
+
+def _profile_source(profile: str, n: int, d: int, constrained: bool,
+                    io_latency_s: float):
+    kw = dict(attr_gen=_attr_gen, a=1) if constrained else {}
+    if profile == "io":
+        # one shard → every wave gather re-reads (regenerates) the whole
+        # pool and pays the injected latency once: per-wave-constant cost
+        return synthetic_sharded_source(n=n, d=d, shard_rows=n, seed=0,
+                                        io_latency_s=io_latency_s, **kw)
+    return synthetic_sharded_source(n=n, d=d, shard_rows=4096, seed=0, **kw)
+
+
+def _run_cell(obj, base, dtype: str, k: int, mu: int, constraint) -> dict:
+    src = (base if dtype == "fp32"
+           else QuantizedSource(as_source(base), store_dtype=dtype))
+    cfg = TreeConfig(k=k, capacity=mu, seed=0, engine="pipelined",
+                     capacity_bytes=CAPACITY_BYTES)
+    with Timer() as t:
+        res = tree_maximize(obj, src, cfg, constraint=constraint)
+    ing = res.ingest
+    qcols = getattr(src, "qcols", 0)
+    itemsize = dtype_itemsize(src.dtype) if dtype != "fp32" else 4
+    d = src.d
+    row_bytes = (d * itemsize + (ing.attr_dim + qcols) * 4 if dtype != "fp32"
+                 else (d + ing.attr_dim) * 4)
+    rows_per_s = src.n / max(1e-9, ing.wall_seconds)
+    cell = {
+        "dtype": dtype, "wave_machines": ing.wave_machines,
+        "waves": ing.waves, "row_bytes": row_bytes,
+        "peak_wave_bytes": ing.peak_wave_bytes,
+        "total_bytes": ing.total_bytes,
+        "ingest_wall_s": round(ing.wall_seconds, 4),
+        "rows_per_s": round(rows_per_s, 1),
+        "wall_sec": round(t.s, 3),
+        "value_solve": float(res.value),
+    }
+    if dtype == "fp32":
+        cell["value_fp32"] = float(res.value)
+    else:
+        rc = fp32_recheck(obj, src, res.sel_rows, res.sel_mask,
+                          solve_value=float(res.value))
+        cell["value_fp32"] = float(rc.value)
+    if constraint is not None:
+        ok, detail = check_feasible(constraint, res.sel_attrs, res.sel_mask)
+        assert ok, (dtype, detail)
+        cell["feasible"] = True
+    return cell
+
+
+def run(quick: bool = True):
+    n = 40_000 if quick else 400_000
+    d, k, mu = 32, 16, 250
+    io_latency_s = 0.02 if quick else 0.05
+    out: dict = {"config": {"n": n, "d": d, "k": k, "mu": mu,
+                            "capacity_bytes": CAPACITY_BYTES,
+                            "io_latency_s": io_latency_s}}
+
+    for profile in ("io", "compute"):
+        for constrained in (False, True):
+            cons = Knapsack(budget=0.35 * k, col=0) if constrained else None
+            base = _profile_source(profile, n, d, constrained, io_latency_s)
+            rng = np.random.default_rng(0)
+            ev = base.gather(rng.choice(n, 256, replace=False))
+            obj = ExemplarClustering(jnp.asarray(np.asarray(ev, np.float32)))
+            cells = [_run_cell(obj, base, dt, k, mu, cons) for dt in DTYPES]
+            key = f"{profile}_{'constrained' if constrained else 'unconstrained'}"
+            fp32_cell = cells[0]
+            for c in cells:
+                c["speedup_vs_fp32"] = round(
+                    c["rows_per_s"] / fp32_cell["rows_per_s"], 3)
+                c["rel_gap_fp32"] = round(
+                    abs(c["value_fp32"] - fp32_cell["value_fp32"])
+                    / max(abs(fp32_cell["value_fp32"]), 1e-12), 8)
+                print(f"bytes_lean,{key},dtype={c['dtype']},"
+                      f"W={c['wave_machines']},waves={c['waves']},"
+                      f"row_bytes={c['row_bytes']},"
+                      f"rows/s={c['rows_per_s']:.0f},"
+                      f"speedup={c['speedup_vs_fp32']},"
+                      f"rel_gap={c['rel_gap_fp32']:.2e}")
+            by_dt = {c["dtype"]: c for c in cells}
+            bf16_bound = CONSTR_MAX_REL_GAP if constrained else BF16_MAX_REL_GAP
+            assert by_dt["bf16"]["rel_gap_fp32"] <= bf16_bound, (
+                key, by_dt["bf16"]["rel_gap_fp32"])
+            assert by_dt["int8"]["rel_gap_fp32"] <= INT8_MAX_REL_GAP, (
+                key, by_dt["int8"]["rel_gap_fp32"])
+            if profile == "io":
+                assert by_dt["bf16"]["speedup_vs_fp32"] >= BF16_MIN_SPEEDUP, (
+                    key, by_dt["bf16"]["speedup_vs_fp32"])
+            out[key] = cells
+    return out

@@ -12,13 +12,15 @@
   engine   — async engine overlap + multi-host ingestion  (PR 4)
   adaptive — wave autoscaler + async checkpoint writer    (PR 5)
   faults   — fault supervision: retries/eviction/drops    (PR 6)
+  bytes_lean — quantized wave streaming, dtype ladder     (PR 7)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
 ``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``, ``adaptive``
-writes ``BENCH_PR5.json``, ``faults`` writes ``BENCH_PR6.json``;
-everything else goes to ``BENCH_PR1.json`` (repo root).  ``--only faults``
-is the PR 6 refresh.
+writes ``BENCH_PR5.json``, ``faults`` writes ``BENCH_PR6.json``,
+``bytes_lean`` writes ``BENCH_PR7.json``; everything else goes to
+``BENCH_PR1.json`` (repo root).  ``--only bytes_lean`` is the PR 7
+refresh.
 """
 import argparse
 import json
@@ -33,6 +35,7 @@ BENCH_PR3_JSON = os.path.join(_ROOT, "BENCH_PR3.json")
 BENCH_PR4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 BENCH_PR5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 BENCH_PR6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
+BENCH_PR7_JSON = os.path.join(_ROOT, "BENCH_PR7.json")
 
 
 def main() -> None:
@@ -43,7 +46,7 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (adaptive_engine, constrained_tree,
+    from benchmarks import (adaptive_engine, bytes_lean, constrained_tree,
                             engine_overlap, fault_engine,
                             fault_tolerance_bench,
                             fig2_capacity, fig2_large_scale, kernel_bench,
@@ -61,13 +64,15 @@ def main() -> None:
         "engine": engine_overlap.run,
         "adaptive": adaptive_engine.run,
         "faults": fault_engine.run,
+        "bytes_lean": bytes_lean.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
                "constrained": (BENCH_PR3_JSON, 3),
                "engine": (BENCH_PR4_JSON, 4),
                "adaptive": (BENCH_PR5_JSON, 5),
-               "faults": (BENCH_PR6_JSON, 6)}
+               "faults": (BENCH_PR6_JSON, 6),
+               "bytes_lean": (BENCH_PR7_JSON, 7)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

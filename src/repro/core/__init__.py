@@ -13,8 +13,10 @@ from repro.core.objectives import (ActiveSetSelection, ExemplarClustering,
                                    FacilityLocation, WeightedCoverage)
 from repro.core.partition import balanced_partition, gather_partition, n_parts
 from repro.core.permute import FeistelPermutation, feistel_slot_items
-from repro.core.sources import (ArraySource, ChunkedSource, GroundSetSource,
-                                SlicedSource, as_source, prefetch_chunks)
+from repro.core.sources import (STORAGE_DTYPES, ArraySource, ChunkedSource,
+                                GroundSetSource, QuantizedSource,
+                                SlicedSource, as_source, dtype_itemsize,
+                                prefetch_chunks, storage_np_dtype)
 from repro.core.tree import IngestStats, TreeConfig, TreeResult, tree_maximize
 from repro.engine import EngineConfig, EngineStats, IngestionPlan
 
@@ -28,8 +30,9 @@ __all__ = [
     "ActiveSetSelection", "ExemplarClustering", "FacilityLocation",
     "WeightedCoverage", "balanced_partition", "gather_partition", "n_parts",
     "FeistelPermutation", "feistel_slot_items",
-    "ArraySource", "ChunkedSource", "GroundSetSource", "SlicedSource",
-    "as_source", "prefetch_chunks",
+    "ArraySource", "ChunkedSource", "GroundSetSource", "QuantizedSource",
+    "STORAGE_DTYPES", "SlicedSource", "as_source", "dtype_itemsize",
+    "prefetch_chunks", "storage_np_dtype",
     "EngineConfig", "EngineStats", "IngestionPlan",
     "IngestStats", "TreeConfig", "TreeResult", "tree_maximize",
 ]

@@ -53,6 +53,27 @@ def _dummy_attrs(T: jax.Array) -> jax.Array:
     return jnp.zeros((T.shape[0], 1), jnp.float32)
 
 
+def _dequant_block(T: jax.Array, qmeta: jax.Array | None) -> jax.Array:
+    """Narrow candidate block → fp32 (identity for fp32 blocks).
+
+    ``qmeta`` is the per-row ``(cap, qcols)`` dequant params gathered
+    out-of-band by the source (scale, zero-point for int8; zero-width for
+    bf16, whose upcast is exact).  The scan algorithms dequantize once up
+    front, so their per-row values are bit-equal to the fused kernels'
+    in-kernel dequant of the same bytes.
+    """
+    Tf = T.astype(jnp.float32)
+    if qmeta is not None and qmeta.shape[1] >= 2:
+        Tf = Tf * qmeta[:, 0:1] + qmeta[:, 1:2]
+    return Tf
+
+
+def _fused_quant_kwargs(qmeta: jax.Array | None) -> dict:
+    if qmeta is None or qmeta.shape[1] < 2:
+        return {}
+    return {"x_scale": qmeta[:, 0], "x_zp": qmeta[:, 1]}
+
+
 # ---------------------------------------------------------------------------
 # GREEDY — 1-nice
 # ---------------------------------------------------------------------------
@@ -117,7 +138,8 @@ def _fusable(obj, constraint, attrs) -> bool:
 
 def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
            constraint=None, attrs: jax.Array | None = None,
-           fused: bool | None = None) -> SelectResult:
+           fused: bool | None = None,
+           qmeta: jax.Array | None = None) -> SelectResult:
     """Classic greedy with consistent (lowest-index) tie-breaking.
 
     Supports any hereditary constraint; the cardinality bound is the loop
@@ -131,6 +153,11 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
     step-wise scan, tie-breaking and oracle-call counts included.  Other
     constraint classes always take the feasibility-masked scan.
     ``fused=False`` forces the scan; ``fused=True`` asserts the fast path.
+
+    ``qmeta`` marks a quantized candidate block (``(cap, qcols)`` per-row
+    dequant params, zero-width for bf16): the fused path ships the narrow
+    block with in-kernel dequant, the scan path dequantizes up front —
+    both see identical fp32 values for the same bytes.
     """
     if fused is None:
         fused = _fusable(obj, constraint, attrs)
@@ -139,14 +166,18 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
             "fused=True needs a rowwise objective with a fused_select hook "
             "and an unconstrained, fused-knapsack, or fused-partition "
             "selection")
+        qkw = _fused_quant_kwargs(qmeta)
         if constraint is not None and not isinstance(constraint, Unconstrained):
             sel_idx, sel_mask, value, calls = obj.fused_select(
-                T, mask, k, **_fused_constraint_kwargs(constraint, attrs))
+                T, mask, k, **_fused_constraint_kwargs(constraint, attrs),
+                **qkw)
         else:
-            sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k)
+            sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k,
+                                                               **qkw)
         return SelectResult(sel_idx, sel_mask, value, calls)
 
     cap = T.shape[0]
+    T = _dequant_block(T, qmeta)
     constraint = constraint or Unconstrained()
     attrs = _dummy_attrs(T) if attrs is None else attrs
 
@@ -179,7 +210,8 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
 def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
                       key: jax.Array, *, eps: float = 0.5,
                       constraint=None,
-                      attrs: jax.Array | None = None) -> SelectResult:
+                      attrs: jax.Array | None = None,
+                      qmeta: jax.Array | None = None) -> SelectResult:
     """Each step draws a uniform random candidate subset of size
     s = ⌈(cap/k)·ln(1/ε)⌉ and takes its best element.
 
@@ -194,6 +226,7 @@ def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
     import math
 
     cap = T.shape[0]
+    T = _dequant_block(T, qmeta)
     s = min(cap, max(1, math.ceil(cap / k * math.log(1.0 / eps))))
     rowwise = getattr(obj, "rowwise_gains", False)
     constraint = constraint or Unconstrained()
@@ -239,7 +272,8 @@ def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
 
 def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
                      eps: float = 0.1, constraint=None,
-                     attrs: jax.Array | None = None) -> SelectResult:
+                     attrs: jax.Array | None = None,
+                     qmeta: jax.Array | None = None) -> SelectResult:
     """Descending thresholds τ = d_max·(1-ε)^l down to (ε/2k)·d_max; one
     sequential pass per threshold adding every item whose current marginal
     gain meets τ (stopping at k items).
@@ -251,6 +285,7 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
     import math
 
     cap = T.shape[0]
+    T = _dequant_block(T, qmeta)
     n_levels = max(1, math.ceil(math.log(2.0 * k / eps) / eps))
     constraint = constraint or Unconstrained()
     attrs = _dummy_attrs(T) if attrs is None else attrs
@@ -306,15 +341,18 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
 
 def run_algorithm(name: str, obj, T, mask, k, *, key=None, eps=0.5,
                   constraint=None, attrs=None,
-                  fused: bool | None = None) -> SelectResult:
+                  fused: bool | None = None,
+                  qmeta=None) -> SelectResult:
     if name == "greedy":
         return greedy(obj, T, mask, k, constraint=constraint, attrs=attrs,
-                      fused=fused)
+                      fused=fused, qmeta=qmeta)
     if name == "stochastic_greedy":
         assert key is not None, "stochastic_greedy needs a PRNG key"
         return stochastic_greedy(obj, T, mask, k, key, eps=eps,
-                                 constraint=constraint, attrs=attrs)
+                                 constraint=constraint, attrs=attrs,
+                                 qmeta=qmeta)
     if name == "threshold_greedy":
         return threshold_greedy(obj, T, mask, k, eps=eps,
-                                constraint=constraint, attrs=attrs)
+                                constraint=constraint, attrs=attrs,
+                                qmeta=qmeta)
     raise ValueError(f"unknown algorithm {name!r}")

@@ -30,6 +30,20 @@ class BaselineResult(NamedTuple):
     sel_attrs: jax.Array | None = None
 
 
+def fp32_recheck_value(obj, rows, mask) -> float:
+    """Exact fp32 re-score of a coreset's rows (Barbosa-style validation).
+
+    The quantized pipeline may perturb per-machine scores (bf16/int8
+    storage dequantized in-kernel), but the *final* reported objective is
+    always this exact fp32 evaluation of the selected rows — the quantized
+    run's quality claim never rests on quantized arithmetic.  Also the
+    re-score seam for :func:`repro.data.selection.fp32_recheck`, which
+    re-gathers the rows from the unquantized parent source first.
+    """
+    rows32 = jnp.asarray(np.asarray(rows, np.float32))
+    return float(obj.evaluate(rows32, jnp.asarray(np.asarray(mask, bool))))
+
+
 def centralized_greedy(obj, data, k: int, *, constraint=None, attrs=None,
                        chunk_rows: int = 8192,
                        prefetch_depth: int = 2) -> BaselineResult:

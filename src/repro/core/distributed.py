@@ -50,8 +50,8 @@ def make_submod_mesh(devices=None) -> Mesh:
     return Mesh(np.asarray(devices), ("machines",))
 
 
-def _solve_block(obj, T, mask, key, *, k: int, alg: str, eps: float,
-                 attr_dim: int = 0, constraint=None):
+def _solve_block(obj, T, mask, key, meta=None, *, k: int, alg: str,
+                 eps: float, attr_dim: int = 0, constraint=None):
     """Solve one machine block.
 
     ``T`` is the *carried* block: item feature rows, optionally widened with
@@ -60,7 +60,27 @@ def _solve_block(obj, T, mask, key, *, k: int, alg: str, eps: float,
     constraint only ever sees the attribute slice; the returned solution
     rows keep the full width, so attributes travel with their items into
     the next round's union without any side-channel bookkeeping.
+
+    Quantized round-0 waves instead ship a *narrow* ``(cap, d)`` feature
+    block plus a separate fp32 ``meta`` matrix ``[attrs | qmeta]`` (the
+    per-row dequant params ride out-of-band, never widening the carried
+    rows).  The solve runs on the narrow block (in-kernel dequant / scan
+    upcast), and the k *selected* rows are dequantized to fp32 here — so
+    rounds t ≥ 1 carry exactly the wide fp32 rows they always have.
     """
+    if meta is not None:
+        attrs = meta[:, :attr_dim] if attr_dim else None
+        qmeta = meta[:, attr_dim:]
+        res = algorithms.run_algorithm(alg, obj, T, mask, k, key=key,
+                                       eps=eps, constraint=constraint,
+                                       attrs=attrs, qmeta=qmeta)
+        safe = jnp.maximum(res.sel_idx, 0)
+        wide = algorithms._dequant_block(T[safe], qmeta[safe])
+        if attr_dim:
+            wide = jnp.concatenate([wide, attrs[safe]], axis=1)
+        rows = jnp.where(res.sel_mask[:, None], wide, 0.0)
+        value = jnp.where(jnp.any(res.sel_mask), res.value, -jnp.inf)
+        return rows, res.sel_mask, value, res.oracle_calls
     if attr_dim:
         feat, attrs = T[:, :-attr_dim], T[:, -attr_dim:]
     else:
@@ -74,13 +94,18 @@ def _solve_block(obj, T, mask, key, *, k: int, alg: str, eps: float,
     return rows, res.sel_mask, value, res.oracle_calls
 
 
-def _round_local(obj, blocks, bmask, keys, dead, *, k, alg, eps,
+def _round_local(obj, blocks, bmask, keys, dead, meta=None, *, k, alg, eps,
                  attr_dim=0, constraint=None):
     """Per-device slab: vmap the machine solver over local machines."""
-    rows, smask, vals, calls = jax.vmap(
-        functools.partial(_solve_block, k=k, alg=alg, eps=eps,
-                          attr_dim=attr_dim, constraint=constraint),
-        in_axes=(None, 0, 0, 0))(obj, blocks, bmask, keys)
+    solve = functools.partial(_solve_block, k=k, alg=alg, eps=eps,
+                              attr_dim=attr_dim, constraint=constraint)
+    if meta is None:
+        rows, smask, vals, calls = jax.vmap(
+            solve, in_axes=(None, 0, 0, 0))(obj, blocks, bmask, keys)
+    else:
+        rows, smask, vals, calls = jax.vmap(
+            solve, in_axes=(None, 0, 0, 0, 0))(obj, blocks, bmask, keys,
+                                               meta)
     alive = ~dead
     smask = smask & alive[:, None]
     vals = jnp.where(alive, vals, -jnp.inf)
@@ -91,7 +116,7 @@ def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
               *, k: int, alg: str = "greedy", eps: float = 0.5,
               dead_mask: jax.Array | None = None,
               mesh: Mesh | None = None, attr_dim: int = 0,
-              constraint=None) -> RoundResult:
+              constraint=None, meta: jax.Array | None = None) -> RoundResult:
     """One round of Algorithm 1 over all M machine blocks.
 
     blocks: (M, cap, d + attr_dim) items (trailing ``attr_dim`` columns are
@@ -103,25 +128,33 @@ def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
     With a mesh, machines are sharded over devices via shard_map; without,
     the same code runs as a plain vmap (single-process testing path —
     semantics identical by construction).
+
+    Quantized round-0 waves pass narrow ``blocks`` plus a separate fp32
+    ``meta`` of shape (M, cap, attr_dim + qcols) — see ``_solve_block``.
     """
     M = blocks.shape[0]
     dead = jnp.zeros((M,), bool) if dead_mask is None else dead_mask
     local = functools.partial(_round_local, k=k, alg=alg, eps=eps,
                               attr_dim=attr_dim, constraint=constraint)
+    operands = ((obj, blocks, bmask, keys, dead) if meta is None
+                else (obj, blocks, bmask, keys, dead, meta))
 
     if mesh is None:
-        out = jax.jit(local)(obj, blocks, bmask, keys, dead)
+        out = jax.jit(local)(*operands)
         return RoundResult(*out)
 
     ndev = mesh.devices.size
     assert M % ndev == 0, f"M={M} must divide over {ndev} devices"
     spec = P("machines")
+    in_specs = (P(), spec, spec, spec, spec)
+    if meta is not None:
+        in_specs = in_specs + (spec,)
     fn = _shard_map(
         local, mesh=mesh,
-        in_specs=(P(), spec, spec, spec, spec),
+        in_specs=in_specs,
         out_specs=(spec, spec, spec, spec),
         check_vma=False)  # replicated obj feeds a machine-varying scan carry
-    return RoundResult(*jax.jit(fn)(obj, blocks, bmask, keys, dead))
+    return RoundResult(*jax.jit(fn)(*operands))
 
 
 def dead_wave_result(machines: int, k: int, width: int) -> RoundResult:
@@ -143,14 +176,21 @@ def dead_wave_result(machines: int, k: int, width: int) -> RoundResult:
         oracle_calls=jnp.zeros((machines,), jnp.int32))
 
 
-def shard_round_inputs(mesh: Mesh, blocks, bmask, keys):
-    """Place round inputs with the machine axis sharded over the mesh."""
+def shard_round_inputs(mesh: Mesh, blocks, bmask, keys, meta=None):
+    """Place round inputs with the machine axis sharded over the mesh.
+
+    Quantized waves pass the out-of-band ``meta`` operand too; the return
+    grows to a 4-tuple so it shards under the same machine layout.
+    """
     spec = NamedSharding(mesh, P("machines"))
-    return (jax.device_put(blocks, spec), jax.device_put(bmask, spec),
-            jax.device_put(keys, spec))
+    out = (jax.device_put(blocks, spec), jax.device_put(bmask, spec),
+           jax.device_put(keys, spec))
+    if meta is None:
+        return out
+    return out + (jax.device_put(meta, spec),)
 
 
-def stage_wave_inputs(mesh: Mesh | None, blocks_np, bmask_np):
+def stage_wave_inputs(mesh: Mesh | None, blocks_np, bmask_np, meta_np=None):
     """Host→device staging of one ingestion wave's gathered buffers.
 
     The async engine produces waves as host numpy (gather runs on a
@@ -161,8 +201,18 @@ def stage_wave_inputs(mesh: Mesh | None, blocks_np, bmask_np):
     and re-sharded at dispatch.  Once it returns, the host buffers are
     dead and the engine may release their in-flight credit (the
     backpressure accounting in :mod:`repro.engine.scheduler`).
+
+    Quantized waves add the out-of-band ``meta_np`` matrix (attr + dequant
+    columns); the return grows to a 3-tuple so narrow feature blocks and
+    their fp32 metadata stage under the same sharding.
     """
     if mesh is None:
-        return jnp.asarray(blocks_np), jnp.asarray(bmask_np)
+        if meta_np is None:
+            return jnp.asarray(blocks_np), jnp.asarray(bmask_np)
+        return (jnp.asarray(blocks_np), jnp.asarray(bmask_np),
+                jnp.asarray(meta_np))
     spec = NamedSharding(mesh, P("machines"))
-    return jax.device_put(blocks_np, spec), jax.device_put(bmask_np, spec)
+    if meta_np is None:
+        return jax.device_put(blocks_np, spec), jax.device_put(bmask_np, spec)
+    return (jax.device_put(blocks_np, spec), jax.device_put(bmask_np, spec),
+            jax.device_put(meta_np, spec))

@@ -92,7 +92,9 @@ class ExemplarClustering:
                      weights: jax.Array | None = None,
                      budget: float | None = None,
                      group_ids: jax.Array | None = None,
-                     caps: tuple[int, ...] | None = None):
+                     caps: tuple[int, ...] | None = None,
+                     x_scale: jax.Array | None = None,
+                     x_zp: jax.Array | None = None):
         """Whole k-step greedy in one fused kernel launch.
 
         Bit-identical to the step-wise greedy scan (lowest-index ties,
@@ -106,13 +108,19 @@ class ExemplarClustering:
         per-group counts, and the oracle-call count is reconstructed from
         the selection sequence by replaying the same sequential state
         accumulation (O(k·n) jnp, negligible next to the selection itself).
+
+        ``x_scale``/``x_zp`` (per candidate row) route int8-quantized
+        blocks through the kernel's in-kernel dequant: ``T`` ships narrow,
+        gain math runs on the fp32 dequantized values (bf16 blocks need no
+        params — the kernel's fp32 upcast is exact).
         """
         import jax.numpy as _jnp
         cd = _jnp.bfloat16 if self.score_dtype == "bfloat16" else None
         state = self.init_state(T, mask)
         sel_idx, cur_min = kops.greedy_select(
             T, self.eval_set, state["cur_min"], mask, k, compute_dtype=cd,
-            weights=weights, budget=budget, group_ids=group_ids, caps=caps)
+            weights=weights, budget=budget, group_ids=group_ids, caps=caps,
+            x_scale=x_scale, x_zp=x_zp)
         value = state["base"] - jnp.mean(cur_min)
         if weights is None and caps is None:
             # step t evaluates one gain per still-available candidate, and a

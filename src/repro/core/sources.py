@@ -37,6 +37,36 @@ from typing import Callable, Iterator, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+# canonical storage dtypes for bytes-lean ingestion (CLI --dtype values)
+STORAGE_DTYPES = ("fp32", "bf16", "int8")
+_BF16 = np.dtype(jnp.bfloat16)
+_STORAGE_NP = {"fp32": np.dtype(np.float32), "bf16": _BF16,
+               "int8": np.dtype(np.int8)}
+_ITEMSIZE_ALIAS = {"fp32": 4, "bf16": 2}
+
+
+def dtype_itemsize(dtype) -> int:
+    """Bytes per element of a storage dtype.
+
+    Accepts the CLI-facing names (``fp32``/``bf16``/``int8``) as well as
+    anything ``np.dtype`` understands (including the ml_dtypes bfloat16
+    that ``np.dtype("bfloat16")`` alone would reject).  Every byte count in
+    the capacity ladder routes through here so fp32 numbers stay exactly
+    ``· 4`` while narrow dtypes are counted honestly.
+    """
+    if isinstance(dtype, str):
+        if dtype in _ITEMSIZE_ALIAS:
+            return _ITEMSIZE_ALIAS[dtype]
+        if dtype in ("bfloat16",):
+            return 2
+    return int(np.dtype(dtype).itemsize)
+
+
+def storage_np_dtype(name: str) -> np.dtype:
+    """numpy dtype for a canonical storage-dtype name."""
+    assert name in _STORAGE_NP, (name, STORAGE_DTYPES)
+    return _STORAGE_NP[name]
+
 
 class HostLostError(RuntimeError):
     """An ingestion host (its :class:`SlicedSource` view) is permanently gone.
@@ -59,6 +89,11 @@ class GroundSetSource:
     n: int
     d: int
     a: int = 0              # per-item attribute width (0 = no attrs)
+    # quantization-metadata width (0 = rows need no dequant params; int8
+    # sources carry 2: per-row scale and zero-point, served *out-of-band*
+    # by gather_qmeta so the attr channel — and everything built on it —
+    # is untouched)
+    qcols: int = 0
     dtype: np.dtype
     # May gather() run concurrently from multiple threads?  The built-in
     # sources are stateless per call (fresh chunk iterators, lazy loaders),
@@ -148,6 +183,26 @@ class GroundSetSource:
                 rows[hit] = chunk_rows[idx[hit] - start]
                 attrs[hit] = chunk_attrs[idx[hit] - start]
         return rows, attrs
+
+    def gather_qmeta(self, idx: np.ndarray) -> np.ndarray:
+        """Dequantization params for ``idx`` — ``(len(idx), qcols)`` fp32.
+
+        Zero-width for unquantized sources; :class:`QuantizedSource`
+        overrides with a pure in-memory per-block parameter lookup (no
+        I/O, no fault surface — params are cached at construction).
+        """
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        return np.zeros((idx.size, self.qcols), np.float32)
+
+    def fingerprint(self) -> str:
+        """Stable identity string for autotune-cache keying.
+
+        Defaults to class + shape + dtype; wrapper sources append their
+        transform so e.g. the bf16 and fp32 views of one ground set never
+        share a converged-rung cache entry.
+        """
+        return (f"{type(self).__name__}:{self.n}x{self.d}"
+                f":{np.dtype(self.dtype).name}")
 
     def materialize(self) -> np.ndarray:
         """Full (n, d) host array — tests/small references only."""
@@ -291,6 +346,7 @@ class SlicedSource(GroundSetSource):
         self.lo, self.hi = int(lo), int(hi)
         self.n = parent.n                 # global addressing preserved
         self.d, self.a = parent.d, parent.a
+        self.qcols = parent.qcols
         self.dtype = parent.dtype
         self.supports_concurrent_gather = parent.supports_concurrent_gather
         self._lost: int | None = None     # host id once marked dead
@@ -335,6 +391,158 @@ class SlicedSource(GroundSetSource):
 
     def gather_with_attrs(self, idx: np.ndarray):
         return self._parent.gather_with_attrs(self._check_local(idx))
+
+    def gather_qmeta(self, idx: np.ndarray) -> np.ndarray:
+        return self._parent.gather_qmeta(np.asarray(idx, np.int64).reshape(-1))
+
+
+class QuantizedSource(GroundSetSource):
+    """Bytes-lean view of a parent source: rows stored/shipped narrow.
+
+    ``store_dtype`` selects the wire format of every gather and chunk:
+
+      * ``fp32`` — identity passthrough (the wrapper exists so one code
+        path covers all three; byte-for-byte what the parent serves).
+      * ``bf16`` — exact truncating cast; 2 bytes/element, no metadata.
+      * ``int8`` — per-block affine quantization on a *fixed global-index
+        block grid* of ``q_block_rows`` rows: block b holds
+        ``q = clip(round((x - zp_b) / scale_b), -127, 127)`` with
+        ``scale_b = (hi_b - lo_b)/254``, ``zp_b = (lo_b + hi_b)/2``
+        computed in one streaming pass over the parent at construction.
+        Dequantization params are served per-row via :meth:`gather_qmeta`
+        (``qcols = 2``: scale, zp) — out-of-band from the attr channel, so
+        constraints/planner/checkpoint plumbing never sees them.
+
+    Because block params are a pure function of *global* index, any access
+    order (permuted waves, host shards, re-streamed chunks) quantizes each
+    row identically — streamed and resident views of the same item are
+    bit-equal, which is what the streaming==resident tests pin per dtype.
+    Attributes pass through untouched (constraint math stays fp32-exact);
+    the final coreset is re-gathered from the parent at fp32 for the exact
+    re-check (Barbosa-style: perturb per-machine, validate exactly).
+    """
+
+    def __init__(self, parent: GroundSetSource, store_dtype: str = "bf16",
+                 q_block_rows: int = 4096):
+        assert store_dtype in STORAGE_DTYPES, (store_dtype, STORAGE_DTYPES)
+        assert q_block_rows >= 1, q_block_rows
+        self._parent = parent
+        self.store_dtype = store_dtype
+        self.q_block_rows = int(q_block_rows)
+        self.n, self.d, self.a = parent.n, parent.d, parent.a
+        self.dtype = storage_np_dtype(store_dtype)
+        self.qcols = 2 if store_dtype == "int8" else 0
+        self.supports_concurrent_gather = parent.supports_concurrent_gather
+        self._scale = self._zp = None
+        if store_dtype == "int8":
+            self._fit_block_params()
+
+    def _fit_block_params(self) -> None:
+        """One streaming pass over the parent: per-block [lo, hi] ranges."""
+        B = self.q_block_rows
+        nblocks = (self.n + B - 1) // B
+        lo = np.full((nblocks,), np.inf, np.float32)
+        hi = np.full((nblocks,), -np.inf, np.float32)
+        for start, rows in self._parent.iter_chunks():
+            rows = np.asarray(rows, np.float32)
+            pos = start
+            while pos < start + len(rows):
+                b = pos // B
+                end = min((b + 1) * B, start + len(rows))
+                seg = rows[pos - start:end - start]
+                lo[b] = min(lo[b], float(seg.min()))
+                hi[b] = max(hi[b], float(seg.max()))
+                pos = end
+        # degenerate (constant) blocks: zp hits every value exactly, q = 0
+        span = np.maximum(hi - lo, 0.0)
+        raw = np.where(span > 0, span / 254.0, 1.0)
+        # scales round UP to the next power of two: ``q · scale`` is then
+        # exact in fp32 (|q| ≤ 127 times 2^e never rounds), so a compiler
+        # contracting the dequant mult-add into one FMA (XLA CPU, TPU VPU)
+        # computes bit-identical values to numpy's two-rounding mult+add —
+        # the cross-backend bit-identity the equivalence tests pin.  Costs
+        # at most 2× quantization step vs the tight span/254 scale.
+        self._scale = np.exp2(np.ceil(np.log2(raw))).astype(np.float32)
+        self._zp = ((lo + hi) * 0.5).astype(np.float32)
+
+    def _params_for(self, idx: np.ndarray):
+        b = np.asarray(idx, np.int64).reshape(-1) // self.q_block_rows
+        return self._scale[b], self._zp[b]
+
+    def _narrow(self, rows: np.ndarray, idx: np.ndarray) -> np.ndarray:
+        rows = np.asarray(rows, np.float32)
+        if self.store_dtype == "fp32":
+            return rows
+        if self.store_dtype == "bf16":
+            return rows.astype(_BF16)
+        scale, zp = self._params_for(idx)
+        q = np.rint((rows - zp[:, None]) / scale[:, None])
+        return np.clip(q, -127, 127).astype(np.int8)
+
+    @staticmethod
+    def dequantize(rows: np.ndarray, qmeta: np.ndarray | None) -> np.ndarray:
+        """Host-side exact inverse of the wire format → fp32 rows.
+
+        ``qmeta`` is the matching :meth:`gather_qmeta` slice (``None`` or
+        zero-width for fp32/bf16).  Elementwise IEEE fp32 multiply-add —
+        the device dequant in the kernels computes bit-identical values.
+        """
+        if qmeta is None or qmeta.shape[-1] == 0:
+            return np.asarray(rows, np.float32)
+        q = np.asarray(rows, np.float32)
+        scale = np.asarray(qmeta[..., 0:1], np.float32)
+        zp = np.asarray(qmeta[..., 1:2], np.float32)
+        return q * scale + zp
+
+    def iter_chunks(self, chunk_rows: int = 8192):
+        for start, rows in self._parent.iter_chunks(chunk_rows):
+            idx = np.arange(start, start + len(rows), dtype=np.int64)
+            yield start, self._narrow(rows, idx)
+
+    def iter_chunks_attrs(self, chunk_rows: int = 8192):
+        for start, rows, attrs in self._parent.iter_chunks_attrs(chunk_rows):
+            idx = np.arange(start, start + len(rows), dtype=np.int64)
+            yield start, self._narrow(rows, idx), attrs
+
+    def gather(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        return self._narrow(self._parent.gather(idx), idx)
+
+    def gather_attrs(self, idx: np.ndarray) -> np.ndarray:
+        return self._parent.gather_attrs(idx)
+
+    def gather_with_attrs(self, idx: np.ndarray):
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        rows, attrs = self._parent.gather_with_attrs(idx)
+        return self._narrow(rows, idx), attrs
+
+    def gather_qmeta(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx, np.int64).reshape(-1)
+        if self.qcols == 0:
+            return np.zeros((idx.size, 0), np.float32)
+        scale, zp = self._params_for(idx)
+        return np.stack([scale, zp], axis=1).astype(np.float32)
+
+    def gather_fp32(self, idx: np.ndarray) -> np.ndarray:
+        """Parent rows at full precision — the exact re-check path."""
+        return np.asarray(self._parent.gather(idx), np.float32)
+
+    def dequantized(self) -> np.ndarray:
+        """Full (n, d) fp32 array of what the *solve* sees after dequant —
+        the resident reference for streaming==resident tests."""
+        out = np.zeros((self.n, self.d), np.float32)
+        for start, rows in self.iter_chunks():
+            idx = np.arange(start, start + len(rows), dtype=np.int64)
+            out[start:start + len(rows)] = self.dequantize(
+                rows, self.gather_qmeta(idx))
+        return out
+
+    def host_split_points(self, hosts: int) -> list[int]:
+        return self._parent.host_split_points(hosts)
+
+    def fingerprint(self) -> str:
+        return (f"{self._parent.fingerprint()}|q={self.store_dtype}"
+                f":B={self.q_block_rows}")
 
 
 def prefetch_chunks(source: GroundSetSource, chunk_rows: int = 8192, *,

@@ -49,12 +49,15 @@ from repro.core import partition as part_lib
 from repro.core.distributed import (RoundResult, dead_wave_result, run_round,
                                     shard_round_inputs, stage_wave_inputs)
 from repro.core.permute import FeistelPermutation, feistel_slot_items
-from repro.core.sources import ArraySource, GroundSetSource, as_source
-from repro.engine.autotune import (AutotunePlanner, FixedWidthPlanner,
-                                   ScheduledWidthPlanner, WavePlanner,
-                                   bucket_ladder, shape_bound, snap_down)
+from repro.core.sources import (ArraySource, GroundSetSource, as_source,
+                                dtype_itemsize)
+from repro.engine.autotune import (AutotuneCache, AutotunePlanner,
+                                   FixedWidthPlanner, ScheduledWidthPlanner,
+                                   WavePlanner, bucket_ladder, shape_bound,
+                                   snap_down)
 from repro.engine.checkpoint import (AsyncCheckpointWriter, clean_stale_tmp,
                                      latest_round_checkpoint,
+                                     load_round_checkpoint,
                                      write_round_checkpoint)
 from repro.engine.faults import FaultInjector, FaultPolicy, FaultSupervisor
 from repro.engine.planner import IngestionPlan
@@ -89,6 +92,15 @@ class TreeConfig:
     #                                    None = legacy abort-on-first-error
     checkpoint_keep: int = 3           # rotated round checkpoints retained
     #                                    (≤ 0 keeps every round)
+    checkpoint_delta_every: int = 0    # K > 0: full snapshot every K rounds,
+    #                                    row-index deltas between (A_{t+1}
+    #                                    rows are verbatim copies of A_t
+    #                                    rows, so a delta is one int per
+    #                                    row); 0 = every round full (legacy)
+    autotune_cache: str | None = None  # JSON path persisting the
+    #                                    autotuner's converged rung per
+    #                                    (source fingerprint, μ, ndev) so
+    #                                    reruns start at the knee
 
     def __post_init__(self):
         assert self.capacity > self.k, (
@@ -101,6 +113,7 @@ class TreeConfig:
             self.capacity_bytes)
         assert self.prefetch_depth is None or self.prefetch_depth >= 1, (
             self.prefetch_depth)
+        assert self.checkpoint_delta_every >= 0, self.checkpoint_delta_every
         assert not self.async_checkpoint or self.checkpoint_dir, (
             "async_checkpoint=True without checkpoint_dir would silently "
             "write nothing — pass checkpoint_dir (CLI: --ckpt-dir)")
@@ -194,11 +207,15 @@ def _ckpt_path(d: str) -> str:
 
 
 def _save_round(d: str, round_idx: int, rows, mask, best_rows, best_mask,
-                best_val, calls, keep: int = 3):
+                best_val, calls, keep: int = 3, delta_every: int = 0):
     """One round-boundary snapshot: rotated per-round file + the legacy
     ``tree_round.npz`` latest pointer, both atomic; only the newest ``keep``
-    rotated rounds survive (engine/checkpoint.py owns the file layout)."""
-    write_round_checkpoint(d, round_idx, keep=keep, rows=rows, mask=mask,
+    rotated rounds survive (engine/checkpoint.py owns the file layout).
+    ``delta_every`` > 0 writes row-index deltas against the previous round
+    with a full snapshot every ``delta_every`` rounds (resume bit-identical;
+    rotation keeps every retained delta's ancestor chain)."""
+    write_round_checkpoint(d, round_idx, keep=keep, delta_every=delta_every,
+                           rows=rows, mask=mask,
                            best_rows=best_rows, best_mask=best_mask,
                            best_val=best_val, calls=calls)
 
@@ -228,14 +245,22 @@ def _round_plan(kalg, M: int, t: int, fail_machines, mesh):
 
 
 def _dispatch_blocks(obj, blocks, bmask, keys, dead, cfg: TreeConfig,
-                     mesh, attr_dim=0, constraint=None) -> RoundResult:
+                     mesh, attr_dim=0, constraint=None,
+                     meta=None) -> RoundResult:
     """Shard and solve one contiguous slab of machine blocks (a full round
-    or one ingestion wave) with its pre-split keys and failure mask."""
+    or one ingestion wave) with its pre-split keys and failure mask.
+    ``meta`` is the quantized waves' out-of-band fp32 [attrs | qmeta]
+    operand (None on the fp32 path — dispatch byte-identical to PR 6)."""
     if mesh is not None:
-        blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask, keys)
+        if meta is None:
+            blocks, bmask, keys = shard_round_inputs(mesh, blocks, bmask,
+                                                     keys)
+        else:
+            blocks, bmask, keys, meta = shard_round_inputs(
+                mesh, blocks, bmask, keys, meta)
     return run_round(obj, blocks, bmask, keys, k=cfg.k, alg=cfg.algorithm,
                      eps=cfg.eps, dead_mask=jnp.asarray(dead), mesh=mesh,
-                     attr_dim=attr_dim, constraint=constraint)
+                     attr_dim=attr_dim, constraint=constraint, meta=meta)
 
 
 def _dispatch_round(obj, blocks, bmask, kalg, t, cfg: TreeConfig, mesh,
@@ -330,18 +355,31 @@ def _round0_partition(kpart, n: int, L: int, mu: int,
     return part_lib.Partition(idx, idx >= 0)
 
 
+def _wave_row_bytes(mu: int, width: int, itemsize: int = 4,
+                    meta_cols: int = 0) -> int:
+    """Device bytes one machine's block costs: μ rows of ``width`` feature
+    columns at the storage itemsize plus ``meta_cols`` fp32 out-of-band
+    columns (attrs + dequant params of quantized waves).  The fp32
+    unquantized path reduces to exactly the historical ``μ·(d+a)·4``."""
+    return mu * (width * itemsize + meta_cols * 4)
+
+
 def _wave_size(cfg: TreeConfig, wave_machines, ndev: int, Mp: int,
-               mu: int, width: int) -> int:
+               mu: int, width: int, itemsize: int = 4,
+               meta_cols: int = 0) -> int:
     """Resolve the wave size W (machines per wave, a device multiple).
 
     Precedence: explicit ``wave_machines`` (rounded *up* to a device
     multiple, legacy semantics; validated against ``cfg.capacity_bytes``
     up front when both are given — the byte budget is always a hard
     bound) → ``cfg.capacity_bytes`` alone (weighted-μ capacity: the
-    largest device-multiple W whose wave matrix ``W·μ·width·4`` fits the
-    budget, rounded *down*) → one mesh sweep (W = ndev).
+    largest device-multiple W whose wave matrix — ``width`` feature
+    columns at the storage ``itemsize`` plus ``meta_cols`` fp32 metadata
+    columns — fits the budget, rounded *down*) → one mesh sweep (W=ndev).
+    Narrow storage dtypes shrink the per-row bytes, so the same byte
+    budget admits proportionally wider waves (the bytes-lean win).
     """
-    row_bytes = mu * width * 4
+    row_bytes = _wave_row_bytes(mu, width, itemsize, meta_cols)
     if wave_machines is not None:
         W = min(Mp, math.ceil(wave_machines / ndev) * ndev)
         if cfg.capacity_bytes is not None and W * row_bytes > cfg.capacity_bytes:
@@ -357,13 +395,15 @@ def _wave_size(cfg: TreeConfig, wave_machines, ndev: int, Mp: int,
             raise ValueError(
                 f"capacity_bytes={cfg.capacity_bytes} cannot fit one "
                 f"device-multiple wave: {ndev} devices × μ={mu} rows × "
-                f"{width} fp32 columns = {min_wave} bytes")
+                f"({width}×{itemsize}B + {meta_cols}×4B) columns = "
+                f"{min_wave} bytes")
         return min(Mp, (cfg.capacity_bytes // row_bytes) // ndev * ndev)
     return min(Mp, ndev)
 
 
 def _wave_planner(cfg: TreeConfig, W0: int, ndev: int, Mp: int, mu: int,
-                  width: int, wave_machines, wave_schedule
+                  width: int, wave_machines, wave_schedule,
+                  itemsize: int = 4, meta_cols: int = 0
                   ) -> tuple[WavePlanner, list[int] | None]:
     """Width policy for one round-0 run: ``(planner, ladder_or_None)``.
 
@@ -386,7 +426,8 @@ def _wave_planner(cfg: TreeConfig, W0: int, ndev: int, Mp: int, mu: int,
     if not cfg.wave_autotune:
         return FixedWidthPlanner(W0), None
     if cfg.capacity_bytes is not None:
-        w_cap = _wave_size(cfg, None, ndev, Mp, mu, width)
+        w_cap = _wave_size(cfg, None, ndev, Mp, mu, width, itemsize,
+                           meta_cols)
     elif wave_machines is not None:
         w_cap = W0                 # W·μ rows is the stated device budget
     else:
@@ -431,11 +472,23 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     if constraint is not None:
         a = attrs_np.shape[1] if attrs_np is not None else source.a
     ndev = mesh.devices.size if mesh is not None else 1
+    # bytes-lean ingestion: a narrow-storage source ships its wire dtype
+    # to device (bf16/int8 feature blocks) with attrs + dequant params
+    # riding out-of-band as one fp32 meta matrix; the solve dequantizes
+    # in-kernel.  fp32 sources take the legacy path — byte-identical
+    # blocks, no meta operand anywhere.
+    feat_dtype = np.dtype(source.dtype)
+    narrow = feat_dtype != np.dtype(np.float32)
+    qcols = source.qcols if narrow else 0
+    itemsize = dtype_itemsize(feat_dtype) if narrow else 4
+    meta_cols = (a + qcols) if narrow else 0
+    blk_width = d if narrow else d + a    # feature-block columns shipped
     # the full round's plan (padded count, key split, failure injection),
     # sliced per wave — machine i sees the same key and dead bit as in the
     # one-shot dispatch.
     Mp, keys, dead = _round_plan(kalg, L, 0, fail_machines, mesh)
-    W = _wave_size(cfg, wave_machines, ndev, Mp, mu, d + a)
+    W = _wave_size(cfg, wave_machines, ndev, Mp, mu, blk_width, itemsize,
+                   meta_cols)
 
     slot_block = _round0_slot_blocks(kpart, n, L, Mp, mu, cfg.permutation)
     ecfg = EngineConfig(mode=cfg.engine, max_in_flight=cfg.max_in_flight,
@@ -448,8 +501,20 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     if cfg.prefetch_depth is not None:
         source.prefetch_depth = cfg.prefetch_depth
     plan = IngestionPlan.build(source, cfg.hosts) if cfg.hosts > 1 else None
-    planner, ladder = _wave_planner(cfg, W, ndev, Mp, mu, d + a,
-                                    wave_machines, wave_schedule)
+    planner, ladder = _wave_planner(cfg, W, ndev, Mp, mu, blk_width,
+                                    wave_machines, wave_schedule,
+                                    itemsize, meta_cols)
+    # seed the autoscaler from a persisted converged rung (same source
+    # fingerprint — n, d, storage dtype — μ and device count), and record
+    # the rung it lands on for the next run
+    cache: AutotuneCache | None = None
+    cache_key: str | None = None
+    if cfg.autotune_cache and isinstance(planner, AutotunePlanner):
+        cache = AutotuneCache(cfg.autotune_cache)
+        cache_key = f"{source.fingerprint()}|mu={mu}|ndev={ndev}"
+        seeded = cache.get(cache_key)
+        if seeded is not None and seeded >= ladder[0]:
+            planner.seed(snap_down(ladder, min(int(seeded), ladder[-1])))
     cursor = {"w0": 0}    # wave spans are decided per wave by the planner;
     #                       gather runs on one thread in wave order, so a
     #                       plain dict cursor is race-free by construction
@@ -527,10 +592,33 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
             if dropped:
                 # wave forfeited (Lemma 3.4 budget already checked): its
                 # machines fold as dead downstream — no rows move
-                return HostWave(payload=(None, valid, w0, w1, True),
+                return HostWave(payload=(None, None, valid, w0, w1, True),
                                 machines=w1 - w0, rows=(w1 - w0) * mu,
                                 bytes_moved=0, per_host_rows=None)
             rows, row_attrs, per_host = gathered
+        if narrow:
+            # narrow wire format: the feature block keeps the storage
+            # dtype end-to-end; attrs + per-row dequant params ship as one
+            # fp32 meta matrix.  Padded slots are zeroed in both (masked
+            # rows dequantize to 0·0+0 = 0, matching the fp32 path's
+            # zeroed rows exactly).
+            feat = np.asarray(rows).reshape(w1 - w0, mu, d).copy()
+            feat[~valid] = feat_dtype.type(0)
+            cols = []
+            if a:
+                cols.append(np.asarray(row_attrs, np.float32))
+            if qcols:
+                cols.append(source.gather_qmeta(idx_flat))
+            if cols:
+                meta = np.concatenate(cols, axis=1).reshape(
+                    w1 - w0, mu, meta_cols)
+                meta = np.where(valid[..., None], meta, np.float32(0.0))
+            else:
+                meta = np.zeros((w1 - w0, mu, 0), np.float32)
+            return HostWave(payload=(feat, meta, valid, w0, w1, False),
+                            machines=w1 - w0, rows=(w1 - w0) * mu,
+                            bytes_moved=feat.nbytes + meta.nbytes,
+                            per_host_rows=per_host)
         rows = np.asarray(rows, np.float32)
         if a:
             rows = np.concatenate(
@@ -539,7 +627,7 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         # bit-identical to the device-side jnp.where masking it replaces
         blocks = np.where(valid[..., None],
                           rows.reshape(w1 - w0, mu, d + a), np.float32(0.0))
-        return HostWave(payload=(blocks, valid, w0, w1, False),
+        return HostWave(payload=(blocks, None, valid, w0, w1, False),
                         machines=w1 - w0, rows=(w1 - w0) * mu,
                         bytes_moved=blocks.nbytes, per_host_rows=per_host)
 
@@ -552,18 +640,24 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         the caller thread in wave order, so the sequential strict-
         improvement fold over waves == the one-shot argmax over all Mp
         machines (lowest machine index on ties)."""
-        blocks_np, valid, w0, w1, wave_dropped = payload
+        blocks_np, meta_np, valid, w0, w1, wave_dropped = payload
         if wave_dropped:
             # the gather never succeeded, so these machines never ran:
             # fold the dead_mask placeholder (−inf values can never win,
             # masked solutions contribute nothing to A_1, zero oracle
             # calls — honest accounting) and skip the dispatch entirely
             res = dead_wave_result(w1 - w0, cfg.k, d + a)
-        else:
+        elif meta_np is None:
             blocks, bmask = stage_wave_inputs(mesh, blocks_np, valid)
             res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1],
                                    dead[w0:w1], cfg, mesh, attr_dim=a,
                                    constraint=constraint)
+        else:
+            blocks, bmask, meta = stage_wave_inputs(mesh, blocks_np, valid,
+                                                    meta_np)
+            res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1],
+                                   dead[w0:w1], cfg, mesh, attr_dim=a,
+                                   constraint=constraint, meta=meta)
         carry[0], carry[1], carry[2], carry[3], v_wave = _fold_round(
             res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
             *carry[:4])
@@ -587,12 +681,16 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         assert estats.distinct_shapes <= shape_bound(ndev, ladder[-1]), (
             estats.distinct_shapes, ladder)
 
+    if cache is not None:
+        cache.put(cache_key, planner.converged_width())
+
     rows_in = jnp.concatenate(sol_rows).reshape(-1, d + a)  # union A_1
     mask_in = jnp.concatenate(sol_mask).reshape(-1)
     peak_rows = max(t.rows for t in estats.traces)
     stats = IngestStats(
         wave_machines=W, waves=estats.waves, peak_wave_rows=peak_rows,
-        peak_wave_bytes=peak_rows * (d + a) * 4, total_machines=Mp,
+        peak_wave_bytes=peak_rows * (blk_width * itemsize + meta_cols * 4),
+        total_machines=Mp,
         attr_dim=a,
         wave_seconds=[t.gather_s + t.solve_s for t in estats.traces],
         wave_bytes=[t.bytes_moved for t in estats.traces],
@@ -724,7 +822,7 @@ def tree_maximize(
     if cfg.resume and cfg.checkpoint_dir:
         resume_from = _resume_path(cfg.checkpoint_dir)
         if resume_from is not None:
-            ck = np.load(resume_from)
+            ck = load_round_checkpoint(resume_from)
             start_round = int(ck["round"])
             rows_in, mask_in = jnp.asarray(ck["rows"]), jnp.asarray(ck["mask"])
             best_rows, best_mask = jnp.asarray(ck["best_rows"]), jnp.asarray(ck["best_mask"])
@@ -796,7 +894,8 @@ def tree_maximize(
                 snap = (cfg.checkpoint_dir, t, _host_array(rows_in),
                         _host_array(mask_in), _host_array(best_rows),
                         _host_array(best_mask), _host_scalar(best_val),
-                        int(_host_scalar(total_calls)), cfg.checkpoint_keep)
+                        int(_host_scalar(total_calls)), cfg.checkpoint_keep,
+                        cfg.checkpoint_delta_every)
                 if writer is not None:
                     # ... then overlap the serialize+write with round t+1
                     # (submit's internal barrier drained write t-1 already)
@@ -885,7 +984,7 @@ def _tree_maximize_host(
     if cfg.resume and cfg.checkpoint_dir:
         resume_from = _resume_path(cfg.checkpoint_dir)
         if resume_from is not None:
-            ck = np.load(resume_from)
+            ck = load_round_checkpoint(resume_from)
             start_round = int(ck["round"])
             rows_in, mask_in = ck["rows"], ck["mask"]
             best_rows, best_mask = ck["best_rows"], ck["best_mask"]
@@ -941,7 +1040,7 @@ def _tree_maximize_host(
         if cfg.checkpoint_dir:
             _save_round(cfg.checkpoint_dir, t, rows_in, mask_in, best_rows,
                         best_mask, best_val, total_calls,
-                        cfg.checkpoint_keep)
+                        cfg.checkpoint_keep, cfg.checkpoint_delta_every)
 
         if L == 1:        # that was the final single-machine round
             break

@@ -24,8 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ExemplarClustering, GroundSetSource, TreeConfig,
-                        as_source, tree_maximize)
+from repro.core import (ExemplarClustering, GroundSetSource, QuantizedSource,
+                        TreeConfig, as_source, tree_maximize)
+from repro.core.baselines import fp32_recheck_value
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,6 +72,48 @@ def match_rows(pool, rows, chunk_rows: int = 8192) -> np.ndarray:
             best_d = np.where(better, cd, best_d)
             best_i = np.where(better, ci + start + s, best_i)
     return best_i
+
+
+@dataclasses.dataclass(frozen=True)
+class RecheckResult:
+    indices: np.ndarray      # pool indices of the selected rows
+    rows_fp32: np.ndarray    # the same rows re-gathered at full precision
+    value: float             # exact fp32 objective of the re-gathered rows
+    solve_value: float       # the (possibly quantized-arithmetic) solve value
+
+
+def fp32_recheck(obj, source, sel_rows, sel_mask,
+                 solve_value: float | None = None) -> RecheckResult:
+    """Exact fp32 re-score of a (possibly quantized-solve) coreset.
+
+    The tree solve on a :class:`QuantizedSource` selects rows by their
+    *dequantized* values; this maps them back to pool indices (nearest-
+    exact match in dequantized space — rows are copied verbatim through
+    rounds, so the match is exact), re-gathers those items from the
+    unquantized parent at fp32, and re-scores with the exact objective.
+    The returned ``value`` is the number a quantized run reports: per-
+    machine solves may run on narrow arithmetic, the final claim never
+    does (the Barbosa-et-al. discipline the paper's robustness argument
+    leans on).  On an fp32 source this is a pure consistency check —
+    ``value`` equals the solve value up to evaluation determinism.
+    """
+    src = as_source(source)
+    sel_mask = np.asarray(sel_mask, bool)
+    sel = np.asarray(sel_rows, np.float32)[sel_mask]
+    if len(sel) == 0:
+        return RecheckResult(np.zeros((0,), np.int64),
+                             np.zeros((0, src.d), np.float32),
+                             float("-inf"),
+                             float("-inf") if solve_value is None
+                             else float(solve_value))
+    quant = isinstance(src, QuantizedSource)
+    pool = src.dequantized() if quant else src
+    idx = match_rows(pool, sel)
+    rows32 = (src.gather_fp32(idx) if quant
+              else np.asarray(src.gather(idx), np.float32))
+    value = fp32_recheck_value(obj, rows32, np.ones((len(idx),), bool))
+    return RecheckResult(idx, rows32, value,
+                         value if solve_value is None else float(solve_value))
 
 
 def select_coreset(features, sel_cfg: SelectionConfig, mesh=None,

@@ -20,13 +20,14 @@ Six layers (see each module's docstring):
     checkpoint-overlap record, and the fault/straggler records, surfaced
     on ``TreeResult``.
 """
-from repro.engine.autotune import (AutotunePlanner, FixedWidthPlanner,
-                                   ScheduledWidthPlanner, WavePlanner,
-                                   bucket_ladder, shape_bound, snap_down,
-                                   suggest_prefetch_depth)
+from repro.engine.autotune import (AutotuneCache, AutotunePlanner,
+                                   FixedWidthPlanner, ScheduledWidthPlanner,
+                                   WavePlanner, bucket_ladder, shape_bound,
+                                   snap_down, suggest_prefetch_depth)
 from repro.engine.checkpoint import (AsyncCheckpointWriter, clean_stale_tmp,
                                      latest_round_checkpoint,
                                      list_round_checkpoints,
+                                     load_round_checkpoint,
                                      write_round_checkpoint)
 from repro.engine.faults import (DroppedFractionExceeded, FaultInjector,
                                  FaultPolicy, FaultProfile, FaultSupervisor,
@@ -39,14 +40,16 @@ from repro.engine.stats import (CheckpointStats, EngineStats, FaultEvent,
                                 StragglerMonitor, WaveTrace, overlap_ratio)
 
 __all__ = [
-    "ENGINES", "AsyncCheckpointWriter", "AutotunePlanner", "CheckpointStats",
+    "ENGINES", "AsyncCheckpointWriter", "AutotuneCache", "AutotunePlanner",
+    "CheckpointStats",
     "DroppedFractionExceeded", "EngineConfig", "EngineStats", "FaultEvent",
     "FaultInjector", "FaultPolicy", "FaultProfile", "FaultStats",
     "FaultSupervisor", "FixedWidthPlanner", "HostShard", "HostWave",
     "IngestionPlan", "PermanentGatherError", "RoundCheckpoint",
     "ScheduledWidthPlanner", "StragglerMonitor", "TransientIOError",
     "WavePlanner", "WaveTrace", "bucket_ladder", "clean_stale_tmp",
-    "latest_round_checkpoint", "list_round_checkpoints", "overlap_ratio",
+    "latest_round_checkpoint", "list_round_checkpoints",
+    "load_round_checkpoint", "overlap_ratio",
     "run_waves", "shape_bound", "snap_down", "suggest_prefetch_depth",
     "write_round_checkpoint",
 ]

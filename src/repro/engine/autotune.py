@@ -46,12 +46,53 @@ tests/test_autotune.py).
 """
 from __future__ import annotations
 
+import json
 import math
+import os
 import threading
 
 from repro.engine.stats import WaveTrace
 
 _EPS = 1e-9
+
+
+class AutotuneCache:
+    """Persisted converged-rung store — JSON next to the checkpoint dir.
+
+    Maps ``"{source_fingerprint}|mu={μ}|ndev={ndev}"`` → the rung the
+    autoscaler converged to, so a rerun of the same (source, shape, dtype,
+    capacity, mesh) combination seeds :class:`AutotunePlanner` at the knee
+    instead of re-walking the ladder from the bottom.  The file is re-read
+    on every lookup and written atomically (tmp → rename), so concurrent
+    runs at worst lose an update, never corrupt the file; an unreadable
+    file is treated as empty (the cache is an accelerator, not a
+    correctness surface — a cold start is always safe).
+    """
+
+    def __init__(self, path: str):
+        self.path = str(path)
+
+    def _load(self) -> dict:
+        try:
+            with open(self.path) as f:
+                data = json.load(f)
+            return data if isinstance(data, dict) else {}
+        except (OSError, ValueError):
+            return {}
+
+    def get(self, key: str) -> int | None:
+        v = self._load().get(key)
+        return int(v) if isinstance(v, (int, float)) else None
+
+    def put(self, key: str, width: int) -> None:
+        data = self._load()
+        data[key] = int(width)
+        parent = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(parent, exist_ok=True)
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(data, f, indent=1, sort_keys=True)
+        os.replace(tmp, self.path)
 
 
 def bucket_ladder(ndev: int, w_max: int) -> list[int]:
@@ -259,6 +300,24 @@ class AutotunePlanner(WavePlanner):
     def gather_rate(self) -> float | None:
         with self._lock:
             return self.ewma_gather_per_machine
+
+    # -- persistence hooks (AutotuneCache) --------------------------------
+    def seed(self, width: int) -> None:
+        """Start at a cached rung (call before the first wave): the warmup
+        hold then happens at the knee instead of the default start, so a
+        rerun's first waves already dispatch near-converged widths.  Pure
+        start-state change — the controller retunes freely afterwards."""
+        assert width in self._ladder, (width, self._ladder)
+        with self._lock:
+            assert self._n_traces == 0, "seed() after waves ran"
+            self._j = self._ladder.index(width)
+            self._prev_j = None
+
+    def converged_width(self) -> int:
+        """The rung the controller currently sits on — what a finished run
+        persists as this configuration's knee."""
+        with self._lock:
+            return self._ladder[self._j]
 
 
 def suggest_prefetch_depth(gather_s: float, solve_s: float, *,

@@ -71,24 +71,129 @@ def round_checkpoint_path(d: str, round_idx: int) -> str:
     return os.path.join(d, f"tree_round_r{round_idx:04d}.npz")
 
 
+def _encode_delta(prev_rows: np.ndarray, cur_rows: np.ndarray
+                  ) -> dict[str, np.ndarray]:
+    """Row-index delta of ``cur_rows`` against ``prev_rows``.
+
+    Algorithm 1 makes ``A_{t+1}`` a union of *selected* ``A_t`` rows, so
+    almost every current row is a verbatim byte-copy of some previous row
+    (masked slots are zeros).  Encoding: per current row one int —
+    a previous-round row index, ``-1`` for an all-zero row, ``-2`` for the
+    rare unmatched row stored verbatim in the ``extra`` arrays.  Exact by
+    construction (byte-level matching, lowest previous index on ties), so
+    reconstruction is bit-identical to a full snapshot.
+    """
+    prev = np.ascontiguousarray(prev_rows)
+    cur = np.ascontiguousarray(cur_rows)
+    lut: dict[bytes, int] = {}
+    for i in range(len(prev)):
+        lut.setdefault(prev[i].tobytes(), i)
+    zero = np.zeros((cur.shape[1],), cur.dtype).tobytes()
+    idx = np.full((len(cur),), -2, np.int64)
+    extra_pos: list[int] = []
+    for i in range(len(cur)):
+        b = cur[i].tobytes()
+        j = lut.get(b)
+        if j is not None:
+            idx[i] = j
+        elif b == zero:
+            idx[i] = -1
+        else:
+            extra_pos.append(i)
+    ep = np.asarray(extra_pos, np.int64)
+    return {"delta_idx": idx,
+            "delta_extra_pos": ep,
+            "delta_extra_rows": cur[ep] if len(ep) else
+            np.zeros((0, cur.shape[1]), cur.dtype),
+            "delta_nrows": np.int64(cur.shape[0]),
+            "delta_width": np.int64(cur.shape[1])}
+
+
+def load_round_checkpoint(path: str) -> dict[str, np.ndarray]:
+    """Load one round checkpoint, reconstructing delta files exactly.
+
+    Full snapshots return their arrays as-is; a delta file recursively
+    loads its base round from the same directory (rotation retains every
+    ancestor down to the nearest full snapshot) and rebuilds ``rows``
+    bit-identically.  Drop-in for the ``np.load`` the resume paths used —
+    same keys, host numpy values.
+    """
+    with np.load(path) as z:
+        out = {k: z[k] for k in z.files}
+    if "delta_base" not in out:
+        return out
+    base = int(out.pop("delta_base"))
+    prev = load_round_checkpoint(
+        round_checkpoint_path(os.path.dirname(path) or ".", base))
+    prev_rows = np.asarray(prev["rows"])
+    idx = np.asarray(out.pop("delta_idx"), np.int64)
+    nrows = int(out.pop("delta_nrows"))
+    width = int(out.pop("delta_width"))
+    rows = np.zeros((nrows, width), prev_rows.dtype)
+    hit = idx >= 0
+    if hit.any():
+        rows[hit] = prev_rows[idx[hit]]
+    ep = np.asarray(out.pop("delta_extra_pos"), np.int64)
+    if len(ep):
+        rows[ep] = out["delta_extra_rows"]
+    out.pop("delta_extra_rows", None)
+    out["rows"] = rows
+    return out
+
+
+def _chain_rounds(d: str, rounds: list[int]) -> set[int]:
+    """``rounds`` plus every delta ancestor down to a full snapshot."""
+    need: set[int] = set()
+    stack = list(rounds)
+    while stack:
+        r = stack.pop()
+        if r in need:
+            continue
+        need.add(r)
+        p = round_checkpoint_path(d, r)
+        if os.path.exists(p):
+            with np.load(p) as z:
+                if "delta_base" in z.files:
+                    stack.append(int(z["delta_base"]))
+    return need
+
+
 def write_round_checkpoint(d: str, round_idx: int, keep: int = 3,
-                           **arrays: Any) -> str:
+                           delta_every: int = 0, **arrays: Any) -> str:
     """Atomically write one round's snapshot; rotate to the newest ``keep``.
 
     The snapshot lands in the rotated per-round file AND the legacy latest
     pointer (both via atomic rename — a crash at any instant leaves every
     ``.npz`` in the directory complete).  ``keep <= 0`` disables rotation
     (every round kept).
+
+    ``delta_every`` > 0 stores ``rows`` as a row-index delta against the
+    previous round's file when one exists, with a full snapshot every
+    ``delta_every`` rounds (and whenever the base is missing — a delta is
+    an optimization, never a dependency).  Rotation keeps each retained
+    round's whole ancestor chain so :func:`load_round_checkpoint` always
+    reconstructs, bit-identical to an all-full-snapshot directory.
     """
     os.makedirs(d, exist_ok=True)
     path = round_checkpoint_path(d, round_idx)
+    payload = dict(arrays)
+    if (delta_every > 0 and round_idx % delta_every != 0
+            and "rows" in payload):
+        prev_path = round_checkpoint_path(d, round_idx - 1)
+        if os.path.exists(prev_path):
+            prev = load_round_checkpoint(prev_path)
+            rows = np.asarray(payload.pop("rows"))
+            payload.update(_encode_delta(np.asarray(prev["rows"]), rows),
+                           delta_base=np.int64(round_idx - 1))
     tmp = path + ".tmp.npz"               # np.savez appends .npz otherwise
-    np.savez(tmp, round=round_idx, **arrays)
+    np.savez(tmp, round=round_idx, **payload)
     os.replace(tmp, path)
     _refresh_latest(d, path)
     if keep > 0:
-        for old_round, old_path in list_round_checkpoints(d)[:-keep]:
-            if old_round != round_idx:
+        existing = list_round_checkpoints(d)
+        need = _chain_rounds(d, [r for r, _ in existing[-keep:]])
+        for old_round, old_path in existing[:-keep]:
+            if old_round != round_idx and old_round not in need:
                 os.unlink(old_path)
     return path
 

@@ -29,10 +29,18 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, e_ref, cm_ref, out_ref):
+def _kernel(x_ref, e_ref, cm_ref, *rest, quantized: bool = False):
+    it = iter(rest)
+    xs_ref = next(it) if quantized else None
+    xz_ref = next(it) if quantized else None
+    out_ref = next(it)
     j = pl.program_id(1)
 
-    x = x_ref[...].astype(jnp.float32)          # (bn, d)
+    x = x_ref[...].astype(jnp.float32)          # (bn, d) — narrow rows ok
+    if quantized:
+        # in-kernel dequant (per-row affine): VMEM held the narrow tile,
+        # the fp32 mult-add matches ref.dequantize_rows bit-for-bit
+        x = x * xs_ref[...] + xz_ref[...]
     e = e_ref[...].astype(jnp.float32)          # (bm, d)
     cm = cm_ref[...].astype(jnp.float32)        # (1, bm)
 
@@ -59,6 +67,8 @@ def exemplar_gains_pallas(
     X: jax.Array,        # (n, d) candidates — n % bn == 0 (wrapper pads)
     E: jax.Array,        # (m, d) eval set  — m % bm == 0, zero-padded
     cur_min: jax.Array,  # (m,)             — zero-padded
+    x_scale: jax.Array | None = None,  # (n,) per-row dequant scale
+    x_zp: jax.Array | None = None,     # (n,) per-row dequant zero-point
     *,
     bn: int = 256,
     bm: int = 256,
@@ -67,19 +77,29 @@ def exemplar_gains_pallas(
     n, d = X.shape
     m = E.shape[0]
     assert n % bn == 0 and m % bm == 0, (n, bn, m, bm)
+    assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
+    quantized = x_scale is not None
     grid = (n // bn, m // bm)
 
+    in_specs = [
+        pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+        pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
+        pl.BlockSpec((1, bm), lambda i, j: (0, j)),
+    ]
+    operands = [X, E, cur_min[None, :]]
+    if quantized:
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i, j: (i, 0)))
+        in_specs.append(pl.BlockSpec((bn, 1), lambda i, j: (i, 0)))
+        operands.append(x_scale.astype(jnp.float32)[:, None])
+        operands.append(x_zp.astype(jnp.float32)[:, None])
+
     out = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, quantized=quantized),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
-            pl.BlockSpec((bm, d), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, bm), lambda i, j: (0, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
         interpret=interpret,
-    )(X, E, cur_min[None, :])
+    )(*operands)
     # NOTE: returns the raw sum; ops.py divides by the *unpadded* eval-set size.
     return out[:, 0]

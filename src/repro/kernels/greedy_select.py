@@ -87,12 +87,16 @@ def _knapsack_tol() -> float:
 
 def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
             compute_dtype, budget: float | None,
-            caps: tuple[int, ...] | None, tol: float = 0.0):
+            caps: tuple[int, ...] | None, quantized: bool = False,
+            tol: float = 0.0):
     # operand/scratch unpacking mirrors the pallas_call assembly below:
-    # inputs [w?, gid?] → outputs (sel, cmout) → scratch [.., used?, cnt?]
+    # inputs [w?, gid?, xs?, xz?] → outputs (sel, cmout) → scratch
+    # [.., used?, cnt?]
     it = iter(rest)
     w_ref = next(it) if budget is not None else None
     gid_ref = next(it) if caps is not None else None
+    xs_ref = next(it) if quantized else None
+    xz_ref = next(it) if quantized else None
     sel_ref, cmout_ref, cm_s, av_s, bv_s, bi_s = (
         next(it), next(it), next(it), next(it), next(it), next(it))
     used_s = next(it) if budget is not None else None
@@ -113,13 +117,18 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
                 cnt_s[g] = 0
 
     # ---- gains for candidate block i against the resident eval set -------
-    x = x_ref[pl.ds(i * bn, bn), :]                      # (bn, d)
+    x = x_ref[pl.ds(i * bn, bn), :]                      # (bn, d) narrow ok
     e = e_ref[...]                                       # (mp, d)
-    if compute_dtype is not None:
-        xc, ec = x.astype(compute_dtype), e.astype(compute_dtype)
-    else:
-        xc, ec = x.astype(jnp.float32), e.astype(jnp.float32)
     xf = x.astype(jnp.float32)
+    if quantized:
+        # in-kernel dequant: VMEM held the narrow rows, the fp32 affine
+        # below matches ref.dequantize_rows bit-for-bit (IEEE mult-add)
+        xf = (xf * xs_ref[pl.ds(i * bn, bn), :]
+              + xz_ref[pl.ds(i * bn, bn), :])
+    if compute_dtype is not None:
+        xc, ec = xf.astype(compute_dtype), e.astype(compute_dtype)
+    else:
+        xc, ec = xf, e.astype(jnp.float32)
     ef = e.astype(jnp.float32)
     x2 = jnp.sum(xf * xf, axis=-1, keepdims=True)        # (bn, 1)
     e2 = jnp.sum(ef * ef, axis=-1, keepdims=True).T      # (1, mp)
@@ -169,6 +178,8 @@ def _kernel(x_ref, e_ref, cm0_ref, av0_ref, *rest, bn: int, m_true: int,
         bi = bi_s[0]
         ok = bv_s[0] > NEG_INF / 2
         xs = x_ref[pl.ds(bi, 1), :].astype(jnp.float32)  # (1, d) winner row
+        if quantized:
+            xs = xs * xs_ref[pl.ds(bi, 1), :] + xz_ref[pl.ds(bi, 1), :]
         d2b = jnp.sum((ef - xs) ** 2, axis=-1,
                       keepdims=True).T                   # (1, mp) — objective's
         cur = cm_s[...]                                  # difference form
@@ -200,6 +211,8 @@ def greedy_select_pallas(
     avail: jax.Array,    # (n,) float32 1/0 — padded rows 0
     weights: jax.Array | None = None,  # (n,) knapsack weights — padded rows 0
     group_ids: jax.Array | None = None,  # (n,) int32 group ids — padded 0
+    x_scale: jax.Array | None = None,  # (n,) per-row dequant scale — padded 0
+    x_zp: jax.Array | None = None,     # (n,) per-row dequant zero-point
     *,
     k: int,
     bn: int = 256,
@@ -215,11 +228,13 @@ def greedy_select_pallas(
     assert n % bn == 0, (n, bn)
     assert (weights is None) == (budget is None), "weights and budget pair up"
     assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
+    assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
+    quantized = x_scale is not None
     grid = (k, n // bn)
 
     kern = functools.partial(_kernel, bn=bn, m_true=m_true,
                              compute_dtype=compute_dtype, budget=budget,
-                             caps=caps,
+                             caps=caps, quantized=quantized,
                              tol=_knapsack_tol() if budget is not None else 0.0)
     in_specs = [
         pl.BlockSpec((n, d), lambda s, i: (0, 0)),   # X resident
@@ -242,6 +257,11 @@ def greedy_select_pallas(
         in_specs.append(pl.BlockSpec((n, 1), lambda s, i: (0, 0)))  # gids
         scratch.append(pltpu.SMEM((len(caps),), jnp.int32))  # per-group counts
         operands.append(group_ids.astype(jnp.int32)[:, None])
+    if quantized:
+        in_specs.append(pl.BlockSpec((n, 1), lambda s, i: (0, 0)))  # x_scale
+        in_specs.append(pl.BlockSpec((n, 1), lambda s, i: (0, 0)))  # x_zp
+        operands.append(x_scale.astype(jnp.float32)[:, None])
+        operands.append(x_zp.astype(jnp.float32)[:, None])
     sel, cm = pl.pallas_call(
         kern,
         grid=grid,

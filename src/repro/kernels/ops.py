@@ -84,17 +84,29 @@ def exemplar_gains(
     bn: int = 256,
     bm: int = 256,
     compute_dtype=None,
+    x_scale: jax.Array | None = None,
+    x_zp: jax.Array | None = None,
 ) -> jax.Array:
-    """Marginal gains for exemplar clustering. See kernels/exemplar_gains.py."""
+    """Marginal gains for exemplar clustering. See kernels/exemplar_gains.py.
+
+    ``x_scale``/``x_zp`` (both or neither, per candidate row) dequantize
+    int8-stored candidates in-kernel: VMEM holds the narrow rows, gain math
+    runs on the fp32 dequantized values (bf16 candidates need no params —
+    the upcast is exact).
+    """
+    assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
     if not _use_pallas(impl):
-        return ref.exemplar_gains(X, E, cur_min, compute_dtype=compute_dtype)
+        return ref.exemplar_gains(X, E, cur_min, compute_dtype=compute_dtype,
+                                  x_scale=x_scale, x_zp=x_zp)
     n, m = X.shape[0], E.shape[0]
     bn = min(bn, max(8, n))
     bm = min(bm, max(8, m))
     Xp = _pad_rows(X, bn)
     Ep = _pad_rows(E, bm)
     cmp_ = _pad_rows(cur_min, bm)  # zero-pad ⇒ padded columns contribute 0
-    raw = exemplar_gains_pallas(Xp, Ep, cmp_, bn=bn, bm=bm,
+    xsp = None if x_scale is None else _pad_rows(x_scale.astype(jnp.float32), bn)
+    xzp = None if x_zp is None else _pad_rows(x_zp.astype(jnp.float32), bn)
+    raw = exemplar_gains_pallas(Xp, Ep, cmp_, xsp, xzp, bn=bn, bm=bm,
                                 interpret=_interpret())
     return raw[:n] / m
 
@@ -104,11 +116,14 @@ def exemplar_gains(
 _GREEDY_SELECT_VMEM_BUDGET = 12 * 1024 * 1024
 
 
-def _greedy_select_fits_vmem(n: int, m: int, d: int, bn: int) -> bool:
-    # X, E, cur_min, avail (+ the knapsack weight and partition group-id
-    # columns, ≤ 2n words more — budgeted unconditionally so constrained
-    # dispatch can't regress) fp32/int32
-    resident = (n * d + m * d + m + 3 * n) * 4
+def _greedy_select_fits_vmem(n: int, m: int, d: int, bn: int,
+                             x_itemsize: int = 4) -> bool:
+    # X at its storage itemsize (narrow candidates are the point of the
+    # quantized path: halving bytes/row doubles the block that fits), E,
+    # cur_min, avail (+ the knapsack weight, partition group-id and dequant
+    # scale/zp columns, ≤ 4n words more — budgeted unconditionally so
+    # constrained/quantized dispatch can't regress) fp32/int32
+    resident = n * d * x_itemsize + (m * d + m + 5 * n) * 4
     tile = bn * m * 4                             # one gains tile
     return resident + tile <= _GREEDY_SELECT_VMEM_BUDGET
 
@@ -128,6 +143,8 @@ def greedy_select(
     budget: float | None = None,
     group_ids: jax.Array | None = None,
     caps: tuple[int, ...] | None = None,
+    x_scale: jax.Array | None = None,
+    x_zp: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused k-step greedy selection for exemplar clustering.
 
@@ -153,13 +170,16 @@ def greedy_select(
     """
     assert (weights is None) == (budget is None), "weights and budget pair up"
     assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
+    assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
     oversized = not _greedy_select_fits_vmem(X.shape[0], E.shape[0],
-                                             X.shape[1], bn)
+                                             X.shape[1], bn,
+                                             x_itemsize=X.dtype.itemsize)
     if not _use_pallas(impl) or (impl == "auto" and oversized):
         return ref.greedy_select(X, E, cur_min, mask, k,
                                  compute_dtype=compute_dtype,
                                  weights=weights, budget=budget,
-                                 group_ids=group_ids, caps=caps)
+                                 group_ids=group_ids, caps=caps,
+                                 x_scale=x_scale, x_zp=x_zp)
     n, m = X.shape[0], E.shape[0]
     bn = min(bn, max(8, n))
     bm = min(bm, max(8, m))
@@ -173,6 +193,9 @@ def greedy_select(
     gp = (None if group_ids is None
           else _pad_rows(group_ids.astype(jnp.int32), bn))
     cp = None if caps is None else tuple(int(c) for c in caps)
+    # padded dequant rows are availability-0 ⇒ scale/zp values are inert
+    xsp = None if x_scale is None else _pad_rows(x_scale.astype(jnp.float32), bn)
+    xzp = None if x_zp is None else _pad_rows(x_zp.astype(jnp.float32), bn)
     # score with the dtype the step-wise oracle would actually use in this
     # environment: exemplar_gains' pallas branch (TPU) always contracts
     # fp32, while its ref branch (interpret testing) honors compute_dtype —
@@ -180,7 +203,8 @@ def greedy_select(
     # different items and void the bit-identity contract
     cd = None if _on_tpu() else (
         None if compute_dtype is None else jnp.dtype(compute_dtype).name)
-    sel, cm = greedy_select_pallas(Xp, Ep, cmp_, avp, wp, gp, k=k, bn=bn,
+    sel, cm = greedy_select_pallas(Xp, Ep, cmp_, avp, wp, gp, xsp, xzp,
+                                   k=k, bn=bn,
                                    m_true=m, compute_dtype=cd, budget=bud,
                                    caps=cp, interpret=_interpret())
     return sel, cm[:m]

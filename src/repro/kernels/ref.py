@@ -37,15 +37,33 @@ def _sqdist(X: jax.Array, E: jax.Array, compute_dtype=None) -> jax.Array:
     return jnp.maximum(x2 + e2 - 2.0 * xy, 0.0)
 
 
+def dequantize_rows(X: jax.Array, x_scale: jax.Array | None = None,
+                    x_zp: jax.Array | None = None) -> jax.Array:
+    """Narrow candidate rows → fp32: per-row affine for int8 (scale/zp),
+    plain exact upcast for bf16/fp32.
+
+    The single dequant definition the fused kernels and the generic scan
+    path both reduce to — an elementwise IEEE fp32 multiply-add, so device
+    and host dequantization of the same bytes are bit-equal.
+    """
+    Xf = X.astype(jnp.float32)
+    if x_scale is not None:
+        Xf = Xf * x_scale[:, None] + x_zp[:, None]
+    return Xf
+
+
 def exemplar_gains(X: jax.Array, E: jax.Array, cur_min: jax.Array,
-                   compute_dtype=None) -> jax.Array:
+                   compute_dtype=None, x_scale: jax.Array | None = None,
+                   x_zp: jax.Array | None = None) -> jax.Array:
     """Marginal gains of the exemplar-clustering objective.
 
     gains[i] = (1/m) * sum_j max(0, cur_min[j] - ||X[i] - E[j]||^2)
 
-    X: (n, d) candidates, E: (m, d) eval set, cur_min: (m,).
+    X: (n, d) candidates (optionally quantized — see
+    :func:`dequantize_rows`), E: (m, d) eval set, cur_min: (m,).
     """
-    d2 = _sqdist(X, E, compute_dtype)                     # (n, m)
+    Xf = dequantize_rows(X, x_scale, x_zp)
+    d2 = _sqdist(Xf, E, compute_dtype)                    # (n, m)
     contrib = jnp.maximum(cur_min[None, :] - d2, 0.0)
     return jnp.sum(contrib, axis=-1) / E.shape[0]
 
@@ -55,7 +73,9 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
                   compute_dtype=None, weights: jax.Array | None = None,
                   budget: float | None = None,
                   group_ids: jax.Array | None = None,
-                  caps: tuple[int, ...] | None = None
+                  caps: tuple[int, ...] | None = None,
+                  x_scale: jax.Array | None = None,
+                  x_zp: jax.Array | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """Fused k-step exemplar-clustering greedy selection (pure-jnp oracle).
 
@@ -91,6 +111,10 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
 
     n, _ = X.shape
     m = E.shape[0]
+    # quantized candidates dequantize once up front: every later read of a
+    # candidate row (gain matrix + cur_min refresh) sees the same fp32 value
+    # the unfused scan path computes from the same bytes
+    X = dequantize_rows(X, x_scale, x_zp)
     d2 = _sqdist(X, E, compute_dtype)                 # (n, m), step-invariant
     neg_inf = jnp.float32(-1e30)
     assert (weights is None) == (budget is None), "weights and budget pair up"

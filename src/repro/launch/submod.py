@@ -8,6 +8,8 @@
         [--wave-autotune] [--async-checkpoint] [--prefetch-depth D] \
         [--constraint knapsack:budget=2.5 | partition:caps=4,4,4 | ...] \
         [--permutation dense|feistel] \
+        [--dtype fp32|bf16|int8] [--q-block-rows B] \
+        [--autotune-cache [PATH]] [--ckpt-delta-every K] \
         [--ckpt-dir DIR --resume] [--fail round:ids] \
         [--fault-profile 'transient=0.3,seed=7,...'] [--fault-retries N] \
         [--fault-backoff S] [--no-hedge] [--max-dropped-fraction F]
@@ -46,6 +48,19 @@ run.  ``--prefetch-depth`` pins the chunk-prefetch depth of the streamed
 centralized column; unset, it defaults from the autotuner's measured
 gather/solve rates when those exist.
 
+``--dtype bf16|int8`` runs bytes-lean ingestion: the ground set is wrapped
+in a :class:`QuantizedSource`, every wave ships narrow feature rows to
+device (attrs + per-block dequant params ride out-of-band as fp32
+metadata), and the Pallas megakernel dequantizes in-kernel so gain math
+stays fp32.  The same ``--capacity-bytes`` budget then admits
+proportionally wider waves (grep the ``bytes:`` line).  The reported
+coreset is re-gathered from the unquantized parent at fp32 and exactly
+re-scored (``recheck:`` line, PASS/FAIL) — quality claims never rest on
+narrow arithmetic.  ``--autotune-cache`` persists the wave autoscaler's
+converged rung per (source fingerprint, μ, devices) so reruns start at
+the knee; ``--ckpt-delta-every K`` shrinks round checkpoints to row-index
+deltas with a full snapshot every K rounds (resume bit-identical).
+
 ``--fault-profile`` arms the seeded chaos injector
 (``repro.engine.faults.FaultInjector``) on the wave-gather path — e.g.
 ``transient=0.3,seed=7`` fails ~30% of gather attempts with a retryable IO
@@ -73,17 +88,20 @@ independent NumPy feasibility checker.
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (ChunkedSource, ExemplarClustering, Intersection,
-                        Knapsack, PartitionMatroid, TreeConfig,
+from repro.core import (STORAGE_DTYPES, ArraySource, ChunkedSource,
+                        ExemplarClustering, Intersection, Knapsack,
+                        PartitionMatroid, QuantizedSource, TreeConfig,
                         centralized_greedy, check_feasible,
-                        constraint_from_spec, make_submod_mesh, randgreedi,
-                        tree_maximize)
+                        constraint_from_spec, dtype_itemsize,
+                        make_submod_mesh, randgreedi, tree_maximize)
 from repro.core.tree import PERMUTATIONS
+from repro.data.selection import fp32_recheck
 from repro.engine import (ENGINES, FaultInjector, FaultPolicy, FaultProfile,
                           suggest_prefetch_depth)
 from repro.data import datasets
@@ -164,6 +182,22 @@ def main():
                          "--wave-autotune measured the rates)")
     ap.add_argument("--chunk-rows", type=int, default=4096,
                     help="rows per chunk/shard for --source chunked|sharded")
+    ap.add_argument("--dtype", default="fp32", choices=STORAGE_DTYPES,
+                    help="ground-set storage dtype: bf16/int8 ship narrow "
+                         "rows to device (dequantized in-kernel, same byte "
+                         "budget admits wider waves); the reported coreset "
+                         "is re-gathered at fp32 and exactly re-scored")
+    ap.add_argument("--q-block-rows", type=int, default=4096,
+                    help="int8 quantization block size (rows per "
+                         "scale/zero-point block on the global index grid)")
+    ap.add_argument("--autotune-cache", nargs="?", const="auto", default=None,
+                    help="persist the autoscaler's converged rung to this "
+                         "JSON file (bare flag: autotune_cache.json next to "
+                         "--ckpt-dir); reruns seed the planner at the knee")
+    ap.add_argument("--ckpt-delta-every", type=int, default=0,
+                    help="K > 0: round checkpoints store row-index deltas "
+                         "vs the previous round, full snapshot every K "
+                         "rounds (resume bit-identical)")
     ap.add_argument("--constraint", default=None,
                     help="hereditary constraint spec, e.g. "
                          "'knapsack:budget=2.5' or 'partition:caps=4,4,4'")
@@ -234,10 +268,25 @@ def main():
         ground = dj
         attrs_arg = attrs
 
+    if args.dtype != "fp32":
+        # narrow-storage run: wrap whatever access path was chosen in the
+        # quantizing view — the wire format of every gather/chunk becomes
+        # the storage dtype, and the tree solve dequantizes in-kernel
+        base = (ArraySource(data, attrs=attrs) if args.source == "resident"
+                else ground)
+        ground = QuantizedSource(base, store_dtype=args.dtype,
+                                 q_block_rows=args.q_block_rows)
+        attrs_arg = None          # attrs flow through the source's gathers
+
+    at_cache = args.autotune_cache
+    if at_cache == "auto":
+        at_cache = os.path.join(args.ckpt_dir or ".", "autotune_cache.json")
+
     mesh = make_submod_mesh()
     print(f"n={len(data)} d={data.shape[1]} k={args.k} mu={args.capacity} "
           f"devices={mesh.devices.size} alg={args.algorithm} "
-          f"source={args.source} permutation={args.permutation} "
+          f"source={args.source} dtype={args.dtype} "
+          f"permutation={args.permutation} "
           f"engine={args.engine} hosts={args.hosts} "
           f"constraint={args.constraint or 'none'}")
     cfg = TreeConfig(k=args.k, capacity=args.capacity,
@@ -248,7 +297,9 @@ def main():
                      wave_autotune=args.wave_autotune,
                      async_checkpoint=args.async_checkpoint,
                      prefetch_depth=args.prefetch_depth,
-                     fault_policy=fault_policy)
+                     fault_policy=fault_policy,
+                     checkpoint_delta_every=args.ckpt_delta_every,
+                     autotune_cache=at_cache)
     res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
                         wave_machines=args.wave_machines,
                         constraint=constraint, attrs=attrs_arg,
@@ -258,11 +309,23 @@ def main():
           f"oracle_calls={res.oracle_calls}")
     if res.ingest is not None:
         ing = res.ingest
-        width = data.shape[1] + ing.attr_dim
+        d_feat = data.shape[1]
+        itemsize = dtype_itemsize(args.dtype)
+        qcols = ground.qcols if isinstance(ground, QuantizedSource) else 0
+        # fp32: everything (features + attrs) ships as one fp32 block;
+        # narrow: features at the storage itemsize, attrs + dequant params
+        # as fp32 metadata columns — same accounting _wave_size budgets by
+        row_bytes = d_feat * itemsize + (ing.attr_dim + qcols) * 4
+        fp32_row_bytes = (d_feat + ing.attr_dim) * 4
         print(f"ingest: W={ing.wave_machines} waves={ing.waves} "
               f"peak_wave_rows={ing.peak_wave_rows} "
               f"peak_wave_bytes={ing.peak_wave_bytes} attr_dim={ing.attr_dim} "
-              f"(resident would hold {len(data) * width * 4} bytes)")
+              f"(resident would hold {len(data) * row_bytes} bytes)")
+        print(f"bytes: dtype={args.dtype} itemsize={itemsize} "
+              f"row_bytes={row_bytes} fp32_row_bytes={fp32_row_bytes} "
+              f"saved={1.0 - row_bytes / fp32_row_bytes:.1%} "
+              f"peak_wave_bytes={ing.peak_wave_bytes} "
+              f"total_bytes={ing.total_bytes}")
     if res.engine_stats is not None:
         es = res.engine_stats
         print(f"engine: {es.engine} hosts={es.hosts} "
@@ -289,6 +352,16 @@ def main():
         ok, detail = check_feasible(constraint, res.sel_attrs, res.sel_mask)
         print(f"feasibility: {'OK' if ok else 'VIOLATED'} ({detail})")
         assert ok
+    if args.dtype != "fp32":
+        # Barbosa-style exact validation: re-gather the selection from the
+        # unquantized parent at fp32 and re-score with the exact objective
+        rc = fp32_recheck(obj, ground, res.sel_rows, res.sel_mask,
+                          solve_value=res.value)
+        rel = abs(rc.value - res.value) / max(abs(rc.value), 1e-12)
+        status = "PASS" if np.isfinite(rc.value) and rel < 5e-2 else "FAIL"
+        print(f"recheck: fp32={rc.value:.6f} solve={res.value:.6f} "
+              f"rel_gap={rel:.2e} {status}")
+        assert status == "PASS", (rc.value, res.value)
     if not args.no_centralized:
         # non-resident runs stream the centralized column too (chunked lazy
         # greedy) — nothing in the comparison needs the all-resident array.

@@ -1,0 +1,416 @@
+"""Bytes-lean ingestion (PR 7): quantized sources through the wave path.
+
+Contract under test, per storage dtype:
+
+  * **fp32** — the quantization plumbing is inert: a ``QuantizedSource``
+    at fp32 is bit-identical to the plain streaming path, which is
+    bit-identical to the all-resident driver (the pre-PR pins).
+  * **bf16 / int8** — the streamed quantized solve is bit-identical to
+    an all-resident solve over the *dequantized* pool (narrow wire +
+    in-solve dequant changes nothing but the bytes moved), round-trip
+    error is bounded by the lattice step, the selected coreset passes
+    the independent feasibility checker, and the fp32 re-gather +
+    exact re-score (``fp32_recheck``) lands within the quantization
+    budget of the fp32 pipeline.
+
+Plus the satellites that ride along: power-of-two int8 scales (the FMA
+bit-identity guarantee), dtype-aware wave-byte accounting, the kernels'
+in-kernel dequant vs the jnp oracle, delta round checkpoints, bf16
+checkpoint resume, and the autotuner's persisted converged rung.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ArraySource, ExemplarClustering, Knapsack,
+                        QuantizedSource, TreeConfig, check_feasible,
+                        dtype_itemsize, storage_np_dtype, tree_maximize)
+from repro.core import tree as tree_lib
+from repro.data.selection import fp32_recheck
+from repro.engine import (AutotuneCache, list_round_checkpoints,
+                          load_round_checkpoint, write_round_checkpoint)
+from repro.engine.checkpoint import round_checkpoint_path
+from repro.kernels import ops, ref
+
+DTYPES = ("fp32", "bf16", "int8")
+
+
+def _setup(n=901, d=8, ne=128, seed=0, spread=3.0):
+    r = np.random.default_rng(seed)
+    data = (r.standard_normal((n, d)) * spread).astype(np.float32)
+    E = data[r.choice(n, ne, replace=False)]
+    return data, ExemplarClustering(jnp.asarray(E))
+
+
+def _assert_identical(a, b):
+    np.testing.assert_array_equal(a.sel_rows, b.sel_rows)
+    np.testing.assert_array_equal(a.sel_mask, b.sel_mask)
+    assert a.value == b.value                      # bit-identical, no rtol
+    assert a.oracle_calls == b.oracle_calls
+    assert a.round_values == b.round_values
+
+
+# ---------------------------------------------------------------------------
+# dtype helpers + quantizer numerics
+# ---------------------------------------------------------------------------
+
+
+def test_dtype_itemsize_ladder():
+    assert dtype_itemsize(np.dtype(np.float32)) == 4
+    assert dtype_itemsize(storage_np_dtype("bf16")) == 2
+    assert dtype_itemsize(storage_np_dtype("int8")) == 1
+    # fp32 rows keep the legacy ·4 cost exactly
+    assert dtype_itemsize(storage_np_dtype("fp32")) == 4
+
+
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_roundtrip_error_bound(dtype):
+    data, _ = _setup(n=700, d=6, seed=2)
+    src = QuantizedSource(ArraySource(data), store_dtype=dtype,
+                          q_block_rows=128)
+    deq = src.dequantized()
+    if dtype == "fp32":
+        np.testing.assert_array_equal(deq, data)
+        return
+    if dtype == "bf16":
+        # bf16 keeps 8 significand bits: |x − bf16(x)| ≤ 2^-8 |x|
+        np.testing.assert_allclose(deq, data, rtol=2.0 ** -8, atol=1e-30)
+        return
+    # int8: per-block affine lattice, |x − deq(q(x))| ≤ scale/2 per element
+    for b in range((len(data) + 127) // 128):
+        seg = slice(b * 128, (b + 1) * 128)
+        step = float(src._scale[b])
+        assert np.abs(deq[seg] - data[seg]).max() <= step / 2 + 1e-6
+
+
+def test_int8_scales_pow2_fma_bit_identity():
+    """int8 scales are powers of two, so ``q·scale`` is exact in fp32 and a
+    compiler contracting the dequant into one FMA (XLA CPU/TPU) computes
+    the same bits as numpy's separately rounded multiply-then-add."""
+    data, _ = _setup(n=2000, d=16, seed=5)
+    src = QuantizedSource(ArraySource(data), store_dtype="int8",
+                          q_block_rows=256)
+    fr, _ = np.frexp(src._scale)
+    np.testing.assert_array_equal(fr, 0.5)          # all exact powers of two
+    idx = np.arange(src.n)
+    q = src.gather(idx).astype(np.float32)
+    qm = src.gather_qmeta(idx)
+    host = src.dequantize(q, qm)
+    fused = np.asarray(jax.jit(lambda a, s, z: a * s + z)(
+        jnp.asarray(q), jnp.asarray(qm[:, 0:1]), jnp.asarray(qm[:, 1:2])))
+    np.testing.assert_array_equal(fused, host)
+
+
+def test_constant_block_degenerates_exactly():
+    data = np.full((300, 5), 2.75, np.float32)
+    src = QuantizedSource(ArraySource(data), store_dtype="int8",
+                          q_block_rows=64)
+    np.testing.assert_array_equal(src.dequantized(), data)
+
+
+# ---------------------------------------------------------------------------
+# tree equivalences
+# ---------------------------------------------------------------------------
+
+
+def test_fp32_wrapper_inert_bit_identical():
+    """QuantizedSource at fp32 must be invisible: same bits as the plain
+    streaming path, which matches the all-resident driver (the pre-PR
+    behavior this PR may not move)."""
+    data, obj = _setup()
+    cfg = TreeConfig(k=8, capacity=60, seed=3)
+    resident = tree_maximize(obj, jnp.asarray(data), cfg)
+    plain = tree_maximize(obj, ArraySource(data), cfg, wave_machines=3)
+    wrapped = tree_maximize(obj, QuantizedSource(ArraySource(data), "fp32"),
+                            cfg, wave_machines=3)
+    _assert_identical(resident, plain)
+    _assert_identical(plain, wrapped)
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("engine", ["sync", "pipelined"])
+def test_streaming_equals_dequantized_resident(dtype, engine):
+    """The narrow wire + in-solve dequant is an execution detail: streaming
+    a quantized source must produce the same bits as the all-resident
+    driver over the dequantized pool."""
+    data, obj = _setup(seed=1)
+    src = QuantizedSource(ArraySource(data), store_dtype=dtype,
+                          q_block_rows=256)
+    cfg = TreeConfig(k=8, capacity=60, seed=4, engine=engine)
+    streamed = tree_maximize(obj, src, cfg, wave_machines=3)
+    resident = tree_maximize(obj, jnp.asarray(src.dequantized()),
+                             TreeConfig(k=8, capacity=60, seed=4))
+    _assert_identical(streamed, resident)
+
+
+def test_wave_bytes_dtype_aware():
+    """At a fixed byte budget the narrow dtypes widen the wave; the ingest
+    stats account peak bytes with the narrow itemsize + fp32 qmeta."""
+    data, obj = _setup(n=2400, d=16, seed=6)
+    mu = 60
+    budget = 4 * mu * (16 * 4)          # 4 machines' worth of fp32 rows
+    res = {}
+    for dtype in DTYPES:
+        src = (ArraySource(data) if dtype == "fp32" else
+               QuantizedSource(ArraySource(data), store_dtype=dtype))
+        cfg = TreeConfig(k=8, capacity=mu, seed=0, capacity_bytes=budget)
+        res[dtype] = tree_maximize(obj, src, cfg).ingest
+    assert res["fp32"].wave_machines == 4
+    assert res["bf16"].wave_machines == 8           # d·2 halves the row
+    assert res["int8"].wave_machines == 10          # d·1 + 2·4 qmeta
+    row_bytes = {"fp32": 16 * 4, "bf16": 16 * 2, "int8": 16 + 8}
+    for dtype in DTYPES:
+        ing = res[dtype]
+        assert ing.peak_wave_bytes == ing.peak_wave_rows * row_bytes[dtype]
+        assert ing.peak_wave_bytes <= budget
+
+
+@pytest.mark.parametrize("dtype", ["bf16", "int8"])
+def test_constrained_feasible_and_fp32_recheck(dtype):
+    data, obj = _setup(seed=7)
+    attrs = np.random.default_rng(7).uniform(
+        0.2, 1.0, (len(data), 1)).astype(np.float32)
+    cons = Knapsack(budget=3.0, col=0)
+    src = QuantizedSource(ArraySource(data, attrs=attrs), store_dtype=dtype,
+                          q_block_rows=256)
+    cfg = TreeConfig(k=8, capacity=60, seed=2)
+    res = tree_maximize(obj, src, cfg, wave_machines=3, constraint=cons)
+    ok, detail = check_feasible(cons, res.sel_attrs, res.sel_mask)
+    assert ok, detail
+    rc = fp32_recheck(obj, src, res.sel_rows, res.sel_mask,
+                      solve_value=float(res.value))
+    assert np.isfinite(rc.value)
+    assert rc.solve_value == float(res.value)
+    k_sel = int(res.sel_mask.sum())
+    assert rc.indices.shape == (k_sel,)
+    # the re-gathered rows are the *unquantized* originals of the selection
+    np.testing.assert_array_equal(rc.rows_fp32, data[rc.indices])
+    # fp32 pipeline comparison: the exact re-score is within the lattice
+    # budget of solving unquantized outright
+    ref_res = tree_maximize(obj, ArraySource(data, attrs=attrs), cfg,
+                            wave_machines=3, constraint=cons)
+    rel = abs(rc.value - float(ref_res.value)) / abs(float(ref_res.value))
+    assert rel <= (5e-2 if dtype == "int8" else 1e-2), (dtype, rel)
+
+
+def test_fp32_recheck_consistency_on_plain_source():
+    data, obj = _setup(seed=8)
+    cfg = TreeConfig(k=8, capacity=60, seed=1)
+    res = tree_maximize(obj, ArraySource(data), cfg, wave_machines=3)
+    rc = fp32_recheck(obj, ArraySource(data), res.sel_rows, res.sel_mask)
+    np.testing.assert_allclose(rc.value, float(res.value), rtol=1e-6)
+    np.testing.assert_array_equal(rc.rows_fp32, data[rc.indices])
+
+
+# ---------------------------------------------------------------------------
+# kernels: in-kernel dequant (interpret=True) vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def _quant_operands(n, d, m, seed):
+    r = np.random.default_rng(seed)
+    data = (r.standard_normal((n, d)) * 3.0).astype(np.float32)
+    src = QuantizedSource(ArraySource(data), store_dtype="int8",
+                          q_block_rows=64)
+    idx = np.arange(n)
+    X = jnp.asarray(src.gather(idx).astype(np.float32))
+    qm = src.gather_qmeta(idx)
+    xs, xz = jnp.asarray(qm[:, 0]), jnp.asarray(qm[:, 1])
+    r = np.random.default_rng(seed)
+    E = jnp.asarray(data[r.choice(n, m, replace=False)])
+    return X, xs, xz, E
+
+
+@pytest.mark.parametrize("n,m,d", [(64, 16, 8), (130, 33, 12)])
+def test_exemplar_gains_quantized_pallas_vs_ref(n, m, d):
+    X, xs, xz, E = _quant_operands(n, d, m, seed=3)
+    cm = jnp.full((m,), 50.0, jnp.float32)
+    got = ops.exemplar_gains(X, E, cm, impl="pallas", bn=32, bm=16,
+                             x_scale=xs, x_zp=xz)
+    want = ref.exemplar_gains(ref.dequantize_rows(X, xs, xz), E, cm)
+    if m <= 16:
+        # one eval tile: no reduction reorder — the dequant itself is exact
+        np.testing.assert_array_equal(got, want)
+    else:
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-5)
+
+
+def test_greedy_select_quantized_pallas_vs_ref():
+    n, m, d, k = 96, 16, 8, 6
+    X, xs, xz, E = _quant_operands(n, d, m, seed=9)
+    cm = jnp.full((m,), 50.0, jnp.float32)
+    mask = jnp.ones((n,), bool)
+    got_idx, got_cm = ops.greedy_select(X, E, cm, mask, k, impl="pallas",
+                                        bn=32, bm=16, x_scale=xs, x_zp=xz)
+    want_idx, want_cm = ref.greedy_select(ref.dequantize_rows(X, xs, xz),
+                                          E, cm, mask, k)
+    np.testing.assert_array_equal(got_idx, want_idx)
+    np.testing.assert_array_equal(got_cm, want_cm)
+
+
+# ---------------------------------------------------------------------------
+# delta round checkpoints
+# ---------------------------------------------------------------------------
+
+
+def _fake_round(prev_rows, r, carry=24, extra=2):
+    """Next round's rows: a selection of the previous round's + a few new."""
+    rng = np.random.default_rng(r)
+    rows = np.zeros_like(prev_rows)
+    sel = rng.choice(len(prev_rows), carry, replace=False)
+    rows[:carry] = prev_rows[sel]
+    rows[carry:carry + extra] = rng.standard_normal(
+        (extra, prev_rows.shape[1])).astype(np.float32)
+    return rows
+
+
+def test_delta_checkpoint_roundtrip_bit_identical(tmp_path):
+    d = str(tmp_path)
+    rng = np.random.default_rng(0)
+    rows = rng.standard_normal((400, 64)).astype(np.float32)
+    want = {}
+    for r in range(5):
+        if r:
+            rows = _fake_round(rows, r, carry=300)
+        want[r] = rows.copy()
+        write_round_checkpoint(d, r, keep=0, delta_every=3, rows=rows,
+                               mask=np.ones((400,), bool), calls=r)
+    # rounds 1, 2, 4 are deltas on disk; every load reconstructs exactly
+    for r in range(5):
+        with np.load(round_checkpoint_path(d, r)) as z:
+            assert ("delta_base" in z.files) == (r % 3 != 0)
+        got = load_round_checkpoint(round_checkpoint_path(d, r))
+        np.testing.assert_array_equal(got["rows"], want[r])
+        assert int(got["calls"]) == r
+    # a delta file is materially smaller than its full-snapshot sibling
+    assert (os.path.getsize(round_checkpoint_path(d, 1))
+            < os.path.getsize(round_checkpoint_path(d, 0)))
+
+
+def test_delta_rotation_keeps_ancestor_chain(tmp_path):
+    d = str(tmp_path)
+    rows = np.random.default_rng(1).standard_normal(
+        (30, 4)).astype(np.float32)
+    want = {}
+    for r in range(6):
+        if r:
+            rows = _fake_round(rows, r, carry=20)
+        want[r] = rows.copy()
+        write_round_checkpoint(d, r, keep=2, delta_every=4, rows=rows)
+    kept = [r for r, _ in list_round_checkpoints(d)]
+    # newest 2 are rounds 4, 5; round 5 is a delta on base 4 (full) — the
+    # chain is self-contained, older rounds were rotated away
+    assert kept == [4, 5]
+    for r in kept:
+        got = load_round_checkpoint(round_checkpoint_path(d, r))
+        np.testing.assert_array_equal(got["rows"], want[r])
+
+
+def test_delta_rotation_retains_cross_boundary_base(tmp_path):
+    """A retained delta whose full-snapshot base falls outside the keep
+    window must keep its ancestors on disk (rotation is chain-aware)."""
+    d = str(tmp_path)
+    rows = np.random.default_rng(2).standard_normal(
+        (30, 4)).astype(np.float32)
+    want = {}
+    for r in range(5):
+        if r:
+            rows = _fake_round(rows, r, carry=20)
+        want[r] = rows.copy()
+        write_round_checkpoint(d, r, keep=2, delta_every=8, rows=rows)
+    kept = [r for r, _ in list_round_checkpoints(d)]
+    # keep=2 wants {3, 4}, both deltas chaining 4→3→2→1→0: all survive
+    assert kept == [0, 1, 2, 3, 4]
+    got = load_round_checkpoint(round_checkpoint_path(d, 4))
+    np.testing.assert_array_equal(got["rows"], want[4])
+
+
+@pytest.mark.parametrize("dtype", ["fp32", "bf16"])
+def test_checkpoint_resume_delta_quantized(tmp_path, monkeypatch, dtype):
+    """A run crashed after its round-1 checkpoint and resumed — under delta
+    checkpoints and a quantized source — finishes bit-identically to the
+    uninterrupted run."""
+    data, obj = _setup(n=700, seed=3)
+    base = ArraySource(data)
+    src = (base if dtype == "fp32"
+           else QuantizedSource(base, store_dtype=dtype))
+
+    def cfg(ckpt=None, resume=False):
+        return TreeConfig(k=8, capacity=60, seed=6, checkpoint_dir=ckpt,
+                          resume=resume, checkpoint_delta_every=3)
+
+    full = tree_maximize(obj, src, cfg(), wave_machines=2)
+    assert full.rounds >= 3          # the crash point below must exist
+
+    ck = str(tmp_path / "ck")
+    real_save = tree_lib._save_round
+
+    def crash_after_round_2(d, round_idx, *a):
+        real_save(d, round_idx, *a)
+        if round_idx == 2:
+            raise KeyboardInterrupt("simulated crash")
+
+    monkeypatch.setattr(tree_lib, "_save_round", crash_after_round_2)
+    with pytest.raises(KeyboardInterrupt):
+        tree_maximize(obj, src, cfg(ckpt=ck), wave_machines=2)
+    monkeypatch.setattr(tree_lib, "_save_round", real_save)
+    # round 1 is the first snapshot (no base → full); round 2 is a delta,
+    # and it is what the resume below reconstructs from
+    with np.load(round_checkpoint_path(ck, 2)) as z:
+        assert "delta_base" in z.files
+    resumed = tree_maximize(obj, src, cfg(ckpt=ck, resume=True),
+                            wave_machines=2)
+    np.testing.assert_array_equal(resumed.sel_rows, full.sel_rows)
+    np.testing.assert_array_equal(resumed.sel_mask, full.sel_mask)
+    assert resumed.value == full.value
+    assert resumed.oracle_calls == full.oracle_calls
+    assert resumed.rounds == full.rounds
+    # the resumed run replays from the delta round on: its logs are the tail
+    assert resumed.round_values == full.round_values[-len(resumed.round_values):]
+
+
+# ---------------------------------------------------------------------------
+# autotune cache: persisted converged rung
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_cache_api(tmp_path):
+    c = AutotuneCache(str(tmp_path / "sub" / "cache.json"))
+    assert c.get("k") is None
+    c.put("k", 8)
+    c.put("k2", 16)
+    assert AutotuneCache(c.path).get("k") == 8
+    assert AutotuneCache(c.path).get("k2") == 16
+    with open(c.path, "w") as f:
+        f.write("{not json")
+    assert c.get("k") is None              # unreadable file == empty cache
+    c.put("k", 4)                          # and writes recover it
+    assert c.get("k") == 4
+
+
+def test_autotune_cache_seeds_rerun_at_knee(tmp_path):
+    """First autotuned run persists its converged rung; the rerun starts
+    there (same source fingerprint) instead of re-walking the ladder."""
+    data, obj = _setup(n=2400, d=16, seed=9)
+    path = str(tmp_path / "autotune_cache.json")
+    src = lambda: QuantizedSource(ArraySource(data), store_dtype="bf16")
+    cfg = TreeConfig(k=8, capacity=60, seed=0, engine="pipelined",
+                     wave_autotune=True, capacity_bytes=16 * 60 * 16 * 4,
+                     autotune_cache=path)
+    first = tree_maximize(obj, src(), cfg)
+    cache = AutotuneCache(path)
+    key = f"{src().fingerprint()}|mu=60|ndev=1"
+    knee = cache.get(key)
+    assert knee is not None and knee >= 1
+    second = tree_maximize(obj, src(), cfg)
+    # the rerun's first wave dispatches at the persisted rung
+    assert second.engine_stats.width_trajectory[0] == min(
+        knee, second.ingest.total_machines)
+    _assert_identical(first, second)
+
+    # a different storage dtype is a different fingerprint → cold start
+    other = QuantizedSource(ArraySource(data), store_dtype="int8")
+    assert cache.get(f"{other.fingerprint()}|mu=60|ndev=1") is None
