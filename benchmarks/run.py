@@ -13,12 +13,14 @@
   adaptive — wave autoscaler + async checkpoint writer    (PR 5)
   faults   — fault supervision: retries/eviction/drops    (PR 6)
   bytes_lean — quantized wave streaming, dtype ladder     (PR 7)
+  telemetry — tracer overhead: off vs instrumented run    (PR 8)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
 ``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``, ``adaptive``
 writes ``BENCH_PR5.json``, ``faults`` writes ``BENCH_PR6.json``,
-``bytes_lean`` writes ``BENCH_PR7.json``; everything else goes to
+``bytes_lean`` writes ``BENCH_PR7.json``, ``telemetry`` writes
+``BENCH_PR8.json``; everything else goes to
 ``BENCH_PR1.json`` (repo root).  ``--only bytes_lean`` is the PR 7
 refresh.
 """
@@ -36,6 +38,7 @@ BENCH_PR4_JSON = os.path.join(_ROOT, "BENCH_PR4.json")
 BENCH_PR5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 BENCH_PR6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
 BENCH_PR7_JSON = os.path.join(_ROOT, "BENCH_PR7.json")
+BENCH_PR8_JSON = os.path.join(_ROOT, "BENCH_PR8.json")
 
 
 def main() -> None:
@@ -51,7 +54,7 @@ def main() -> None:
                             fault_tolerance_bench,
                             fig2_capacity, fig2_large_scale, kernel_bench,
                             table1_complexity, table3_relative_error,
-                            tree_scaling)
+                            telemetry_overhead, tree_scaling)
     suites = {
         "table1": table1_complexity.run,
         "table3": table3_relative_error.run,
@@ -65,6 +68,7 @@ def main() -> None:
         "adaptive": adaptive_engine.run,
         "faults": fault_engine.run,
         "bytes_lean": bytes_lean.run,
+        "telemetry": telemetry_overhead.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
@@ -72,7 +76,8 @@ def main() -> None:
                "engine": (BENCH_PR4_JSON, 4),
                "adaptive": (BENCH_PR5_JSON, 5),
                "faults": (BENCH_PR6_JSON, 6),
-               "bytes_lean": (BENCH_PR7_JSON, 7)}
+               "bytes_lean": (BENCH_PR7_JSON, 7),
+               "telemetry": (BENCH_PR8_JSON, 8)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

@@ -65,6 +65,8 @@ from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
                                     run_waves)
 from repro.engine.stats import (CheckpointStats, EngineStats, FaultStats,
                                 RoundCheckpoint)
+from repro.engine.telemetry import (MANIFEST_NAME, build_manifest,
+                                    dtype_label, feed_result_metrics)
 
 PERMUTATIONS = ("dense", "feistel")
 
@@ -101,6 +103,13 @@ class TreeConfig:
     #                                    autotuner's converged rung per
     #                                    (source fingerprint, μ, ndev) so
     #                                    reruns start at the knee
+    telemetry: Any = None              # repro.engine.telemetry.Tracer, or
+    #                                    None (default): spans from every
+    #                                    engine seam + a RunManifest next to
+    #                                    the checkpoints.  Observation only —
+    #                                    outputs are bit-identical either
+    #                                    way, and None costs nothing (every
+    #                                    seam guards on `tracer is not None`)
 
     def __post_init__(self):
         assert self.capacity > self.k, (
@@ -181,6 +190,12 @@ class TreeResult:
     checkpoint_stats: CheckpointStats | None = None  # per-round ckpt overlap
     fault_stats: FaultStats | None = None  # supervision record (retries,
     #                                        hedges, evictions, drops)
+    round_walls: list[float] | None = None  # wall seconds per round, in
+    #                                         round order (round 0 first)
+    total_wall_s: float = 0.0   # whole tree_maximize wall clock
+    manifest: Any = None        # repro.engine.telemetry.RunManifest when
+    #                             cfg.telemetry was attached (also written
+    #                             atomically next to the checkpoints)
 
 
 # ---------------------------------------------------------------------------
@@ -504,6 +519,9 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     planner, ladder = _wave_planner(cfg, W, ndev, Mp, mu, blk_width,
                                     wave_machines, wave_schedule,
                                     itemsize, meta_cols)
+    tracer = cfg.telemetry
+    if tracer is not None and isinstance(planner, AutotunePlanner):
+        planner.tracer = tracer       # rung decisions → "autotune" instants
     # seed the autoscaler from a persisted converged rung (same source
     # fingerprint — n, d, storage dtype — μ and device count), and record
     # the rung it lands on for the next run
@@ -536,7 +554,7 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
             cfg.fault_policy or FaultPolicy(), total_rows=n,
             injector=fault_injector, rate_hint=planner.gather_rate,
             concurrent_ok=source.supports_concurrent_gather,
-            evict_cb=evict_host)
+            evict_cb=evict_host, tracer=tracer)
 
     def next_span():
         w0 = cursor["w0"]
@@ -547,7 +565,8 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         cursor["w0"] = w0 + w
         return w0, w0 + w
 
-    def gather_rows(idx_flat: np.ndarray, fault_hook=None):
+    def gather_rows(idx_flat: np.ndarray, fault_hook=None,
+                    wave: int | None = None):
         """Rows (+ attrs when constrained) for one wave, a single source
         pass: sequential sources must not be re-streamed once per matrix.
         With ``hosts > 1`` the pass is sharded: each ingestion host serves
@@ -557,7 +576,8 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         if p is not None:
             rows, src_attrs, per_host = p.gather(
                 idx_flat, with_attrs=bool(a) and attrs_np is None,
-                parallel=ecfg.mode == "pipelined", fault_hook=fault_hook)
+                parallel=ecfg.mode == "pipelined", fault_hook=fault_hook,
+                tracer=tracer, wave=wave)
             row_attrs = (attrs_np[idx_flat] if a and attrs_np is not None
                          else src_attrs)
             return rows, row_attrs, per_host
@@ -579,12 +599,12 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         idx_flat = np.maximum(idx_w, 0).reshape(-1)
         valid = idx_w >= 0
         if supervisor is None:
-            rows, row_attrs, per_host = gather_rows(idx_flat)
+            rows, row_attrs, per_host = gather_rows(idx_flat, wave=i)
         else:
             def attempt_fn(attempt: int):
                 hook = (fault_injector.host_hook(i, attempt)
                         if fault_injector is not None else None)
-                return gather_rows(idx_flat, fault_hook=hook)
+                return gather_rows(idx_flat, fault_hook=hook, wave=i)
 
             gathered, dropped = supervisor.gather(
                 i, machines=w1 - w0, rows=int(valid.sum()),
@@ -666,7 +686,8 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
         sol_mask.append(res.sol_mask)
         return v_wave
 
-    estats = run_waves(None, gather, solve, ecfg, on_trace=planner.observe)
+    estats = run_waves(None, gather, solve, ecfg, on_trace=planner.observe,
+                       tracer=tracer)
     if supervisor is not None:
         estats.fault_stats = supervisor.stats
     best_rows, best_mask, best_val, total_calls, v_round = carry
@@ -841,12 +862,17 @@ def tree_maximize(
     # -- checkpoint policy: inline (timed) vs async double-buffered --------
     # the writer is handed the module-global _save_round lazily so the two
     # paths share one serializer (and tests may monkeypatch it for both)
-    writer = (AsyncCheckpointWriter(lambda *wa: _save_round(*wa))
+    writer = (AsyncCheckpointWriter(lambda *wa: _save_round(*wa),
+                                    tracer=cfg.telemetry)
               if cfg.async_checkpoint and cfg.checkpoint_dir else None)
     ckpt_rounds: list[RoundCheckpoint] = []
+    tracer = cfg.telemetry
+    round_walls: list[float] = []
+    t_run0 = time.perf_counter()
 
     try:
         while True:
+            rt0 = time.perf_counter()
             key, kpart, kalg = jax.random.split(key, 3)
             if t != 0:
                 n_items = int(_host_scalar(jnp.sum(mask_in.astype(jnp.int32))))
@@ -891,11 +917,15 @@ def tree_maximize(
             if cfg.checkpoint_dir:
                 # snapshot on the caller thread (device→host pulls produce
                 # fresh buffers the writer owns outright) ...
+                ts0 = time.perf_counter()
                 snap = (cfg.checkpoint_dir, t, _host_array(rows_in),
                         _host_array(mask_in), _host_array(best_rows),
                         _host_array(best_mask), _host_scalar(best_val),
                         int(_host_scalar(total_calls)), cfg.checkpoint_keep,
                         cfg.checkpoint_delta_every)
+                if tracer is not None:
+                    tracer.emit("ckpt-snapshot", "ckpt", ts0,
+                                time.perf_counter(), round=t)
                 if writer is not None:
                     # ... then overlap the serialize+write with round t+1
                     # (submit's internal barrier drained write t-1 already)
@@ -904,8 +934,17 @@ def tree_maximize(
                     t0 = time.perf_counter()
                     _save_round(*snap)
                     dt = time.perf_counter() - t0
+                    if tracer is not None:
+                        tracer.emit("ckpt-write", "ckpt", t0, t0 + dt,
+                                    round=t)
                     ckpt_rounds.append(RoundCheckpoint(
                         round=t, write_s=dt, wait_s=dt))
+
+            rt1 = time.perf_counter()
+            round_walls.append(rt1 - rt0)
+            if tracer is not None:
+                tracer.emit("round", "round", rt0, rt1, round=t - 1,
+                            machines=machines_per_round[-1])
 
             if L == 1:        # that was the final single-machine round
                 break
@@ -924,14 +963,47 @@ def tree_maximize(
 
     sel_wide = _host_array(best_rows)
     sel_mask_np = _host_array(best_mask)
-    return _finish_result(
+    value = _host_scalar(best_val)
+    t_run1 = time.perf_counter()
+    if tracer is not None:
+        tracer.emit("run", "run", t_run0, t_run1, rounds=t, value=value)
+    result = _finish_result(
         sel_wide, sel_mask_np, d, a, constraint,
-        value=_host_scalar(best_val), rounds=t,
+        value=value, rounds=t,
         oracle_calls=int(_host_scalar(total_calls)),
         machines_per_round=machines_per_round, round_values=round_values,
         ingest=ingest, engine_stats=engine_stats,
         checkpoint_stats=ckpt_stats,
-        fault_stats=engine_stats.fault_stats if engine_stats else None)
+        fault_stats=engine_stats.fault_stats if engine_stats else None,
+        round_walls=round_walls, total_wall_s=t_run1 - t_run0)
+    if tracer is not None:
+        result.manifest = _build_run_manifest(cfg, result, n, d, source,
+                                              streaming, tracer)
+    return result
+
+
+def _build_run_manifest(cfg: TreeConfig, result: TreeResult, n: int, d: int,
+                        source, streaming: bool, tracer):
+    """Assemble the run's :class:`repro.engine.telemetry.RunManifest`,
+    project the stats dataclasses onto the tracer's metrics registry, and
+    write the manifest atomically next to the checkpoints (when a
+    checkpoint directory exists).  The CLI extends the same record with
+    its feasibility / fp32-recheck sections and re-writes it."""
+    if streaming:
+        feat_dtype = np.dtype(source.dtype)
+        narrow = feat_dtype != np.dtype(np.float32)
+        itemsize = dtype_itemsize(feat_dtype) if narrow else 4
+        qcols = source.qcols if narrow else 0
+        label, fingerprint = dtype_label(feat_dtype), source.fingerprint()
+    else:
+        itemsize, qcols, label, fingerprint = 4, 0, "fp32", None
+    manifest = build_manifest(cfg, result, n=n, d=d, dtype_label=label,
+                              itemsize=itemsize, qcols=qcols,
+                              source_fingerprint=fingerprint)
+    feed_result_metrics(tracer.metrics, result)
+    if cfg.checkpoint_dir:
+        manifest.write(os.path.join(cfg.checkpoint_dir, MANIFEST_NAME))
+    return manifest
 
 
 def _finish_result(sel_wide: np.ndarray, sel_mask: np.ndarray, d: int,

@@ -19,6 +19,11 @@ Six layers (see each module's docstring):
   * :mod:`repro.engine.stats` — per-wave trace + overlap accounting, the
     checkpoint-overlap record, and the fault/straggler records, surfaced
     on ``TreeResult``.
+  * :mod:`repro.engine.telemetry` — the unified observation layer: span
+    tracer over every seam above (Chrome trace / JSONL exporters),
+    labelled metrics registry the stats dataclasses feed, and the
+    atomically written ``RunManifest`` + consolidated CLI report
+    formatter.
 """
 from repro.engine.autotune import (AutotuneCache, AutotunePlanner,
                                    FixedWidthPlanner, ScheduledWidthPlanner,
@@ -37,7 +42,13 @@ from repro.engine.scheduler import (ENGINES, EngineConfig, HostWave,
                                     run_waves)
 from repro.engine.stats import (CheckpointStats, EngineStats, FaultEvent,
                                 FaultStats, RoundCheckpoint,
-                                StragglerMonitor, WaveTrace, overlap_ratio)
+                                StragglerMonitor, WaveTrace,
+                                overlap_from_traces, overlap_ratio)
+from repro.engine.telemetry import (MetricsRegistry, RunManifest, SpanEvent,
+                                    Tracer, build_manifest, dtype_label,
+                                    feed_result_metrics, format_report,
+                                    profiler_session, read_jsonl_events,
+                                    top_spans, wave_overlap_from_spans)
 
 __all__ = [
     "ENGINES", "AsyncCheckpointWriter", "AutotuneCache", "AutotunePlanner",
@@ -45,11 +56,14 @@ __all__ = [
     "DroppedFractionExceeded", "EngineConfig", "EngineStats", "FaultEvent",
     "FaultInjector", "FaultPolicy", "FaultProfile", "FaultStats",
     "FaultSupervisor", "FixedWidthPlanner", "HostShard", "HostWave",
-    "IngestionPlan", "PermanentGatherError", "RoundCheckpoint",
-    "ScheduledWidthPlanner", "StragglerMonitor", "TransientIOError",
-    "WavePlanner", "WaveTrace", "bucket_ladder", "clean_stale_tmp",
-    "latest_round_checkpoint", "list_round_checkpoints",
-    "load_round_checkpoint", "overlap_ratio",
-    "run_waves", "shape_bound", "snap_down", "suggest_prefetch_depth",
-    "write_round_checkpoint",
+    "IngestionPlan", "MetricsRegistry", "PermanentGatherError",
+    "RoundCheckpoint", "RunManifest", "ScheduledWidthPlanner", "SpanEvent",
+    "StragglerMonitor", "Tracer", "TransientIOError",
+    "WavePlanner", "WaveTrace", "bucket_ladder", "build_manifest",
+    "clean_stale_tmp", "dtype_label", "feed_result_metrics",
+    "format_report", "latest_round_checkpoint", "list_round_checkpoints",
+    "load_round_checkpoint", "overlap_from_traces", "overlap_ratio",
+    "profiler_session", "read_jsonl_events", "run_waves", "shape_bound",
+    "snap_down", "suggest_prefetch_depth", "top_spans",
+    "wave_overlap_from_spans", "write_round_checkpoint",
 ]

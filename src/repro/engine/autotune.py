@@ -225,6 +225,8 @@ class AutotunePlanner(WavePlanner):
         self.ewma_gather_per_machine: float | None = None
         self.ewma_solve_per_machine: float | None = None
         self._lock = threading.Lock()
+        self.tracer = None                  # set by the driver: rung moves
+        #                                     become "autotune" instants
 
     # -- feedback (solve side) --------------------------------------------
     def _ewma(self, old: float | None, new: float) -> float:
@@ -294,8 +296,19 @@ class AutotunePlanner(WavePlanner):
 
     def next_width(self, remaining: int) -> int:
         with self._lock:
+            j_before = self._j
             j = self._decide()
-            return snap_down(self._ladder, min(self._ladder[j], remaining))
+            width = snap_down(self._ladder, min(self._ladder[j], remaining))
+            cost = self._cost.get(j)
+        # emit outside the lock: the controller's decision is already made
+        # and the tracer has its own lock (avoid nesting the two)
+        if self.tracer is not None and j != j_before:
+            self.tracer.instant(
+                "rung", "autotune", width=self._ladder[j],
+                prev_width=self._ladder[j_before],
+                direction=("up" if j > j_before else "down"),
+                **({} if cost is None else {"cost_per_machine": cost}))
+        return width
 
     def gather_rate(self) -> float | None:
         with self._lock:

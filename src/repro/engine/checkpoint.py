@@ -253,9 +253,15 @@ def clean_stale_tmp(d: str) -> list[str]:
 
 
 class AsyncCheckpointWriter:
-    """Background round-checkpoint writer with an explicit write barrier."""
+    """Background round-checkpoint writer with an explicit write barrier.
 
-    def __init__(self, write_fn: Callable[..., None]):
+    ``tracer`` (if given) gets a ``ckpt``-category span per background
+    write (on the writer thread's own track — Perfetto shows it running
+    under the next round's compute) and per non-trivial barrier wait (on
+    the caller's track — the only checkpoint time the round loop paid).
+    """
+
+    def __init__(self, write_fn: Callable[..., None], tracer=None):
         self._write_fn = write_fn
         self._thread: threading.Thread | None = None
         self._pending_round: int | None = None
@@ -263,6 +269,7 @@ class AsyncCheckpointWriter:
         self._write_s: dict[int, float] = {}
         self._wait_s: dict[int, float] = {}
         self._order: list[int] = []
+        self.tracer = tracer
 
     # -- barrier ----------------------------------------------------------
     def _join_pending(self) -> float:
@@ -271,10 +278,14 @@ class AsyncCheckpointWriter:
             return 0.0
         t0 = time.perf_counter()
         self._thread.join()
-        stall = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        stall = t1 - t0
         self._thread = None
         if self._pending_round is not None:
             self._wait_s[self._pending_round] = stall
+            if self.tracer is not None:
+                self.tracer.emit("ckpt-wait", "ckpt", t0, t1,
+                                 round=self._pending_round)
             self._pending_round = None
         return stall
 
@@ -311,7 +322,11 @@ class AsyncCheckpointWriter:
             except BaseException as exc:   # re-raised at the next barrier
                 self._exc = exc
             finally:
-                self._write_s[round_idx] = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                self._write_s[round_idx] = t1 - t0
+                if self.tracer is not None:
+                    self.tracer.emit("ckpt-write", "ckpt", t0, t1,
+                                     round=round_idx)
 
         self._pending_round = round_idx
         self._order.append(round_idx)

@@ -30,6 +30,7 @@ so the engine's overlap measurements reflect hosts working concurrently.
 from __future__ import annotations
 
 import dataclasses
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import TYPE_CHECKING, Callable, Tuple
 
@@ -125,7 +126,8 @@ class IngestionPlan:
 
     def gather(self, idx: np.ndarray, *, with_attrs: bool = False,
                parallel: bool = False,
-               fault_hook: Callable[[HostShard], None] | None = None
+               fault_hook: Callable[[HostShard], None] | None = None,
+               tracer=None, wave: int | None = None,
                ) -> Tuple[np.ndarray, np.ndarray | None, list[int]]:
         """Rows (+ attrs) for global ``idx``, gathered host-by-host.
 
@@ -144,6 +146,11 @@ class IngestionPlan:
         pulling thread just before each host's local gather (exactly where
         a real deployment's RPC to that host would fail), so injected
         errors/latency land per-host, not per-wave.
+
+        ``tracer`` (if given) gets one ``host`` span per host that served
+        rows, on a named ``host-<id>`` track — so a host's gathers line up
+        on one Perfetto lane regardless of which pool thread served them,
+        and host skew within a wave is visible.  ``wave`` labels the spans.
         """
         idx = np.asarray(idx, np.int64).reshape(-1)
         owner_pos = np.searchsorted(self._los, idx, side="right") - 1
@@ -160,10 +167,16 @@ class IngestionPlan:
             if fault_hook is not None:
                 fault_hook(shard)
             local_idx = idx[hit]
+            t0 = time.perf_counter() if tracer is not None else 0.0
             if with_attrs:
                 r, a = shard.source.gather_with_attrs(local_idx)
             else:
                 r, a = shard.source.gather(local_idx), None
+            if tracer is not None:
+                tracer.emit("host-gather", "host", t0, time.perf_counter(),
+                            track=f"host-{shard.host}", host=shard.host,
+                            rows=int(local_idx.size),
+                            **({} if wave is None else {"wave": wave}))
             return pos, hit, r, a
 
         parallel = parallel and len(self.shards) > 1 and all(

@@ -55,7 +55,8 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 
-from repro.engine.stats import EngineStats, WaveTrace, overlap_ratio
+from repro.engine.stats import (EngineStats, WaveTrace, overlap_from_traces,
+                                overlap_ratio)
 
 ENGINES = ("sync", "pipelined")
 
@@ -101,6 +102,7 @@ def run_waves(n_waves: int | None,
               solve: Callable[[int, Any], Any],
               cfg: EngineConfig,
               on_trace: Callable[[WaveTrace], None] | None = None,
+              tracer=None,
               ) -> EngineStats:
     """Drive gather→solve wave pairs under ``cfg.mode``.
 
@@ -117,10 +119,17 @@ def run_waves(n_waves: int | None,
     ``on_trace`` (if given) receives each completed :class:`WaveTrace` on
     the caller thread, in wave order, *before* the next solve starts —
     the autotuner's feedback point.
+
+    ``tracer`` (a :class:`repro.engine.telemetry.Tracer`, or None) gets a
+    gather span and a solve span per wave — emitted from the thread that
+    did the work, so producer and consumer land on separate tracks — plus
+    ``stall`` spans for semaphore-block / queue-wait backpressure.
+    Telemetry is observation only: the engine's scheduling decisions and
+    outputs are identical with or without it.
     """
     if cfg.mode == "sync":
-        return _run_sync(n_waves, gather, solve, cfg, on_trace)
-    return _run_pipelined(n_waves, gather, solve, cfg, on_trace)
+        return _run_sync(n_waves, gather, solve, cfg, on_trace, tracer)
+    return _run_pipelined(n_waves, gather, solve, cfg, on_trace, tracer)
 
 
 def _block(x) -> None:
@@ -132,16 +141,20 @@ def _finalize(engine: str, cfg: EngineConfig, traces: list[WaveTrace],
               wall_s: float, max_live: int) -> EngineStats:
     g = sum(t.gather_s for t in traces)
     s = sum(t.solve_s for t in traces)
+    # overlap is recomputed from the waves' t_start/t_end timestamps (the
+    # reconstruction a trace-file consumer performs); the pre-timestamp
+    # formula survives as EngineStats.overlap_ratio_legacy for cross-check
+    span_wall, span_overlap = overlap_from_traces(traces)
     return EngineStats(
         engine=engine, hosts=cfg.hosts, waves=len(traces), wall_s=wall_s,
         gather_s=g, solve_s=s,
         bytes_moved=sum(t.bytes_moved for t in traces),
-        overlap_ratio=overlap_ratio(g, s, wall_s) if engine == "pipelined"
-        else 0.0,
-        max_in_flight=max_live, traces=traces)
+        overlap_ratio=span_overlap if engine == "pipelined" else 0.0,
+        max_in_flight=max_live, traces=traces, span_wall_s=span_wall)
 
 
-def _run_sync(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
+def _run_sync(n_waves, gather, solve, cfg, on_trace, tracer=None
+              ) -> EngineStats:
     """The bit-identity reference: gather and solve strictly serialized."""
     traces: list[WaveTrace] = []
     t_start = time.perf_counter()
@@ -155,10 +168,16 @@ def _run_sync(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
         t1 = time.perf_counter()
         _block(solve(i, hw.payload))
         t2 = time.perf_counter()
+        if tracer is not None:
+            tracer.emit("gather", "wave", t0, t1, wave=i,
+                        machines=hw.machines, rows=hw.rows,
+                        bytes=hw.bytes_moved)
+            tracer.emit("solve", "wave", t1, t2, wave=i,
+                        machines=hw.machines)
         traces.append(WaveTrace(
             wave=i, machines=hw.machines, rows=hw.rows,
             bytes_moved=hw.bytes_moved, gather_s=t1 - t0, solve_s=t2 - t1,
-            per_host_rows=hw.per_host_rows))
+            per_host_rows=hw.per_host_rows, t_start=t0, t_end=t2))
         if on_trace is not None:
             on_trace(traces[-1])
         i += 1
@@ -194,7 +213,8 @@ _DONE = object()   # producer → consumer: no more waves (dynamic mode)
 _FAILED = object()  # producer → consumer: exception parked in the slot
 
 
-def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
+def _run_pipelined(n_waves, gather, solve, cfg, on_trace, tracer=None
+                   ) -> EngineStats:
     """Double-buffered engine: wave t+1 gathers while wave t solves."""
     out: queue.Queue = queue.Queue(maxsize=max(1, cfg.max_in_flight - 1))
     abort = threading.Event()
@@ -216,30 +236,46 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
                 continue
         return False
 
+    _IDLE = (0.0, 0.0, 0.0)  # (t_gather0, t_gather1, stall) for sentinels
+
     def produce():
         try:
             i = 0
             while n_waves is None or i < n_waves:
                 # backpressure: a wave's buffer is born here and freed by
-                # the consumer only after its payload reached the device
+                # the consumer only after its payload reached the device.
+                # Time spent blocked on the semaphore is the producer-side
+                # stall — the device is the bottleneck while it grows.
+                ts0 = time.perf_counter()
                 if not gauge.acquire(abort):
                     raise _Abort
                 t0 = time.perf_counter()
+                stall = t0 - ts0
                 hw = gather(i)
-                dt = time.perf_counter() - t0
+                t1 = time.perf_counter()
+                dt = t1 - t0
                 if hw is None:
                     assert n_waves is None, f"gather({i}) None mid-count"
                     gauge.release()
                     break
-                if not _put((i, hw, dt)):
+                if tracer is not None:
+                    if stall > 0.0:
+                        tracer.emit("sem-block", "stall", ts0, t0, wave=i,
+                                    side="producer")
+                    tracer.metrics.histogram(
+                        "scheduler.stall_s", side="producer").observe(stall)
+                    tracer.emit("gather", "wave", t0, t1, wave=i,
+                                machines=hw.machines, rows=hw.rows,
+                                bytes=hw.bytes_moved)
+                if not _put((i, hw, dt, (t0, t1, stall))):
                     raise _Abort
                 i += 1
-            _put((_DONE, None, 0.0))
+            _put((_DONE, None, 0.0, _IDLE))
         except _Abort:
             pass
         except BaseException as exc:  # surface source errors on the caller
             exc_slot.append(exc)
-            _put((_FAILED, None, 0.0))
+            _put((_FAILED, None, 0.0, _IDLE))
 
     producer = threading.Thread(target=produce, name="wave-prefetch",
                                 daemon=True)
@@ -249,7 +285,12 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
     try:
         expect = 0
         while True:
-            i, hw, gather_s = out.get()
+            # consumer-side stall: waiting for the producer to deliver the
+            # next gathered wave — the gather is the bottleneck while it
+            # grows (for wave 0 this is the unavoidable pipeline fill, g0)
+            tw0 = time.perf_counter()
+            i, hw, gather_s, (g0, g1, p_stall) = out.get()
+            tw1 = time.perf_counter()
             if i is _FAILED:
                 raise exc_slot[0]
             if i is _DONE:
@@ -262,10 +303,19 @@ def _run_pipelined(n_waves, gather, solve, cfg, on_trace) -> EngineStats:
             gauge.release()
             _block(handle)
             t2 = time.perf_counter()
+            if tracer is not None:
+                if tw1 > tw0:
+                    tracer.emit("queue-wait", "stall", tw0, tw1, wave=i,
+                                side="consumer")
+                tracer.metrics.histogram(
+                    "scheduler.stall_s", side="consumer").observe(tw1 - tw0)
+                tracer.emit("solve", "wave", t1, t2, wave=i,
+                            machines=hw.machines)
             traces.append(WaveTrace(
                 wave=i, machines=hw.machines, rows=hw.rows,
                 bytes_moved=hw.bytes_moved, gather_s=gather_s,
-                solve_s=t2 - t1, per_host_rows=hw.per_host_rows))
+                solve_s=t2 - t1, per_host_rows=hw.per_host_rows,
+                t_start=g0, t_end=t2, stall_s=p_stall + (tw1 - tw0)))
             if on_trace is not None:
                 on_trace(traces[-1])
             expect += 1

@@ -26,7 +26,16 @@ import time
 
 @dataclasses.dataclass
 class WaveTrace:
-    """Accounting for one dispatched ingestion wave."""
+    """Accounting for one dispatched ingestion wave.
+
+    ``t_start``/``t_end`` are raw ``time.perf_counter()`` readings — the
+    wave's gather begin and solve end on the shared monotonic clock — so
+    wave ordering and cross-wave overlap can be reconstructed post-hoc
+    (durations alone cannot place waves on a timeline).  ``stall_s`` is
+    honest backpressure: producer time blocked on the 2-buffer semaphore
+    plus consumer time waiting on the queue (0 for the sync engine, where
+    neither wait exists).
+    """
     wave: int                   # wave index (fold order)
     machines: int               # machine blocks in this wave (≤ W)
     rows: int                   # candidate rows materialized (machines · μ)
@@ -34,6 +43,9 @@ class WaveTrace:
     gather_s: float             # host: source read + block assembly
     solve_s: float              # device: upload + dispatch + fold (blocked)
     per_host_rows: list[int] | None = None  # rows served by each ingestion host
+    t_start: float = 0.0        # perf_counter at gather begin
+    t_end: float = 0.0          # perf_counter at solve end
+    stall_s: float = 0.0        # backpressure: sem-block + queue-wait
 
 
 @dataclasses.dataclass
@@ -50,6 +62,18 @@ class EngineStats:
     max_in_flight: int          # high-water mark of live host wave buffers
     traces: list[WaveTrace] = dataclasses.field(default_factory=list)
     fault_stats: "FaultStats | None" = None  # set when supervision was active
+    span_wall_s: float = 0.0    # max(t_end) − min(t_start) over the traces
+    #                             (the wall the span-based overlap uses; 0.0
+    #                             when the engine predates timestamped traces)
+
+    @property
+    def overlap_ratio_legacy(self) -> float:
+        """The pre-timestamp formula, from the engine's measured whole-run
+        ``wall_s``.  Kept as a cross-check on the span-derived ratio: the
+        measured wall includes loop overhead outside any wave span, so
+        ``wall_s ≥ span_wall_s`` and legacy ≤ span-based, with the gap
+        bounded by (loop overhead)/Σgather."""
+        return overlap_ratio(self.gather_s, self.solve_s, self.wall_s)
 
     @property
     def width_trajectory(self) -> list[int]:
@@ -73,6 +97,9 @@ class EngineStats:
             "solve_s": round(self.solve_s, 4),
             "bytes_moved": self.bytes_moved,
             "overlap_ratio": round(self.overlap_ratio, 4),
+            "overlap_ratio_legacy": round(self.overlap_ratio_legacy, 4),
+            "span_wall_s": round(self.span_wall_s, 4),
+            "stall_s": round(sum(t.stall_s for t in self.traces), 4),
             "max_in_flight": self.max_in_flight,
             "width_trajectory": self.width_trajectory,
             "distinct_shapes": self.distinct_shapes,
@@ -283,6 +310,27 @@ class CheckpointStats:
             "hidden_s": round(self.hidden_s, 4),
             "hidden_fraction": round(self.hidden_fraction, 4),
         }
+
+
+def overlap_from_traces(traces: list[WaveTrace]) -> tuple[float, float]:
+    """``(span_wall, overlap_ratio)`` recomputed from the per-wave
+    ``t_start``/``t_end`` timestamps.
+
+    ``span_wall = max(t_end) − min(t_start)`` is the wall the waves
+    themselves occupied, excluding scheduler loop overhead outside any
+    wave — exactly what an exported trace file reconstructs, so
+    ``EngineStats.overlap_ratio`` and ``launch/tracetool.py`` agree to
+    float precision.  Falls back to ``(0, 0)`` for legacy traces that
+    never carried timestamps (all-zero ``t_end``).
+    """
+    stamped = [t for t in traces if t.t_end > 0.0]
+    if not stamped:
+        return 0.0, 0.0
+    span_wall = (max(t.t_end for t in stamped)
+                 - min(t.t_start for t in stamped))
+    g = sum(t.gather_s for t in stamped)
+    s = sum(t.solve_s for t in stamped)
+    return span_wall, overlap_ratio(g, s, span_wall)
 
 
 def overlap_ratio(gather_s: float, solve_s: float, wall_s: float) -> float:

@@ -12,7 +12,9 @@
         [--autotune-cache [PATH]] [--ckpt-delta-every K] \
         [--ckpt-dir DIR --resume] [--fail round:ids] \
         [--fault-profile 'transient=0.3,seed=7,...'] [--fault-retries N] \
-        [--fault-backoff S] [--no-hedge] [--max-dropped-fraction F]
+        [--fault-backoff S] [--no-hedge] [--max-dropped-fraction F] \
+        [--trace-out trace.json] [--metrics-out metrics.json] \
+        [--manifest-out manifest.json] [--profile-dir PROFDIR]
 
 Runs TREE-BASED COMPRESSION over all visible devices (machines sharded via
 shard_map), reports value vs centralized greedy + rounds + oracle calls.
@@ -84,6 +86,18 @@ rows through the whole pipeline, and both comparison columns — centralized
 greedy and two-round RandGreedI — run under the *same* constraint so the
 quality ratios stay honest.  Every reported coreset is re-verified by the
 independent NumPy feasibility checker.
+
+``--trace-out`` / ``--metrics-out`` / ``--manifest-out`` attach the
+unified telemetry layer (:mod:`repro.engine.telemetry`): a span tracer
+over every engine seam exported as Perfetto-loadable Chrome trace JSON,
+the labelled metrics registry snapshot, and the atomically written
+``RunManifest`` (config + source fingerprints, dtype, width trajectory,
+fault replay signature, per-phase walls).  All report lines above are
+formatted *from* the manifest, so console and manifest can never
+disagree; inspect traces with ``python -m repro.launch.tracetool``.
+Telemetry is observation only — outputs stay bit-identical to an
+uninstrumented run.  ``--profile-dir`` additionally brackets the run
+with ``jax.profiler`` start/stop.
 """
 from __future__ import annotations
 
@@ -100,10 +114,12 @@ from repro.core import (STORAGE_DTYPES, ArraySource, ChunkedSource,
                         centralized_greedy, check_feasible,
                         constraint_from_spec, dtype_itemsize,
                         make_submod_mesh, randgreedi, tree_maximize)
+from repro.core.sources import GroundSetSource
 from repro.core.tree import PERMUTATIONS
 from repro.data.selection import fp32_recheck
 from repro.engine import (ENGINES, FaultInjector, FaultPolicy, FaultProfile,
-                          suggest_prefetch_depth)
+                          Tracer, build_manifest, format_report,
+                          profiler_session, suggest_prefetch_depth)
 from repro.data import datasets
 from repro.data.sources import ShardedSource
 
@@ -224,6 +240,21 @@ def main():
     ap.add_argument("--max-dropped-fraction", type=float, default=None,
                     help="Lemma 3.4 degradation budget: abort once the "
                          "dropped row fraction exceeds this")
+    ap.add_argument("--trace-out", default=None,
+                    help="export the run's span stream as Chrome "
+                         "trace_event JSON (loads in Perfetto / "
+                         "chrome://tracing; one lane per thread and per "
+                         "ingestion host)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="export the labelled metrics registry snapshot "
+                         "(counters/gauges/histograms) as JSON")
+    ap.add_argument("--manifest-out", default=None,
+                    help="write the RunManifest JSON here (with --ckpt-dir "
+                         "and telemetry on it is also written next to the "
+                         "checkpoints automatically)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="bracket the run with jax.profiler start/stop and "
+                         "dump the device profile into this directory")
     ap.add_argument("--no-centralized", action="store_true")
     args = ap.parse_args()
 
@@ -289,6 +320,10 @@ def main():
           f"permutation={args.permutation} "
           f"engine={args.engine} hosts={args.hosts} "
           f"constraint={args.constraint or 'none'}")
+    # telemetry: observation only — attaching a tracer never changes the
+    # run's outputs (pinned bit-identical by tests/test_telemetry.py)
+    tracer = (Tracer() if (args.trace_out or args.metrics_out
+                           or args.manifest_out) else None)
     cfg = TreeConfig(k=args.k, capacity=args.capacity,
                      algorithm=args.algorithm, eps=args.eps, seed=args.seed,
                      checkpoint_dir=args.ckpt_dir, resume=args.resume,
@@ -299,59 +334,29 @@ def main():
                      prefetch_depth=args.prefetch_depth,
                      fault_policy=fault_policy,
                      checkpoint_delta_every=args.ckpt_delta_every,
-                     autotune_cache=at_cache)
-    res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
-                        wave_machines=args.wave_machines,
-                        constraint=constraint, attrs=attrs_arg,
-                        fault_injector=injector)
-    print(f"TREE: f={res.value:.6f} rounds={res.rounds} "
-          f"machines/round={res.machines_per_round} "
-          f"oracle_calls={res.oracle_calls}")
-    if res.ingest is not None:
-        ing = res.ingest
-        d_feat = data.shape[1]
-        itemsize = dtype_itemsize(args.dtype)
+                     autotune_cache=at_cache, telemetry=tracer)
+    with profiler_session(args.profile_dir):
+        res = tree_maximize(obj, ground, cfg, mesh=mesh, fail_machines=fail,
+                            wave_machines=args.wave_machines,
+                            constraint=constraint, attrs=attrs_arg,
+                            fault_injector=injector)
+
+    manifest = res.manifest
+    if manifest is None:
+        # telemetry off: the report below is still manifest-driven — build
+        # the same record the instrumented path gets, just don't export it
         qcols = ground.qcols if isinstance(ground, QuantizedSource) else 0
-        # fp32: everything (features + attrs) ships as one fp32 block;
-        # narrow: features at the storage itemsize, attrs + dequant params
-        # as fp32 metadata columns — same accounting _wave_size budgets by
-        row_bytes = d_feat * itemsize + (ing.attr_dim + qcols) * 4
-        fp32_row_bytes = (d_feat + ing.attr_dim) * 4
-        print(f"ingest: W={ing.wave_machines} waves={ing.waves} "
-              f"peak_wave_rows={ing.peak_wave_rows} "
-              f"peak_wave_bytes={ing.peak_wave_bytes} attr_dim={ing.attr_dim} "
-              f"(resident would hold {len(data) * row_bytes} bytes)")
-        print(f"bytes: dtype={args.dtype} itemsize={itemsize} "
-              f"row_bytes={row_bytes} fp32_row_bytes={fp32_row_bytes} "
-              f"saved={1.0 - row_bytes / fp32_row_bytes:.1%} "
-              f"peak_wave_bytes={ing.peak_wave_bytes} "
-              f"total_bytes={ing.total_bytes}")
-    if res.engine_stats is not None:
-        es = res.engine_stats
-        print(f"engine: {es.engine} hosts={es.hosts} "
-              f"wall={es.wall_s:.3f}s gather={es.gather_s:.3f}s "
-              f"solve={es.solve_s:.3f}s overlap={es.overlap_ratio:.2%} "
-              f"bytes={es.bytes_moved} max_in_flight={es.max_in_flight}")
-        if args.wave_autotune:
-            print(f"autotune: widths={es.width_trajectory} "
-                  f"distinct_shapes={es.distinct_shapes}")
-    if res.fault_stats is not None:
-        fs = res.fault_stats
-        print(f"faults: retries={fs.retries} hedges={fs.hedges} "
-              f"hedges_won={fs.hedges_won} evictions={fs.evictions} "
-              f"dropped_waves={fs.dropped_waves} "
-              f"dropped_rows={fs.dropped_rows}/{fs.total_rows} "
-              f"dropped_fraction={fs.dropped_fraction:.4f} "
-              f"recovered={fs.recovered_s:.3f}s backoff={fs.backoff_s:.3f}s")
-    if res.checkpoint_stats is not None:
-        ck = res.checkpoint_stats
-        print(f"checkpoint: {ck.mode} rounds={len(ck.rounds)} "
-              f"write={ck.write_s:.3f}s stalled={ck.wait_s:.3f}s "
-              f"hidden={ck.hidden_fraction:.2%}")
+        fp = (ground.fingerprint()
+              if isinstance(ground, GroundSetSource) else None)
+        manifest = build_manifest(cfg, res, n=len(data), d=data.shape[1],
+                                  dtype_label=args.dtype,
+                                  itemsize=dtype_itemsize(args.dtype),
+                                  qcols=qcols, source_fingerprint=fp)
+    manifest.run["dataset"] = args.dataset
+
     if constraint is not None:
         ok, detail = check_feasible(constraint, res.sel_attrs, res.sel_mask)
-        print(f"feasibility: {'OK' if ok else 'VIOLATED'} ({detail})")
-        assert ok
+        manifest.feasibility = {"ok": bool(ok), "detail": detail}
     if args.dtype != "fp32":
         # Barbosa-style exact validation: re-gather the selection from the
         # unquantized parent at fp32 and re-score with the exact objective
@@ -359,9 +364,27 @@ def main():
                           solve_value=res.value)
         rel = abs(rc.value - res.value) / max(abs(rc.value), 1e-12)
         status = "PASS" if np.isfinite(rc.value) and rel < 5e-2 else "FAIL"
-        print(f"recheck: fp32={rc.value:.6f} solve={res.value:.6f} "
-              f"rel_gap={rel:.2e} {status}")
-        assert status == "PASS", (rc.value, res.value)
+        manifest.recheck = {"fp32": float(rc.value),
+                            "solve": float(res.value),
+                            "rel_gap": float(rel), "status": status}
+
+    # every grep-able report line (TREE/ingest/bytes/engine/autotune/
+    # faults/checkpoint/feasibility/recheck) formats from the one manifest
+    for line in format_report(manifest):
+        print(line)
+
+    if tracer is not None:
+        if args.trace_out:
+            tracer.export_chrome_trace(args.trace_out)
+        if args.metrics_out:
+            tracer.metrics.export_json(args.metrics_out)
+    if args.manifest_out:
+        manifest.write(args.manifest_out)
+
+    if manifest.feasibility is not None:
+        assert manifest.feasibility["ok"], manifest.feasibility["detail"]
+    if manifest.recheck is not None:
+        assert manifest.recheck["status"] == "PASS", manifest.recheck
     if not args.no_centralized:
         # non-resident runs stream the centralized column too (chunked lazy
         # greedy) — nothing in the comparison needs the all-resident array.
