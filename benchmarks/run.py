@@ -14,15 +14,16 @@
   faults   — fault supervision: retries/eviction/drops    (PR 6)
   bytes_lean — quantized wave streaming, dtype ladder     (PR 7)
   telemetry — tracer overhead: off vs instrumented run    (PR 8)
+  serve    — selection-service latency + delta vs rebuild (PR 9)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
 ``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``, ``adaptive``
 writes ``BENCH_PR5.json``, ``faults`` writes ``BENCH_PR6.json``,
 ``bytes_lean`` writes ``BENCH_PR7.json``, ``telemetry`` writes
-``BENCH_PR8.json``; everything else goes to
-``BENCH_PR1.json`` (repo root).  ``--only bytes_lean`` is the PR 7
-refresh.
+``BENCH_PR8.json``, ``serve`` writes ``BENCH_PR9.json``; everything
+else goes to ``BENCH_PR1.json`` (repo root).  ``--only bytes_lean`` is
+the PR 7 refresh.
 """
 import argparse
 import json
@@ -39,6 +40,7 @@ BENCH_PR5_JSON = os.path.join(_ROOT, "BENCH_PR5.json")
 BENCH_PR6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
 BENCH_PR7_JSON = os.path.join(_ROOT, "BENCH_PR7.json")
 BENCH_PR8_JSON = os.path.join(_ROOT, "BENCH_PR8.json")
+BENCH_PR9_JSON = os.path.join(_ROOT, "BENCH_PR9.json")
 
 
 def main() -> None:
@@ -53,8 +55,9 @@ def main() -> None:
                             engine_overlap, fault_engine,
                             fault_tolerance_bench,
                             fig2_capacity, fig2_large_scale, kernel_bench,
-                            table1_complexity, table3_relative_error,
-                            telemetry_overhead, tree_scaling)
+                            serve_latency, table1_complexity,
+                            table3_relative_error, telemetry_overhead,
+                            tree_scaling)
     suites = {
         "table1": table1_complexity.run,
         "table3": table3_relative_error.run,
@@ -69,6 +72,7 @@ def main() -> None:
         "faults": fault_engine.run,
         "bytes_lean": bytes_lean.run,
         "telemetry": telemetry_overhead.run,
+        "serve": serve_latency.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
@@ -77,7 +81,8 @@ def main() -> None:
                "adaptive": (BENCH_PR5_JSON, 5),
                "faults": (BENCH_PR6_JSON, 6),
                "bytes_lean": (BENCH_PR7_JSON, 7),
-               "telemetry": (BENCH_PR8_JSON, 8)}
+               "telemetry": (BENCH_PR8_JSON, 8),
+               "serve": (BENCH_PR9_JSON, 9)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

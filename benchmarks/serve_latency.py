@@ -1,0 +1,155 @@
+"""Selection-service latency benchmark (PR 9): resident-tree serving.
+
+Measures the steady-state request path of :class:`SelectionService` on a
+resident session: one ingest through the wave engine, then batched fused
+launches answer a knapsack-constrained request stream whose budgets and
+seeds vary per request — dynamic constraint params and request seeds ride
+as operands, so the warm compile cache serves every batch of a given
+bucket from one traced program.
+
+Cells:
+
+  * ``latency`` — per-batch wall over repeats for batch sizes {1, 4, 16}:
+    p50 / p95 latency and requests-per-second.  The first call at each
+    bucket pays trace+compile (``cold_s``); subsequent calls ride the
+    cache (``warm_p50_s``).  The acceptance gate is warm ≥ 5× faster
+    than first-compile — the whole point of the resident server over
+    re-tracing per request.
+  * ``delta_vs_rebuild`` — ≤ 10% churn, *localized*: the full membership
+    of a few machines turns over (the session is sized to exact capacity
+    so replacement inserts land back in the freed machines).
+    ``apply_delta`` + re-query re-solves only those machines against
+    ``rebuild`` + re-query (full re-ingest + full round-0 re-solve +
+    log replay).  Block-local must win; uniformly scattered churn would
+    not — touching one item on every machine dirties every block, which
+    is exactly why the cell pins the localized case the subsystem is
+    built for.
+
+Record lands in ``BENCH_PR9.json`` via ``benchmarks/run.py --only serve``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Timer
+from repro.core import ArraySource, TreeConfig
+from repro.serve import SelectionRequest, SelectionService, ingest
+
+WARM_SPEEDUP_FLOOR = 5.0        # first-compile wall / warm p50 wall
+BATCH_SIZES = (1, 4, 16)
+
+
+def _requests(rng, attrs, k, count, tag):
+    """Knapsack requests with per-request budget and seed: same fuse key,
+    different dynamic params — the steady-state warm-cache workload."""
+    w_mean = float(attrs[:, 0].mean())
+    out = []
+    for i in range(count):
+        budget = 0.5 * k * w_mean * float(rng.uniform(0.8, 1.2))
+        out.append(SelectionRequest(k=k, seed=tag * 10_000 + i,
+                                    constraint=f"knapsack:budget={budget:.5f}"))
+    return out
+
+
+def _quantiles(walls):
+    a = np.asarray(walls, np.float64)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 95))
+
+
+def run(quick: bool = True):
+    # n = L·mu exactly: zero free slots, so delta inserts refill exactly
+    # the machines their paired deletes vacated (localized churn cell)
+    L, d = (63, 16) if quick else (80, 32)
+    k, mu, n_eval = (8, 64, 128) if quick else (16, 256, 512)
+    n = L * mu
+    iters = 10 if quick else 20
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((n, d)).astype(np.float32)
+    attrs = rng.uniform(0.2, 1.0, (n, 1)).astype(np.float32)
+    E = data[rng.choice(n, n_eval, replace=False)]
+
+    cfg = TreeConfig(k=k, capacity=mu, seed=3)
+    with Timer() as t:
+        st = ingest(ArraySource(data), cfg, attrs=attrs)
+    ingest_s = t.s
+    svc = SelectionService(st, E)
+    print(f"serve,ingest,n={n},Mp={st.Mp},mu={mu},wall={ingest_s:.3f}s")
+
+    latency = {}
+    for B in BATCH_SIZES:
+        walls = []
+        for it in range(iters):
+            reqs = _requests(rng, attrs, k, B, tag=B * 100 + it)
+            with Timer() as t:
+                res = svc.serve(reqs)
+            walls.append(t.s)
+            assert all(r.feasible for r in res)
+        cold, warm = walls[0], walls[1:]
+        p50, p95 = _quantiles(warm)
+        cell = {"batch": B, "iters": iters,
+                "cold_s": round(cold, 4),
+                "warm_p50_s": round(p50, 4), "warm_p95_s": round(p95, 4),
+                "req_per_s": round(B / p50, 2),
+                "warm_speedup": round(cold / p50, 1)}
+        latency[str(B)] = cell
+        print(f"serve,latency,batch={B},cold={cold:.3f}s,p50={p50:.4f}s,"
+              f"p95={p95:.4f}s,req/s={cell['req_per_s']:.1f},"
+              f"speedup={cell['warm_speedup']:.1f}x")
+    best = max(c["warm_speedup"] for c in latency.values())
+    assert best >= WARM_SPEEDUP_FLOOR, latency
+
+    # -- delta vs rebuild: localized churn over a few machines ----------
+    n_machines = 3                                # 3/L of the ground set
+    churn = n_machines * mu
+    probe = SelectionRequest(k=k, constraint=f"knapsack:budget={0.5 * k:.4f}")
+    next_m = 0
+
+    def _delta():
+        nonlocal next_m
+        ms = range(next_m, next_m + n_machines)
+        next_m += n_machines
+        ids = [int(i) for m in ms for i in st.item_ids[m][st.valid[m]]]
+        rows = data[rng.choice(n, len(ids), replace=False)] * np.float32(0.9)
+        a2 = rng.uniform(0.2, 1.0, (len(ids), 1)).astype(np.float32)
+        return svc.apply_delta(insert_rows=rows, insert_attrs=a2,
+                               delete_ids=ids)
+
+    # warm both paths (partial-resolve entry + post-rebuild full solve)
+    _delta(); svc.query(probe)
+    st.rebuild(); svc._sync_geometry(); svc.query(probe)
+
+    repeats = 3
+    delta_walls, rebuild_walls, rep = [], [], None
+    for _ in range(repeats):
+        with Timer() as t:
+            rep = _delta()
+            svc.query(probe)
+        delta_walls.append(t.s)
+        with Timer() as t:
+            st.rebuild()
+            svc._sync_geometry()
+            svc.query(probe)
+        rebuild_walls.append(t.s)
+    delta_s, rebuild_s = min(delta_walls), min(rebuild_walls)
+    assert len(rep.changed_machines) <= n_machines + 1, rep
+    cell = {"churn_frac": round(churn / n, 3),
+            "changed_machines": len(rep.changed_machines), "Mp": st.Mp,
+            "delta_query_s": round(delta_s, 4),
+            "rebuild_query_s": round(rebuild_s, 4),
+            "speedup": round(rebuild_s / delta_s, 2)}
+    print(f"serve,delta,churn={cell['churn_frac']:.1%},"
+          f"changed={cell['changed_machines']}/{st.Mp},"
+          f"delta={delta_s:.3f}s,rebuild={rebuild_s:.3f}s,"
+          f"speedup={cell['speedup']:.2f}x")
+    assert delta_s < rebuild_s, cell
+
+    stats = svc.serve_stats()
+    return {"latency": latency, "delta_vs_rebuild": cell,
+            "ingest_s": round(ingest_s, 3),
+            "cache": {"keys": stats["cache_keys"],
+                      "compiles": stats["compiles"],
+                      "steady_retraces": stats["steady_retraces"]}}
+
+
+if __name__ == "__main__":
+    run()

@@ -5,12 +5,14 @@ from repro.core.algorithms import (SelectResult, greedy, run_algorithm,
 from repro.core.baselines import (BaselineResult, centralized_greedy,
                                   randgreedi, random_subset,
                                   streaming_centralized_greedy)
-from repro.core.constraints import (Intersection, Knapsack, PartitionMatroid,
+from repro.core.constraints import (DynamicKnapsack, DynamicPartitionMatroid,
+                                    Intersection, Knapsack, PartitionMatroid,
                                     Unconstrained, attr_dim, check_feasible,
                                     constraint_from_spec)
 from repro.core.distributed import RoundResult, make_submod_mesh, run_round
 from repro.core.objectives import (ActiveSetSelection, ExemplarClustering,
-                                   FacilityLocation, WeightedCoverage)
+                                   FacilityLocation, WeightedCoverage,
+                                   WeightedExemplarClustering)
 from repro.core.partition import balanced_partition, gather_partition, n_parts
 from repro.core.permute import FeistelPermutation, feistel_slot_items
 from repro.core.sources import (STORAGE_DTYPES, ArraySource, ChunkedSource,
@@ -25,10 +27,12 @@ __all__ = [
     "run_algorithm", "BaselineResult", "centralized_greedy", "randgreedi",
     "random_subset", "streaming_centralized_greedy",
     "Unconstrained", "Knapsack", "PartitionMatroid",
+    "DynamicKnapsack", "DynamicPartitionMatroid",
     "Intersection", "attr_dim", "check_feasible", "constraint_from_spec",
     "RoundResult", "make_submod_mesh", "run_round",
     "ActiveSetSelection", "ExemplarClustering", "FacilityLocation",
-    "WeightedCoverage", "balanced_partition", "gather_partition", "n_parts",
+    "WeightedCoverage", "WeightedExemplarClustering",
+    "balanced_partition", "gather_partition", "n_parts",
     "FeistelPermutation", "feistel_slot_items",
     "ArraySource", "ChunkedSource", "GroundSetSource", "QuantizedSource",
     "STORAGE_DTYPES", "SlicedSource", "as_source", "dtype_itemsize",

@@ -27,7 +27,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.constraints import (Intersection, Knapsack, PartitionMatroid,
+from repro.core.constraints import (DynamicKnapsack, DynamicPartitionMatroid,
+                                    Intersection, Knapsack, PartitionMatroid,
                                     Unconstrained)
 
 NEG_INF = -1e30
@@ -88,22 +89,32 @@ def _fused_parts(constraint) -> tuple | None:
     (masks AND = the scan's conjunction).  Anything else — duplicated
     classes (two knapsacks need two scalars the kernel doesn't carry),
     nested intersections, custom constraints — returns None.
+
+    The Dynamic* variants (traced per-request parameters, serve layer)
+    count as their static family: same encoding, the parameter simply
+    rides as an operand instead of a compile-time constant (the kernel
+    wrapper dispatches traced parameters to the fused reference impl).
     """
     parts = (constraint.parts if isinstance(constraint, Intersection)
              else (constraint,))
-    kinds = [type(p) for p in parts]
-    if not set(kinds) <= {Knapsack, PartitionMatroid}:
+    n_knap = sum(isinstance(p, _KNAPSACK_KINDS) for p in parts)
+    n_part = sum(isinstance(p, _PARTITION_KINDS) for p in parts)
+    if n_knap + n_part != len(parts):
         return None
-    if kinds.count(Knapsack) > 1 or kinds.count(PartitionMatroid) > 1:
+    if n_knap > 1 or n_part > 1:
         return None
     return parts
+
+
+_KNAPSACK_KINDS = (Knapsack, DynamicKnapsack)
+_PARTITION_KINDS = (PartitionMatroid, DynamicPartitionMatroid)
 
 
 def _fused_constraint_kwargs(constraint, attrs) -> dict:
     """``fused_select`` operands for a fused-encodable constraint."""
     kw = {}
     for p in _fused_parts(constraint):
-        if isinstance(p, Knapsack):
+        if isinstance(p, _KNAPSACK_KINDS):
             kw["weights"] = attrs[:, p.col]
             kw["budget"] = p.budget
         else:
@@ -132,8 +143,9 @@ def _fusable(obj, constraint, attrs) -> bool:
     parts = _fused_parts(constraint)
     if parts is None or attrs is None:
         return False
-    flags = {Knapsack: "fused_knapsack", PartitionMatroid: "fused_partition"}
-    return all(getattr(obj, flags[type(p)], False) for p in parts)
+    return all(getattr(obj, "fused_knapsack"
+                       if isinstance(p, _KNAPSACK_KINDS)
+                       else "fused_partition", False) for p in parts)
 
 
 def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,

@@ -138,6 +138,84 @@ class PartitionMatroid:
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
+class DynamicKnapsack:
+    """:class:`Knapsack` with the budget as a *traced* pytree child.
+
+    The static classes above carry their parameters in pytree aux_data, so
+    a jitted solve specializes on the parameter values — correct for the
+    offline tree (one constraint per run), wrong for a server answering
+    per-request budgets (every new budget would retrace).  Here the budget
+    is a child: requests with different budgets share one trace, keyed only
+    by constraint *class* (the serve compile-cache contract).  Same
+    feasibility test, same update order, same NumPy checker bar, so a
+    selection under ``DynamicKnapsack(b)`` is bit-identical to one under
+    ``Knapsack(float(b))``.
+    """
+
+    budget: jax.Array  # () fp32 — traced
+    col: int = 0
+
+    def tree_flatten(self):
+        return (self.budget,), (self.col,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def init_state(self):
+        return jnp.float32(0.0)
+
+    def feasible(self, cstate, attrs):
+        return cstate + attrs[:, self.col] <= self.budget + KNAPSACK_TOL
+
+    def update(self, cstate, attrs, idx):
+        return cstate + attrs[idx, self.col]
+
+    def check_np(self, attrs: np.ndarray, mask: np.ndarray) -> tuple[bool, str]:
+        return Knapsack(float(np.asarray(self.budget)),
+                        self.col).check_np(attrs, mask)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DynamicPartitionMatroid:
+    """:class:`PartitionMatroid` with per-group caps as a *traced* child.
+
+    ``caps`` is a (G,) int32 array; the group count G stays static (it is a
+    shape), so requests retraces only on a new number of groups, never on
+    new cap values.  Bit-identical selections to the static class for equal
+    parameters (same feasibility/update arithmetic).
+    """
+
+    caps: jax.Array  # (G,) int32 — traced values, static length
+    col: int = 0
+
+    def tree_flatten(self):
+        return (self.caps,), (self.col,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux)
+
+    def init_state(self):
+        return jnp.zeros((self.caps.shape[0],), jnp.int32)
+
+    def feasible(self, cstate, attrs):
+        gid = attrs[:, self.col].astype(jnp.int32)
+        caps = jnp.asarray(self.caps, jnp.int32)
+        return cstate[gid] < caps[gid]
+
+    def update(self, cstate, attrs, idx):
+        gid = attrs[idx, self.col].astype(jnp.int32)
+        return cstate.at[gid].add(1)
+
+    def check_np(self, attrs: np.ndarray, mask: np.ndarray) -> tuple[bool, str]:
+        caps = tuple(int(c) for c in np.asarray(self.caps))
+        return PartitionMatroid(caps, self.col).check_np(attrs, mask)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
 class Intersection:
     """Intersection of hereditary constraints is hereditary."""
 

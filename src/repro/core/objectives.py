@@ -66,17 +66,26 @@ class ExemplarClustering:
     def tree_unflatten(cls, aux, children):
         return cls(children[0], *aux)
 
+    # -- reweighting hooks (WeightedExemplarClustering overrides) ---------
+    def _ew(self) -> jax.Array | None:
+        """Eval-column weights for the gain kernels (None = unweighted)."""
+        return None
+
+    def _mean_score(self, cm: jax.Array) -> jax.Array:
+        """Reduction of cur_min to the loss L — the (possibly weighted) mean."""
+        return jnp.mean(cm)
+
     # -- oracle interface ------------------------------------------------
     def init_state(self, T: jax.Array, mask: jax.Array) -> dict[str, Any]:
         del T, mask
         cur_min = jnp.sum(self.eval_set * self.eval_set, axis=-1)  # d(e, e0)
-        return {"cur_min": cur_min, "base": jnp.mean(cur_min)}
+        return {"cur_min": cur_min, "base": self._mean_score(cur_min)}
 
     def gains(self, state, T: jax.Array, mask: jax.Array) -> jax.Array:
         import jax.numpy as _jnp
         cd = _jnp.bfloat16 if self.score_dtype == "bfloat16" else None
         g = kops.exemplar_gains(T, self.eval_set, state["cur_min"],
-                                compute_dtype=cd)
+                                compute_dtype=cd, eval_weights=self._ew())
         return _masked(g, mask)
 
     def update(self, state, T: jax.Array, idx: jax.Array):
@@ -85,7 +94,7 @@ class ExemplarClustering:
         return {"cur_min": jnp.minimum(state["cur_min"], d2), "base": state["base"]}
 
     def value(self, state) -> jax.Array:
-        return state["base"] - jnp.mean(state["cur_min"])
+        return state["base"] - self._mean_score(state["cur_min"])
 
     # -- fused selection hook (algorithms.greedy fast path) ---------------
     def fused_select(self, T: jax.Array, mask: jax.Array, k: int,
@@ -120,8 +129,8 @@ class ExemplarClustering:
         sel_idx, cur_min = kops.greedy_select(
             T, self.eval_set, state["cur_min"], mask, k, compute_dtype=cd,
             weights=weights, budget=budget, group_ids=group_ids, caps=caps,
-            x_scale=x_scale, x_zp=x_zp)
-        value = state["base"] - jnp.mean(cur_min)
+            x_scale=x_scale, x_zp=x_zp, eval_weights=self._ew())
+        value = state["base"] - self._mean_score(cur_min)
         if weights is None and caps is None:
             # step t evaluates one gain per still-available candidate, and a
             # step succeeds iff any candidate remains — closed-form in n_avail
@@ -168,6 +177,53 @@ class ExemplarClustering:
         e0 = jnp.sum(self.eval_set * self.eval_set, axis=-1)  # (n_eval,)
         cur = jnp.minimum(e0, jnp.min(d2, axis=-1))
         return jnp.mean(e0) - jnp.mean(cur)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class WeightedExemplarClustering(ExemplarClustering):
+    """Query-reweighted exemplar clustering (serve layer, ROADMAP item 1).
+
+    Identical to :class:`ExemplarClustering` except every mean over the
+    evaluation set becomes a *weighted* mean:
+
+        L_w(S) = (1/m) Σ_j w_j · min_{v∈S∪{e0}} ||e_j - v||²
+        f_w(S) = L_w({e0}) - L_w(S ∪ {e0})
+
+    ``eval_weights`` (m,) is a pytree *child* — a traced operand, not a
+    static attribute — so a jitted solve retraces for new weight *shapes*
+    only, never new weight *values* (the serve compile-cache contract).
+
+    Bit-identity pin (tests/test_serve.py): with ``w_j = 1.0`` exactly,
+    every gain, value, and selection is bit-identical to the unweighted
+    objective — the 1.0-multiply is IEEE-exact and the reduction order in
+    the kernels is unchanged.  Uniform *normalized* weights (1/m) would
+    NOT be bit-identical (different float rounding), which is why the
+    serve layer normalizes query relevance to mean 1, not sum 1.
+    """
+
+    eval_weights: jax.Array | None = None  # (n_eval,) — traced, mean ≈ 1
+
+    def tree_flatten(self):
+        return (self.eval_set, self.eval_weights), (self.score_dtype,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], *aux, eval_weights=children[1])
+
+    def _ew(self) -> jax.Array | None:
+        return self.eval_weights
+
+    def _mean_score(self, cm: jax.Array) -> jax.Array:
+        return jnp.mean(self.eval_weights * cm)
+
+    def evaluate(self, S: jax.Array, s_mask: jax.Array) -> jax.Array:
+        """f_w(S) for a (m, d) block of selected rows with validity mask."""
+        d2 = kops.pairwise_sqdist(self.eval_set, S)           # (n_eval, m)
+        d2 = jnp.where(s_mask[None, :], d2, jnp.inf)
+        e0 = jnp.sum(self.eval_set * self.eval_set, axis=-1)  # (n_eval,)
+        cur = jnp.minimum(e0, jnp.min(d2, axis=-1))
+        return self._mean_score(e0) - self._mean_score(cur)
 
 
 @jax.tree_util.register_pytree_node_class

@@ -60,9 +60,10 @@ def dtype_label(dtype) -> str:
     name = np.dtype(dtype).name
     return _DTYPE_LABELS.get(name, name)
 
-# span categories the engine emits (tracetool groups by these)
+# span categories the engine emits (tracetool groups by these); "serve" is
+# the selection-service track (per-request/per-batch spans, repro.serve)
 CATEGORIES = ("wave", "host", "fault", "autotune", "ckpt", "round", "run",
-              "stall")
+              "stall", "serve")
 
 
 # ---------------------------------------------------------------------------
@@ -443,6 +444,9 @@ class RunManifest:
     phases: dict = dataclasses.field(default_factory=dict)
     feasibility: dict | None = None
     recheck: dict | None = None
+    serve: dict | None = None               # selection-service counters
+    #                                         (requests/batches/latency/
+    #                                         compile-cache/deltas)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -643,6 +647,21 @@ def format_report(m: RunManifest) -> list[str]:
         lines.append(f"recheck: fp32={rc['fp32']:.6f} "
                      f"solve={rc['solve']:.6f} "
                      f"rel_gap={rc['rel_gap']:.2e} {rc['status']}")
+    if m.serve is not None:
+        sv = m.serve
+        lines.append(
+            f"serve: requests={sv['requests']} batches={sv['batches']} "
+            f"p50_ms={sv['latency_p50_ms']:.3f} "
+            f"p95_ms={sv['latency_p95_ms']:.3f} "
+            f"qdepth_max={sv['queue_depth_max']}")
+        lines.append(
+            f"serve: compile-cache keys={sv['cache_keys']} "
+            f"compiles={sv['compiles']} hits={sv['cache_hits']} "
+            f"steady_retraces={sv['steady_retraces']}")
+        lines.append(
+            f"serve: deltas={sv['deltas']} "
+            f"changed_machines={sv['changed_machines']} "
+            f"rebuilds={sv['rebuilds']}")
     return lines
 
 

@@ -29,10 +29,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(x_ref, e_ref, cm_ref, *rest, quantized: bool = False):
+def _kernel(x_ref, e_ref, cm_ref, *rest, quantized: bool = False,
+            weighted: bool = False):
     it = iter(rest)
     xs_ref = next(it) if quantized else None
     xz_ref = next(it) if quantized else None
+    ew_ref = next(it) if weighted else None
     out_ref = next(it)
     j = pl.program_id(1)
 
@@ -51,6 +53,10 @@ def _kernel(x_ref, e_ref, cm_ref, *rest, quantized: bool = False):
         x, e, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
     d2 = jnp.maximum(d2, 0.0)
     contrib = jnp.maximum(cm - d2, 0.0)                      # (bn, bm)
+    if weighted:
+        # query-conditioned relevance reweighting (serve layer): one VPU
+        # multiply per tile; zero-padded weight columns stay inert
+        contrib = contrib * ew_ref[...].astype(jnp.float32)
     partial = jnp.sum(contrib, axis=-1, keepdims=True)       # (bn, 1)
 
     @pl.when(j == 0)
@@ -69,6 +75,7 @@ def exemplar_gains_pallas(
     cur_min: jax.Array,  # (m,)             — zero-padded
     x_scale: jax.Array | None = None,  # (n,) per-row dequant scale
     x_zp: jax.Array | None = None,     # (n,) per-row dequant zero-point
+    eval_weights: jax.Array | None = None,  # (m,) eval reweighting, zero-padded
     *,
     bn: int = 256,
     bm: int = 256,
@@ -79,6 +86,7 @@ def exemplar_gains_pallas(
     assert n % bn == 0 and m % bm == 0, (n, bn, m, bm)
     assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
     quantized = x_scale is not None
+    weighted = eval_weights is not None
     grid = (n // bn, m // bm)
 
     in_specs = [
@@ -92,9 +100,12 @@ def exemplar_gains_pallas(
         in_specs.append(pl.BlockSpec((bn, 1), lambda i, j: (i, 0)))
         operands.append(x_scale.astype(jnp.float32)[:, None])
         operands.append(x_zp.astype(jnp.float32)[:, None])
+    if weighted:
+        in_specs.append(pl.BlockSpec((1, bm), lambda i, j: (0, j)))
+        operands.append(eval_weights.astype(jnp.float32)[None, :])
 
     out = pl.pallas_call(
-        functools.partial(_kernel, quantized=quantized),
+        functools.partial(_kernel, quantized=quantized, weighted=weighted),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bn, 1), lambda i, j: (i, 0)),

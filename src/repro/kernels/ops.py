@@ -86,6 +86,7 @@ def exemplar_gains(
     compute_dtype=None,
     x_scale: jax.Array | None = None,
     x_zp: jax.Array | None = None,
+    eval_weights: jax.Array | None = None,
 ) -> jax.Array:
     """Marginal gains for exemplar clustering. See kernels/exemplar_gains.py.
 
@@ -93,11 +94,15 @@ def exemplar_gains(
     int8-stored candidates in-kernel: VMEM holds the narrow rows, gain math
     runs on the fp32 dequantized values (bf16 candidates need no params —
     the upcast is exact).
+
+    ``eval_weights`` (m,) reweights eval columns (query-conditioned serving);
+    ``None`` is the unweighted path, bit-identical to weights of exactly 1.0.
     """
     assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
     if not _use_pallas(impl):
         return ref.exemplar_gains(X, E, cur_min, compute_dtype=compute_dtype,
-                                  x_scale=x_scale, x_zp=x_zp)
+                                  x_scale=x_scale, x_zp=x_zp,
+                                  eval_weights=eval_weights)
     n, m = X.shape[0], E.shape[0]
     bn = min(bn, max(8, n))
     bm = min(bm, max(8, m))
@@ -106,7 +111,10 @@ def exemplar_gains(
     cmp_ = _pad_rows(cur_min, bm)  # zero-pad ⇒ padded columns contribute 0
     xsp = None if x_scale is None else _pad_rows(x_scale.astype(jnp.float32), bn)
     xzp = None if x_zp is None else _pad_rows(x_zp.astype(jnp.float32), bn)
-    raw = exemplar_gains_pallas(Xp, Ep, cmp_, xsp, xzp, bn=bn, bm=bm,
+    # zero-padded weight columns keep padded eval columns inert
+    ewp = (None if eval_weights is None
+           else _pad_rows(eval_weights.astype(jnp.float32), bm))
+    raw = exemplar_gains_pallas(Xp, Ep, cmp_, xsp, xzp, ewp, bn=bn, bm=bm,
                                 interpret=_interpret())
     return raw[:n] / m
 
@@ -145,6 +153,7 @@ def greedy_select(
     caps: tuple[int, ...] | None = None,
     x_scale: jax.Array | None = None,
     x_zp: jax.Array | None = None,
+    eval_weights: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused k-step greedy selection for exemplar clustering.
 
@@ -167,6 +176,13 @@ def greedy_select(
     oversized problems take the reference path (XLA hoists the step-
     invariant contraction, so it degrades gracefully rather than erroring).
     ``impl="pallas"`` overrides the capacity check (tests, experiments).
+
+    ``budget``/``caps`` may be *traced* jax arrays (the serve layer passes
+    per-request constraint parameters as operands to avoid retracing); the
+    Pallas megakernel bakes them in as compile-time statics, so dynamic
+    parameters dispatch to the (tracer-safe) fused reference instead.
+    ``eval_weights`` (m,) reweights eval columns as in
+    :func:`exemplar_gains`; ``None`` is the bit-identical unweighted path.
     """
     assert (weights is None) == (budget is None), "weights and budget pair up"
     assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
@@ -174,12 +190,21 @@ def greedy_select(
     oversized = not _greedy_select_fits_vmem(X.shape[0], E.shape[0],
                                              X.shape[1], bn,
                                              x_itemsize=X.dtype.itemsize)
-    if not _use_pallas(impl) or (impl == "auto" and oversized):
+    dynamic_params = (isinstance(budget, jax.Array)
+                      or isinstance(caps, jax.Array)
+                      or eval_weights is not None)
+    if impl == "pallas" and dynamic_params:
+        raise ValueError("greedy_select: traced budget/caps and eval_weights "
+                         "require the fused reference impl (the Pallas "
+                         "megakernel takes them as compile-time statics)")
+    if not _use_pallas(impl) or (impl == "auto" and (oversized
+                                                    or dynamic_params)):
         return ref.greedy_select(X, E, cur_min, mask, k,
                                  compute_dtype=compute_dtype,
                                  weights=weights, budget=budget,
                                  group_ids=group_ids, caps=caps,
-                                 x_scale=x_scale, x_zp=x_zp)
+                                 x_scale=x_scale, x_zp=x_zp,
+                                 eval_weights=eval_weights)
     n, m = X.shape[0], E.shape[0]
     bn = min(bn, max(8, n))
     bm = min(bm, max(8, m))

@@ -54,17 +54,24 @@ def dequantize_rows(X: jax.Array, x_scale: jax.Array | None = None,
 
 def exemplar_gains(X: jax.Array, E: jax.Array, cur_min: jax.Array,
                    compute_dtype=None, x_scale: jax.Array | None = None,
-                   x_zp: jax.Array | None = None) -> jax.Array:
+                   x_zp: jax.Array | None = None,
+                   eval_weights: jax.Array | None = None) -> jax.Array:
     """Marginal gains of the exemplar-clustering objective.
 
-    gains[i] = (1/m) * sum_j max(0, cur_min[j] - ||X[i] - E[j]||^2)
+    gains[i] = (1/m) * sum_j w_j * max(0, cur_min[j] - ||X[i] - E[j]||^2)
 
     X: (n, d) candidates (optionally quantized — see
     :func:`dequantize_rows`), E: (m, d) eval set, cur_min: (m,).
+    ``eval_weights`` (m,) reweights the eval columns (query-conditioned
+    relevance, serve layer); ``None`` takes the unweighted reduction and a
+    weight of exactly 1.0f takes the weighted one to the same bits (the
+    1.0-multiply is IEEE-exact and the reduction order is unchanged).
     """
     Xf = dequantize_rows(X, x_scale, x_zp)
     d2 = _sqdist(Xf, E, compute_dtype)                    # (n, m)
     contrib = jnp.maximum(cur_min[None, :] - d2, 0.0)
+    if eval_weights is not None:
+        contrib = contrib * eval_weights[None, :]
     return jnp.sum(contrib, axis=-1) / E.shape[0]
 
 
@@ -75,7 +82,8 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
                   group_ids: jax.Array | None = None,
                   caps: tuple[int, ...] | None = None,
                   x_scale: jax.Array | None = None,
-                  x_zp: jax.Array | None = None
+                  x_zp: jax.Array | None = None,
+                  eval_weights: jax.Array | None = None
                   ) -> tuple[jax.Array, jax.Array]:
     """Fused k-step exemplar-clustering greedy selection (pure-jnp oracle).
 
@@ -106,6 +114,14 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
     independent NumPy checker rejects out-of-range ids at the tree layer).
     Both constraint encodings compose (their masks AND), matching the
     step-wise ``Intersection`` conjunction.
+
+    ``budget`` and ``caps`` also accept *traced* jax arrays (the serve
+    layer passes per-request constraint parameters as operands so repeated
+    requests never retrace) — every use below is tracer-safe.
+
+    ``eval_weights`` (m,) reweights the eval columns exactly as in
+    :func:`exemplar_gains`; ``None`` keeps the unweighted reduction and a
+    weight of exactly 1.0f is bit-identical to it.
     """
     from repro.core.constraints import KNAPSACK_TOL
 
@@ -125,7 +141,10 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
 
     def step(carry, _):
         cm, avail, used, counts = carry
-        g = jnp.sum(jnp.maximum(cm[None, :] - d2, 0.0), axis=-1) / m
+        contrib = jnp.maximum(cm[None, :] - d2, 0.0)
+        if eval_weights is not None:
+            contrib = contrib * eval_weights[None, :]
+        g = jnp.sum(contrib, axis=-1) / m
         cand = avail
         if weights is not None:
             cand = cand & (used + weights <= budget + KNAPSACK_TOL)

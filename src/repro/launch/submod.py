@@ -14,7 +14,8 @@
         [--fault-profile 'transient=0.3,seed=7,...'] [--fault-retries N] \
         [--fault-backoff S] [--no-hedge] [--max-dropped-fraction F] \
         [--trace-out trace.json] [--metrics-out metrics.json] \
-        [--manifest-out manifest.json] [--profile-dir PROFDIR]
+        [--manifest-out manifest.json] [--profile-dir PROFDIR] \
+        [--serve-smoke [--serve-requests N]]
 
 Runs TREE-BASED COMPRESSION over all visible devices (machines sharded via
 shard_map), reports value vs centralized greedy + rounds + oracle calls.
@@ -98,11 +99,23 @@ disagree; inspect traces with ``python -m repro.launch.tracetool``.
 Telemetry is observation only — outputs stay bit-identical to an
 uninstrumented run.  ``--profile-dir`` additionally brackets the run
 with ``jax.profiler`` start/stop.
+
+``--serve-smoke`` swaps the one-shot solve for the selection service
+(:mod:`repro.serve`): the dataset is ingested once into a resident
+session, a mixed request stream (two cardinalities × unconstrained /
+knapsack / partition / query-reweighted) is answered twice as identical
+fused batches — the warm pass is asserted retrace-free and bit-identical
+to the cold pass — plus a burst through the micro-batching dispatcher,
+then a ~1% ground-set delta triggers a block-local re-solve.  Reports
+the ``serve:`` counter lines, a NumPy
+``recheck:`` of a served coreset, and a validated manifest; CI greps all
+three.
 """
 from __future__ import annotations
 
 import argparse
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -157,6 +170,155 @@ def synth_attrs(constraint, n: int, seed: int) -> np.ndarray | None:
         else:
             attrs[:, col] = r.integers(0, kind, n).astype(np.float32)
     return attrs
+
+
+def _np_exemplar_value(E, rows, mask) -> float:
+    """Independent NumPy re-score of a served coreset under the exemplar
+    objective — the serve smoke's recheck column (fp64 accumulate)."""
+    E = np.asarray(E, np.float64)
+    S = np.asarray(rows, np.float64)[np.asarray(mask, bool)]
+    e0 = np.sum(E * E, axis=1)
+    if len(S) == 0:
+        return 0.0
+    d2 = (e0[:, None] - 2.0 * E @ S.T
+          + np.sum(S * S, axis=1)[None, :])
+    cur = np.minimum(e0, d2.min(axis=1))
+    return float(np.mean(e0) - np.mean(cur))
+
+
+def serve_smoke(args) -> None:
+    """CI-grepable exercise of the selection service without a daemon.
+
+    Synthetic ingest through the wave engine, a mixed request stream
+    (two cardinalities × {unconstrained, knapsack, partition, queried})
+    issued twice as identical synchronous batches — the second pass must
+    ride the warm compile cache with zero retraces and answer
+    bit-identically (same batch composition → same bits) — plus a burst
+    through the threaded dispatcher for real queue-depth telemetry, then
+    a ~1% ground-set delta with a block-local re-solve, a NumPy re-score
+    of a served coreset (``recheck:`` line), and a validated manifest
+    with the ``serve:`` report lines.
+    """
+    from repro.engine.telemetry import (RunManifest, config_dict,
+                                        config_fingerprint)
+    from repro.serve import (Dispatcher, SelectionRequest, SelectionService,
+                             ingest, round_ladder, serve_batch)
+
+    data = np.asarray(datasets.REGISTRY[args.dataset](), np.float32)
+    n, d = data.shape
+    r = np.random.default_rng(args.seed)
+    E = data[r.choice(n, min(args.n_eval, n), replace=False)]
+    # two attribute columns: knapsack weights (col 0) + 3 groups (col 1)
+    attrs = np.zeros((n, 2), np.float32)
+    attrs[:, 0] = r.uniform(0.2, 1.0, n).astype(np.float32)
+    attrs[:, 1] = r.integers(0, 3, n).astype(np.float32)
+
+    tracer = (Tracer() if (args.trace_out or args.metrics_out
+                           or args.manifest_out) else None)
+    cfg = TreeConfig(k=args.k, capacity=args.capacity,
+                     algorithm=args.algorithm, eps=args.eps, seed=args.seed,
+                     permutation=args.permutation, engine=args.engine,
+                     hosts=args.hosts, telemetry=tracer)
+    print(f"serve-smoke: n={n} d={d} k={args.k} mu={args.capacity} "
+          f"requests={args.serve_requests} engine={args.engine}")
+    t0 = time.perf_counter()
+    st = ingest(ArraySource(data), cfg, attrs=attrs)
+    t_ingest = time.perf_counter() - t0
+    svc = SelectionService(st, E, algorithm=args.algorithm, eps=args.eps,
+                           tracer=tracer)
+
+    k2 = max(2, args.k // 2)
+    budget = float(np.quantile(attrs[:, 0], 0.6)) * min(args.k, 8)
+    cap3 = max(1, args.k // 3 + 1)
+    reqs = []
+    for i in range(args.serve_requests):
+        k_i = args.k if i % 2 == 0 else k2
+        kind = i % 4
+        if kind == 0:
+            reqs.append(SelectionRequest(k=k_i))
+        elif kind == 1:
+            reqs.append(SelectionRequest(
+                k=k_i, constraint=f"knapsack:budget={budget:.4f}"))
+        elif kind == 2:
+            reqs.append(SelectionRequest(
+                k=k_i,
+                constraint=f"partition:caps={cap3},{cap3},{cap3}:col=1"))
+        else:
+            reqs.append(SelectionRequest(k=k_i, query=data[(7 * i) % n]))
+
+    t1 = time.perf_counter()
+    cold = serve_batch(svc, reqs)
+    compiles_after_cold = svc.cache.compiles
+    warm = serve_batch(svc, reqs)
+    t_serve = time.perf_counter() - t1
+    for c, w in zip(cold, warm):
+        assert c.value == w.value and np.array_equal(c.rows, w.rows), \
+            "warm-cache answers diverged from cold answers"
+    assert svc.cache.compiles == compiles_after_cold, \
+        "steady-state request retraced a warm compile-cache entry"
+    assert svc.cache.steady_retraces() == 0
+    for res in cold:
+        assert res.feasible, res.detail
+
+    # threaded burst: opportunistic micro-batching under backpressure —
+    # exercises the dispatcher and records true queue depth (compositions
+    # are timing-dependent, so assert feasibility, not bit equality)
+    dp = Dispatcher(svc, max_batch=8)
+    try:
+        for res in dp.map(reqs):
+            assert res.feasible, res.detail
+    finally:
+        dp.close()
+    assert svc.queue_depth_max >= 1
+
+    # ~1% churn delta: block-local re-solve, then a warm re-query
+    n_del = max(1, n // 100)
+    del_ids = [int(x) for x in r.choice(n, n_del, replace=False)]
+    ins_rows = data[r.choice(n, n_del, replace=False)] * np.float32(0.5)
+    ins_attrs = np.zeros((n_del, 2), np.float32)
+    ins_attrs[:, 0] = r.uniform(0.2, 1.0, n_del).astype(np.float32)
+    ins_attrs[:, 1] = r.integers(0, 3, n_del).astype(np.float32)
+    rep = svc.apply_delta(insert_rows=ins_rows, insert_attrs=ins_attrs,
+                          delete_ids=del_ids)
+    after = svc.query(reqs[0])
+    assert after.feasible, after.detail
+
+    npv = _np_exemplar_value(E, after.rows, after.mask)
+    rel = abs(npv - after.value) / max(abs(npv), 1e-12)
+    status = "PASS" if np.isfinite(after.value) and rel < 1e-3 else "FAIL"
+
+    ladder = round_ladder(st.Mp, args.k, st.mu)
+    run = {"n": n, "d": d, "k": args.k, "mu": args.capacity,
+           "algorithm": args.algorithm, "seed": args.seed,
+           "value": float(after.value), "rounds": len(ladder),
+           "oracle_calls": int(after.oracle_calls),
+           "machines_per_round": list(ladder),
+           "round_values": [], "dataset": args.dataset}
+    manifest = RunManifest(config=config_dict(cfg),
+                           config_fingerprint=config_fingerprint(cfg),
+                           run=run, dtype="fp32")
+    manifest.phases = {"ingest_s": t_ingest, "serve_s": t_serve}
+    manifest.serve = svc.serve_stats()
+    manifest.recheck = {"fp32": npv, "solve": float(after.value),
+                        "rel_gap": float(rel), "status": status}
+    for line in format_report(manifest):
+        print(line)
+    print(f"delta: inserted={rep.inserted} deleted={rep.deleted} "
+          f"changed_machines={len(rep.changed_machines)}/{st.Mp} "
+          f"rebuilt={rep.rebuilt}")
+
+    if tracer is not None:
+        if args.trace_out:
+            tracer.export_chrome_trace(args.trace_out)
+        if args.metrics_out:
+            tracer.metrics.export_json(args.metrics_out)
+    if args.manifest_out:
+        manifest.write(args.manifest_out)
+    problems = manifest.validate()
+    assert status == "PASS", (npv, after.value, rel)
+    print("manifest: OK" if not problems
+          else f"manifest: INVALID {problems}")
+    assert not problems, problems
 
 
 def main():
@@ -256,7 +418,20 @@ def main():
                     help="bracket the run with jax.profiler start/stop and "
                          "dump the device profile into this directory")
     ap.add_argument("--no-centralized", action="store_true")
+    ap.add_argument("--serve-smoke", action="store_true",
+                    help="exercise the selection service instead of one "
+                         "offline solve: ingest once, answer a mixed "
+                         "k/constraint/query request stream twice (warm "
+                         "compile cache asserted retrace-free), apply a "
+                         "~1%% ground-set delta, print grep-able serve:/"
+                         "recheck:/manifest lines")
+    ap.add_argument("--serve-requests", type=int, default=12,
+                    help="request-stream length for --serve-smoke")
     args = ap.parse_args()
+
+    if args.serve_smoke:
+        serve_smoke(args)
+        return
 
     data = datasets.REGISTRY[args.dataset]()
     r = np.random.default_rng(args.seed)

@@ -1,1 +1,32 @@
-"""serve subpackage."""
+"""repro.serve — two serving stacks that share only the package.
+
+Selection serving (ROADMAP item 1): a resident-tree query server over
+the paper's submodular maximization — ingest once through the wave
+engine, answer many ``(k, constraint, query)`` requests from resident
+machine blocks with batched fused launches, incremental ground-set
+deltas, and a warm compile cache.  Lives in :mod:`session` (resident
+state), :mod:`service` (request solving), :mod:`dispatcher` (threaded
+micro-batching).
+
+LM decode serving: batched prefill/decode token generation over the
+model registry (:mod:`serve_step`).
+"""
+from repro.serve.dispatcher import Dispatcher, serve_batch
+from repro.serve.serve_step import greedy_generate, make_serve_fns
+from repro.serve.service import (CompileCache, SelectionRequest,
+                                 SelectionResult, SelectionService,
+                                 build_constraint, constraint_params,
+                                 constraint_signature, offline_solve,
+                                 query_relevance_weights, round_ladder)
+from repro.serve.session import DeltaReport, SessionState, ingest
+
+__all__ = [
+    # selection serving
+    "SessionState", "DeltaReport", "ingest",
+    "SelectionService", "SelectionRequest", "SelectionResult",
+    "CompileCache", "offline_solve", "query_relevance_weights",
+    "round_ladder", "constraint_signature", "constraint_params",
+    "build_constraint", "Dispatcher", "serve_batch",
+    # LM decode serving
+    "make_serve_fns", "greedy_generate",
+]

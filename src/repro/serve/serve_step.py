@@ -1,7 +1,20 @@
-"""Serving: batched prefill + decode drivers over the uniform model API."""
+"""LM decode serving: batched prefill + decode drivers over the model API.
+
+This module is the *language-model* half of :mod:`repro.serve` — token
+generation against the uniform model registry (prefill once, then a jitted
+decode step per new token).  The *selection-serving* half — the resident
+submodular-tree query server of ROADMAP item 1 — lives in
+:mod:`repro.serve.service` / :mod:`repro.serve.session` /
+:mod:`repro.serve.dispatcher`; the two share nothing but the package.
+
+``make_serve_fns`` returns **jitted** callables: jitting happens once here
+(per (cfg, cache_len) closure) so drivers like :func:`greedy_generate` and
+external callers never pay a fresh ``jax.jit`` wrapper per call — a
+re-wrap builds a new jit cache around a new Python closure identity, which
+retraces on every invocation.
+"""
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -11,7 +24,7 @@ from repro.models import get_model
 
 
 def make_serve_fns(cfg, cache_len: int):
-    """Returns (prefill_fn, decode_fn) jittable closures for one arch."""
+    """Returns (prefill_fn, decode_fn), both jitted once for this closure."""
     model = get_model(cfg)
 
     def prefill_fn(params, tokens, embeds=None):
@@ -23,22 +36,20 @@ def make_serve_fns(cfg, cache_len: int):
     def decode_fn(params, cache, tokens):
         return model.decode_step(params, cfg, cache, tokens)
 
-    return prefill_fn, decode_fn
+    return jax.jit(prefill_fn), jax.jit(decode_fn)
 
 
 def greedy_generate(cfg, params, prompt: jax.Array, n_new: int,
                     cache_len: Optional[int] = None, embeds=None):
     """Greedy decoding of n_new tokens for a (B, S) prompt batch."""
-    model = get_model(cfg)
     B, S = prompt.shape
     cache_len = cache_len or (S + n_new)
     prefill_fn, decode_fn = make_serve_fns(cfg, cache_len)
-    logits, cache = jax.jit(prefill_fn)(params, prompt, embeds)
+    logits, cache = prefill_fn(params, prompt, embeds)
     tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
     out = [tok]
-    dstep = jax.jit(decode_fn)
     for _ in range(n_new - 1):
-        logits, cache = dstep(params, cache, tok)
+        logits, cache = decode_fn(params, cache, tok)
         tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
         out.append(tok)
     return jnp.concatenate(out, axis=1)
