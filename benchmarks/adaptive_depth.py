@@ -1,0 +1,137 @@
+"""Low-adaptivity solve-tier sweep (PR 10): threshold-batch vs greedy depth.
+
+The greedy tier pays one fused kernel launch per selected item — sequential
+solve depth k per machine per round.  The threshold-batch tier scores the
+whole candidate block against a threshold τ per launch, batch-accepts every
+qualifying prefix-feasible item, and decays τ ← τ(1−ε) between launches, so
+its depth is the measured τ-ladder length, capped at
+1 + ⌈log(2k/ε)/ε⌉ launches — O(log(n·Δ)/ε) instead of k.
+
+For each (constraint class × k × ε) cell the sweep runs the full tree with
+``algorithm="threshold_batch"`` against the same tree under plain greedy
+and a centralized greedy column under the *same* constraint, recording:
+
+  * measured sequential solve depth (``TreeResult.solve_depth``: per-round
+    max over machines, summed over rounds) for both tiers and the
+    depth reduction factor,
+  * solution values and the re-scored quality gap vs centralized greedy
+    (gated at gap ≤ ε — the tier's (1−ε) floor must survive the tree),
+  * an independent NumPy feasibility verdict on every returned coreset.
+
+Acceptance gates: depth reduction ≥ 2× at k ≥ 64 for every ε cell, and
+quality gap ≤ ε everywhere.  On CPU the win is measured in launch counts
+(sequential depth), not wall clock — per-launch dispatch overhead is what
+the tier removes on a real accelerator.
+
+Record lands in ``BENCH_PR10.json`` via ``benchmarks/run.py --only
+adaptivity``.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import Timer
+from repro.core import (ExemplarClustering, Knapsack, PartitionMatroid,
+                        TreeConfig, centralized_greedy, check_feasible,
+                        tree_maximize)
+
+DEPTH_REDUCTION_FLOOR = 2.0     # at k >= 64: greedy depth / batch depth
+K_GATE = 64
+N_GROUPS = 8
+EPS_SWEEP = (0.3, 0.5)
+
+
+def _constraints(k: int):
+    return {
+        "none": None,
+        "knapsack": Knapsack(budget=0.35 * k, col=0),
+        "partition": PartitionMatroid(caps=(max(1, k // N_GROUPS),) * N_GROUPS,
+                                      col=1),
+    }
+
+
+def run(quick: bool = True):
+    n, d, mu = (6_000, 16, 400) if quick else (40_000, 32, 800)
+    ks = (16, 64) if quick else (16, 64, 128)
+    rng = np.random.default_rng(0)
+    data = rng.standard_normal((n, d)).astype(np.float32)
+    w = rng.uniform(0.2, 1.0, n).astype(np.float32)
+    g = rng.integers(0, N_GROUPS, n).astype(np.float32)
+    attrs = np.stack([w, g], axis=1)
+    obj = ExemplarClustering(jnp.asarray(data[:192]))
+    dj = jnp.asarray(data)
+
+    cells = []
+    print("adaptivity,class,k,eps,batch_depth,greedy_depth,reduction,"
+          "batch_value,greedy_value,central_value,gap,feasible,sec")
+    for k in ks:
+        for cname, cons in _constraints(k).items():
+            a = attrs if cons is not None else None
+            cfg_g = TreeConfig(k=k, capacity=mu, seed=0, algorithm="greedy")
+            res_g = tree_maximize(obj, dj, cfg_g, constraint=cons, attrs=a)
+            # greedy pays exactly k launches per round (max over machines)
+            assert res_g.solve_depth == k * res_g.rounds, (
+                res_g.solve_depth, k, res_g.rounds)
+            cg = centralized_greedy(obj, dj, k, constraint=cons,
+                                    attrs=attrs if cons is not None else None)
+            v_central = float(cg.value)
+
+            for eps in EPS_SWEEP:
+                cfg_b = TreeConfig(k=k, capacity=mu, seed=0,
+                                   algorithm="threshold_batch", eps=eps)
+                with Timer() as t:
+                    res_b = tree_maximize(obj, dj, cfg_b, constraint=cons,
+                                          attrs=a)
+                reduction = res_g.solve_depth / max(1, res_b.solve_depth)
+                gap = max(0.0, 1.0 - float(res_b.value) / v_central)
+                ok, detail = check_feasible(
+                    cons, res_b.sel_attrs if cons is not None
+                    else np.zeros((k, 0)), res_b.sel_mask) \
+                    if cons is not None else (True, "unconstrained")
+                assert ok, (cname, k, eps, detail)
+                assert res_b.rounds == res_g.rounds, (res_b.rounds,
+                                                      res_g.rounds)
+                # quality gate: the per-block (1-eps) floor must survive
+                # the tree fold — re-scored against centralized greedy
+                assert gap <= eps, (cname, k, eps, gap, float(res_b.value),
+                                    v_central)
+                if k >= K_GATE:
+                    assert reduction >= DEPTH_REDUCTION_FLOOR, (
+                        cname, k, eps, reduction, res_b.depth_per_round)
+                print(f"adaptivity,{cname},{k},{eps},{res_b.solve_depth},"
+                      f"{res_g.solve_depth},{reduction:.1f},"
+                      f"{float(res_b.value):.6f},{float(res_g.value):.6f},"
+                      f"{v_central:.6f},{gap:.4f},{ok},{t.s:.1f}")
+                cells.append({
+                    "class": cname, "k": k, "eps": eps,
+                    "batch_depth": int(res_b.solve_depth),
+                    "depth_per_round": [int(v) for v in
+                                        res_b.depth_per_round],
+                    "greedy_depth": int(res_g.solve_depth),
+                    "rounds": int(res_b.rounds),
+                    "reduction": round(reduction, 2),
+                    "batch_value": float(res_b.value),
+                    "greedy_value": float(res_g.value),
+                    "central_value": v_central,
+                    "gap_vs_central": round(gap, 4),
+                    "batch_oracle_calls": int(res_b.oracle_calls),
+                    "greedy_oracle_calls": int(res_g.oracle_calls),
+                    "feasible": bool(ok), "seconds": round(t.s, 1),
+                })
+
+    gate = [c for c in cells if c["k"] >= K_GATE]
+    best = max(c["reduction"] for c in gate)
+    print(f"adaptivity,gate,k>={K_GATE},min_reduction="
+          f"{min(c['reduction'] for c in gate):.1f}x,best={best:.1f}x")
+    return {
+        "shape": {"n": n, "d": d, "mu": mu, "ks": list(ks),
+                  "eps_sweep": list(EPS_SWEEP), "n_groups": N_GROUPS},
+        "gates": {"depth_reduction_floor": DEPTH_REDUCTION_FLOOR,
+                  "k_gate": K_GATE, "quality_gap_leq_eps": True},
+        "cells": cells,
+    }
+
+
+if __name__ == "__main__":
+    run()

@@ -15,15 +15,16 @@
   bytes_lean — quantized wave streaming, dtype ladder     (PR 7)
   telemetry — tracer overhead: off vs instrumented run    (PR 8)
   serve    — selection-service latency + delta vs rebuild (PR 9)
+  adaptivity — threshold-batch solve depth vs greedy      (PR 10)
 
 Suites that return a dict contribute to the cross-PR perf trajectory
 record: ``tree`` writes ``BENCH_PR2.json``, ``constrained`` writes
 ``BENCH_PR3.json``, ``engine`` writes ``BENCH_PR4.json``, ``adaptive``
 writes ``BENCH_PR5.json``, ``faults`` writes ``BENCH_PR6.json``,
 ``bytes_lean`` writes ``BENCH_PR7.json``, ``telemetry`` writes
-``BENCH_PR8.json``, ``serve`` writes ``BENCH_PR9.json``; everything
-else goes to ``BENCH_PR1.json`` (repo root).  ``--only bytes_lean`` is
-the PR 7 refresh.
+``BENCH_PR8.json``, ``serve`` writes ``BENCH_PR9.json``, ``adaptivity``
+writes ``BENCH_PR10.json``; everything else goes to ``BENCH_PR1.json``
+(repo root).  ``--only bytes_lean`` is the PR 7 refresh.
 """
 import argparse
 import json
@@ -41,6 +42,7 @@ BENCH_PR6_JSON = os.path.join(_ROOT, "BENCH_PR6.json")
 BENCH_PR7_JSON = os.path.join(_ROOT, "BENCH_PR7.json")
 BENCH_PR8_JSON = os.path.join(_ROOT, "BENCH_PR8.json")
 BENCH_PR9_JSON = os.path.join(_ROOT, "BENCH_PR9.json")
+BENCH_PR10_JSON = os.path.join(_ROOT, "BENCH_PR10.json")
 
 
 def main() -> None:
@@ -51,8 +53,8 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (adaptive_engine, bytes_lean, constrained_tree,
-                            engine_overlap, fault_engine,
+    from benchmarks import (adaptive_depth, adaptive_engine, bytes_lean,
+                            constrained_tree, engine_overlap, fault_engine,
                             fault_tolerance_bench,
                             fig2_capacity, fig2_large_scale, kernel_bench,
                             serve_latency, table1_complexity,
@@ -73,6 +75,7 @@ def main() -> None:
         "bytes_lean": bytes_lean.run,
         "telemetry": telemetry_overhead.run,
         "serve": serve_latency.run,
+        "adaptivity": adaptive_depth.run,
     }
     # suite → (trajectory file, PR tag); default is the PR-1 record
     targets = {"tree": (BENCH_PR2_JSON, 2),
@@ -82,7 +85,8 @@ def main() -> None:
                "faults": (BENCH_PR6_JSON, 6),
                "bytes_lean": (BENCH_PR7_JSON, 7),
                "telemetry": (BENCH_PR8_JSON, 8),
-               "serve": (BENCH_PR9_JSON, 9)}
+               "serve": (BENCH_PR9_JSON, 9),
+               "adaptivity": (BENCH_PR10_JSON, 10)}
     measured: dict[str, dict] = {}
     for name, fn in suites.items():
         if args.only and name != args.only:

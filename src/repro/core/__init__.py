@@ -1,7 +1,8 @@
 """repro.core — the paper's contribution: horizontally scalable submodular
 maximization (tree-based compression with beta-nice subprocedures)."""
 from repro.core.algorithms import (SelectResult, greedy, run_algorithm,
-                                   stochastic_greedy, threshold_greedy)
+                                   stochastic_greedy, threshold_batch,
+                                   threshold_greedy)
 from repro.core.baselines import (BaselineResult, centralized_greedy,
                                   randgreedi, random_subset,
                                   streaming_centralized_greedy)
@@ -23,7 +24,8 @@ from repro.core.tree import IngestStats, TreeConfig, TreeResult, tree_maximize
 from repro.engine import EngineConfig, EngineStats, IngestionPlan
 
 __all__ = [
-    "SelectResult", "greedy", "stochastic_greedy", "threshold_greedy",
+    "SelectResult", "greedy", "stochastic_greedy", "threshold_batch",
+    "threshold_greedy",
     "run_algorithm", "BaselineResult", "centralized_greedy", "randgreedi",
     "random_subset", "streaming_centralized_greedy",
     "Unconstrained", "Knapsack", "PartitionMatroid",

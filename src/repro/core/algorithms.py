@@ -41,6 +41,10 @@ class SelectResult(NamedTuple):
     sel_mask: jax.Array   # (k,) bool
     value: jax.Array      # f(selected)
     oracle_calls: jax.Array  # scalar int32 — number of marginal-gain evals
+    depth: jax.Array      # scalar int32 — sequential solve depth: the number
+    #   of dependent kernel launches (argmax steps / τ-levels) the solve
+    #   cannot parallelise away.  Greedy variants pay k; threshold tiers pay
+    #   one init pass plus their τ-ladder length.
 
 
 def _tree_where(pred, a, b):
@@ -186,7 +190,7 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
         else:
             sel_idx, sel_mask, value, calls = obj.fused_select(T, mask, k,
                                                                **qkw)
-        return SelectResult(sel_idx, sel_mask, value, calls)
+        return SelectResult(sel_idx, sel_mask, value, calls, jnp.int32(k))
 
     cap = T.shape[0]
     T = _dequant_block(T, qmeta)
@@ -211,7 +215,8 @@ def greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
             jnp.int32(0))
     (state, _, _, calls), (sel_idx, sel_mask) = jax.lax.scan(
         step, init, None, length=k)
-    return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
+    return SelectResult(sel_idx, sel_mask, obj.value(state), calls,
+                        jnp.int32(k))
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +279,8 @@ def stochastic_greedy(obj, T: jax.Array, mask: jax.Array, k: int,
     init = (obj.init_state(T, mask), constraint.init_state(), mask,
             jnp.int32(0))
     (state, _, _, calls), (sel_idx, sel_mask) = jax.lax.scan(step, init, keys)
-    return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
+    return SelectResult(sel_idx, sel_mask, obj.value(state), calls,
+                        jnp.int32(k))
 
 
 # ---------------------------------------------------------------------------
@@ -343,7 +349,63 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
         0, n_levels, level,
         (state0, cstate0, mask, jnp.int32(0), init_calls, sel_idx))
     sel_mask = jnp.arange(k) < count
-    return SelectResult(sel_idx, sel_mask, obj.value(state), calls)
+    # depth: the d_max init pass plus one sequential item sweep per τ-level
+    # (each level's fori_loop is one dependent chain regardless of takes)
+    return SelectResult(sel_idx, sel_mask, obj.value(state), calls,
+                        jnp.int32(1 + n_levels))
+
+
+# ---------------------------------------------------------------------------
+# THRESHOLD BATCH — low-adaptivity tier (τ-ladder of batch accepts)
+# ---------------------------------------------------------------------------
+
+
+def threshold_batch(obj, T: jax.Array, mask: jax.Array, k: int, *,
+                    eps: float = 0.5, constraint=None,
+                    attrs: jax.Array | None = None,
+                    qmeta: jax.Array | None = None) -> SelectResult:
+    """Batch-accepting descending-threshold selection (adaptive sequencing).
+
+    One kernel launch per τ-level scores *all* candidates against the
+    current threshold and accepts the prefix-feasible batch of qualifying
+    items in-kernel; the driver only lowers τ ← τ(1−ε).  Sequential solve
+    depth is O(log(2k/ε)/ε) launches instead of greedy's k, at a
+    (1−1/e−O(ε)) quality floor — the same ladder as
+    :func:`threshold_greedy` but with the per-level item sweep collapsed
+    into a single launch.
+
+    Unlike the scan algorithms this tier *requires* a row-wise objective
+    exposing the ``fused_threshold_select`` hook (the batch-accept
+    semantics live in kernels/threshold_select.py), and constraints must
+    be fused-encodable (knapsack / partition matroid / one of each) —
+    anything else raises rather than silently degrading to a sequential
+    path.
+    """
+    if not (getattr(obj, "rowwise_gains", False)
+            and hasattr(obj, "fused_threshold_select")):
+        raise ValueError(
+            "threshold_batch needs a row-wise objective with a "
+            f"fused_threshold_select hook; {type(obj).__name__} has none "
+            "(use algorithm='threshold_greedy' for the sequential ladder)")
+    ckw = {}
+    if constraint is not None and not isinstance(constraint, Unconstrained):
+        parts = _fused_parts(constraint)
+        if parts is None:
+            raise ValueError(
+                "threshold_batch supports knapsack, partition-matroid, and "
+                "one-of-each intersection constraints; "
+                f"{type(constraint).__name__} has no fused encoding")
+        if attrs is None:
+            raise ValueError(
+                "constrained threshold_batch needs per-item attrs")
+        ckw = _fused_constraint_kwargs(constraint, attrs)
+    qkw = _fused_quant_kwargs(qmeta)
+    sel_idx, sel_mask, value, calls, launches = obj.fused_threshold_select(
+        T, mask, k, eps=eps, **ckw, **qkw)
+    # depth: the d_max init pass plus the launches the ladder actually ran
+    # (early-exits when k fills or candidates drain — data-dependent)
+    return SelectResult(sel_idx, sel_mask, value, calls,
+                        jnp.int32(1) + launches.astype(jnp.int32))
 
 
 # ---------------------------------------------------------------------------
@@ -351,20 +413,71 @@ def threshold_greedy(obj, T: jax.Array, mask: jax.Array, k: int, *,
 # ---------------------------------------------------------------------------
 
 
-def run_algorithm(name: str, obj, T, mask, k, *, key=None, eps=0.5,
+#: kwargs each algorithm actually consumes; anything else passed explicitly
+#: to :func:`run_algorithm` is an error, not a silent no-op.
+ALGORITHM_KWARGS = {
+    "greedy": frozenset({"constraint", "attrs", "fused", "qmeta"}),
+    "stochastic_greedy": frozenset({"key", "eps", "constraint", "attrs",
+                                    "qmeta"}),
+    "threshold_greedy": frozenset({"eps", "constraint", "attrs", "qmeta"}),
+    "threshold_batch": frozenset({"eps", "constraint", "attrs", "qmeta"}),
+}
+
+
+def driver_kwargs(name: str, *, key=None, eps=None) -> dict:
+    """The subset of uniform driver state the named algorithm accepts.
+
+    Driver layers (distributed rounds, the tree, the serve tier) hold a
+    PRNG key and an ε for every machine regardless of algorithm; forwarding
+    an inapplicable one through :func:`run_algorithm` is a hard error, so
+    they filter here instead of special-casing each algorithm inline.
+    Unknown names return ``{}`` — :func:`run_algorithm` owns that error.
+    """
+    allowed = ALGORITHM_KWARGS.get(name, frozenset())
+    kw = {}
+    if "key" in allowed and key is not None:
+        kw["key"] = key
+    if "eps" in allowed and eps is not None:
+        kw["eps"] = eps
+    return kw
+
+
+def run_algorithm(name: str, obj, T, mask, k, *, key=None, eps=None,
                   constraint=None, attrs=None,
                   fused: bool | None = None,
                   qmeta=None) -> SelectResult:
+    """Dispatch to a selection algorithm by name, rejecting misuse.
+
+    Unknown names and algorithm-inapplicable kwargs (a PRNG ``key`` for
+    anything but stochastic_greedy, ``eps`` for plain greedy, ``fused``
+    for anything but greedy) raise ``ValueError`` instead of being
+    silently dropped.  ``eps=None`` means "the algorithm's own default"
+    (they differ: 0.1 for threshold_greedy, 0.5 elsewhere).
+    """
+    allowed = ALGORITHM_KWARGS.get(name)
+    if allowed is None:
+        raise ValueError(
+            f"unknown algorithm {name!r}; expected one of "
+            f"{sorted(ALGORITHM_KWARGS)}")
+    extras = [n for n, v in (("key", key), ("eps", eps), ("fused", fused))
+              if v is not None and n not in allowed]
+    if extras:
+        raise ValueError(
+            f"algorithm {name!r} does not accept {extras} "
+            f"(it takes {sorted(allowed)})")
+    ekw = {} if eps is None else {"eps": eps}
     if name == "greedy":
         return greedy(obj, T, mask, k, constraint=constraint, attrs=attrs,
                       fused=fused, qmeta=qmeta)
     if name == "stochastic_greedy":
-        assert key is not None, "stochastic_greedy needs a PRNG key"
-        return stochastic_greedy(obj, T, mask, k, key, eps=eps,
+        if key is None:
+            raise ValueError("stochastic_greedy needs a PRNG key")
+        return stochastic_greedy(obj, T, mask, k, key, **ekw,
                                  constraint=constraint, attrs=attrs,
                                  qmeta=qmeta)
     if name == "threshold_greedy":
-        return threshold_greedy(obj, T, mask, k, eps=eps,
+        return threshold_greedy(obj, T, mask, k, **ekw,
                                 constraint=constraint, attrs=attrs,
                                 qmeta=qmeta)
-    raise ValueError(f"unknown algorithm {name!r}")
+    return threshold_batch(obj, T, mask, k, **ekw, constraint=constraint,
+                           attrs=attrs, qmeta=qmeta)

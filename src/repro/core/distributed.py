@@ -40,6 +40,9 @@ class RoundResult(NamedTuple):
     sol_mask: jax.Array   # (M, k)
     values: jax.Array     # (M,) f(S_i), -inf where no solution
     oracle_calls: jax.Array  # (M,) int32
+    depth: jax.Array      # (M,) int32 — sequential solve depth per machine
+    #   (dependent kernel launches; machines run in parallel, so the
+    #   round's adaptive depth is the max over machines)
 
 
 def make_submod_mesh(devices=None) -> Mesh:
@@ -68,30 +71,31 @@ def _solve_block(obj, T, mask, key, meta=None, *, k: int, alg: str,
     upcast), and the k *selected* rows are dequantized to fp32 here — so
     rounds t ≥ 1 carry exactly the wide fp32 rows they always have.
     """
+    dkw = algorithms.driver_kwargs(alg, key=key, eps=eps)
     if meta is not None:
         attrs = meta[:, :attr_dim] if attr_dim else None
         qmeta = meta[:, attr_dim:]
-        res = algorithms.run_algorithm(alg, obj, T, mask, k, key=key,
-                                       eps=eps, constraint=constraint,
-                                       attrs=attrs, qmeta=qmeta)
+        res = algorithms.run_algorithm(alg, obj, T, mask, k,
+                                       constraint=constraint,
+                                       attrs=attrs, qmeta=qmeta, **dkw)
         safe = jnp.maximum(res.sel_idx, 0)
         wide = algorithms._dequant_block(T[safe], qmeta[safe])
         if attr_dim:
             wide = jnp.concatenate([wide, attrs[safe]], axis=1)
         rows = jnp.where(res.sel_mask[:, None], wide, 0.0)
         value = jnp.where(jnp.any(res.sel_mask), res.value, -jnp.inf)
-        return rows, res.sel_mask, value, res.oracle_calls
+        return rows, res.sel_mask, value, res.oracle_calls, res.depth
     if attr_dim:
         feat, attrs = T[:, :-attr_dim], T[:, -attr_dim:]
     else:
         feat, attrs = T, None
-    res = algorithms.run_algorithm(alg, obj, feat, mask, k, key=key, eps=eps,
-                                   constraint=constraint, attrs=attrs)
+    res = algorithms.run_algorithm(alg, obj, feat, mask, k,
+                                   constraint=constraint, attrs=attrs, **dkw)
     safe = jnp.maximum(res.sel_idx, 0)
     rows = jnp.where(res.sel_mask[:, None], T[safe], 0.0)
     any_sel = jnp.any(res.sel_mask)
     value = jnp.where(any_sel, res.value, -jnp.inf)
-    return rows, res.sel_mask, value, res.oracle_calls
+    return rows, res.sel_mask, value, res.oracle_calls, res.depth
 
 
 def _round_local(obj, blocks, bmask, keys, dead, meta=None, *, k, alg, eps,
@@ -100,16 +104,16 @@ def _round_local(obj, blocks, bmask, keys, dead, meta=None, *, k, alg, eps,
     solve = functools.partial(_solve_block, k=k, alg=alg, eps=eps,
                               attr_dim=attr_dim, constraint=constraint)
     if meta is None:
-        rows, smask, vals, calls = jax.vmap(
+        rows, smask, vals, calls, depth = jax.vmap(
             solve, in_axes=(None, 0, 0, 0))(obj, blocks, bmask, keys)
     else:
-        rows, smask, vals, calls = jax.vmap(
+        rows, smask, vals, calls, depth = jax.vmap(
             solve, in_axes=(None, 0, 0, 0, 0))(obj, blocks, bmask, keys,
                                                meta)
     alive = ~dead
     smask = smask & alive[:, None]
     vals = jnp.where(alive, vals, -jnp.inf)
-    return rows, smask, vals, calls
+    return rows, smask, vals, calls, depth
 
 
 def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
@@ -152,7 +156,7 @@ def run_round(obj, blocks: jax.Array, bmask: jax.Array, keys: jax.Array,
     fn = _shard_map(
         local, mesh=mesh,
         in_specs=in_specs,
-        out_specs=(spec, spec, spec, spec),
+        out_specs=(spec, spec, spec, spec, spec),
         check_vma=False)  # replicated obj feeds a machine-varying scan carry
     return RoundResult(*jax.jit(fn)(*operands))
 
@@ -173,7 +177,8 @@ def dead_wave_result(machines: int, k: int, width: int) -> RoundResult:
         sol_rows=jnp.zeros((machines, k, width), jnp.float32),
         sol_mask=jnp.zeros((machines, k), bool),
         values=jnp.full((machines,), -jnp.inf, jnp.float32),
-        oracle_calls=jnp.zeros((machines,), jnp.int32))
+        oracle_calls=jnp.zeros((machines,), jnp.int32),
+        depth=jnp.zeros((machines,), jnp.int32))
 
 
 def shard_round_inputs(mesh: Mesh, blocks, bmask, keys, meta=None):

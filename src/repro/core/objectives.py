@@ -169,6 +169,108 @@ class ExemplarClustering:
             count_step, (jnp.float32(0.0), counts0, mask), sel_idx)
         return sel_idx, sel_mask, value, jnp.sum(per_step)
 
+    # -- low-adaptivity hook (algorithms.threshold_batch) ------------------
+    def fused_threshold_select(self, T: jax.Array, mask: jax.Array, k: int,
+                               *, eps: float = 0.5,
+                               weights: jax.Array | None = None,
+                               budget: float | None = None,
+                               group_ids: jax.Array | None = None,
+                               caps: tuple[int, ...] | None = None,
+                               x_scale: jax.Array | None = None,
+                               x_zp: jax.Array | None = None,
+                               impl: str = "auto", bn: int = 256):
+        """τ-ladder threshold-batch selection: O(log(n·Δ)/ε) launches.
+
+        One initial gains pass sets ``d_max``; then a ``lax.while_loop``
+        lowers τ geometrically (τ_l = d_max·(1−ε)^l) and each iteration
+        issues ONE :func:`repro.kernels.ops.threshold_select` launch that
+        batch-accepts every qualifying prefix-feasible item at that level
+        (kernels/threshold_select.py).  The loop exits early once k items
+        are selected or no available item is singly feasible, so the
+        sequential adaptive depth is ``1 + launches ≤ 1 + ⌈log(2k/ε)/ε⌉``
+        instead of the fused greedy's k.
+
+        Returns ``(sel_idx, sel_mask, value, oracle_calls, launches)``.
+        Oracle-call accounting: every launch (and the init pass) evaluates
+        one marginal gain per available singly-feasible candidate —
+        the same convention as :func:`algorithms.threshold_greedy`.
+        Scalar launch state (used weight, per-group counts, count) is
+        recomputed driver-side from the accept mask in plain jnp, so the
+        driver carry is bit-identical across kernel impls by construction.
+        """
+        import math as _math
+
+        import jax.numpy as _jnp
+        from repro.core.constraints import KNAPSACK_TOL
+
+        cd = _jnp.bfloat16 if self.score_dtype == "bfloat16" else None
+        n = T.shape[0]
+        state = self.init_state(T, mask)
+        cm0, base = state["cur_min"], state["base"]
+        w32 = None if weights is None else weights.astype(jnp.float32)
+        gid = None if group_ids is None else group_ids.astype(jnp.int32)
+        caps_arr = None if caps is None else jnp.asarray(caps, jnp.int32)
+        G = 1 if caps is None else int(caps_arr.shape[0])
+
+        def _cand(avail, used, counts):
+            c = avail
+            if w32 is not None:
+                c = c & (used + w32 <= budget + KNAPSACK_TOL)
+            if gid is not None:
+                c = c & (counts[gid] < caps_arr[gid])
+            return c
+
+        counts0 = jnp.zeros((G,), jnp.int32)
+        cand0 = _cand(mask, jnp.float32(0.0), counts0)
+        g0 = kops.exemplar_gains(T, self.eval_set, cm0, compute_dtype=cd,
+                                 x_scale=x_scale, x_zp=x_zp,
+                                 eval_weights=self._ew())
+        d_max = jnp.maximum(jnp.max(jnp.where(cand0, g0, 0.0)), 1e-12)
+        init_calls = jnp.sum(cand0.astype(jnp.int32))
+        n_levels = max(1, _math.ceil(_math.log(2.0 * k / eps) / eps))
+
+        def cond(carry):
+            cm, avail, used, counts, count, sel_idx, calls, launches, l = carry
+            return ((l < n_levels) & (count < k)
+                    & jnp.any(_cand(avail, used, counts)))
+
+        def body(carry):
+            cm, avail, used, counts, count, sel_idx, calls, launches, l = carry
+            tau = d_max * (1.0 - eps) ** l.astype(jnp.float32)
+            calls = calls + jnp.sum(
+                _cand(avail, used, counts).astype(jnp.int32))
+            acc, cm = kops.threshold_select(
+                T, self.eval_set, cm, avail, tau, k, used=used, counts=counts,
+                count=count, bn=bn, impl=impl, compute_dtype=cd,
+                weights=w32, budget=budget, group_ids=gid, caps=caps,
+                x_scale=x_scale, x_zp=x_zp, eval_weights=self._ew())
+            # scatter accepted block positions into sel_idx in index order;
+            # prefix feasibility guarantees order stays < k (mode="drop"
+            # discards the k-sentinel of non-accepted rows)
+            order = count + jnp.cumsum(acc.astype(jnp.int32)) - 1
+            pos = jnp.where(acc, order, k)
+            sel_idx = sel_idx.at[pos].set(jnp.arange(n, dtype=jnp.int32),
+                                          mode="drop")
+            count = count + jnp.sum(acc.astype(jnp.int32))
+            if w32 is not None:
+                used = used + jnp.sum(jnp.where(acc, w32, 0.0))
+            if gid is not None:
+                for grp in range(G):
+                    counts = counts.at[grp].add(
+                        jnp.sum((acc & (gid == grp)).astype(jnp.int32)))
+            avail = avail & ~acc
+            return (cm, avail, used, counts, count, sel_idx, calls,
+                    launches + 1, l + 1)
+
+        carry0 = (cm0, mask, jnp.float32(0.0), counts0, jnp.int32(0),
+                  jnp.full((k,), -1, jnp.int32), init_calls, jnp.int32(0),
+                  jnp.int32(0))
+        cm, _, _, _, count, sel_idx, calls, launches, _ = jax.lax.while_loop(
+            cond, body, carry0)
+        value = base - self._mean_score(cm)
+        sel_mask = jnp.arange(k) < count
+        return sel_idx, sel_mask, value, calls, launches
+
     # -- set-function oracle (for cross-machine comparison / tests) ------
     def evaluate(self, S: jax.Array, s_mask: jax.Array) -> jax.Array:
         """f(S) for a (m, d) block of selected rows with validity mask."""

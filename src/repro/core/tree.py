@@ -75,8 +75,11 @@ PERMUTATIONS = ("dense", "feistel")
 class TreeConfig:
     k: int
     capacity: int                      # μ — max items per machine
-    algorithm: str = "greedy"          # greedy | stochastic_greedy | threshold_greedy
+    algorithm: str = "greedy"          # greedy | stochastic_greedy |
+    #                                    threshold_greedy | threshold_batch
     eps: float = 0.5                   # for stochastic/threshold variants
+    #                                    (threshold_batch: τ-ladder decay —
+    #                                    the CLI's --batch-eps lands here)
     seed: int = 0
     checkpoint_dir: str | None = None
     resume: bool = False
@@ -192,6 +195,14 @@ class TreeResult:
     #                                        hedges, evictions, drops)
     round_walls: list[float] | None = None  # wall seconds per round, in
     #                                         round order (round 0 first)
+    depth_per_round: list[int] | None = None  # per-round sequential solve
+    #                             depth: max over the round's machines of
+    #                             the dependent kernel launches their solve
+    #                             paid (machines run in parallel)
+    solve_depth: int = 0        # Σ depth_per_round — the tree's end-to-end
+    #                             adaptive depth on the solve track (greedy
+    #                             pays k per round; threshold_batch pays
+    #                             one τ-ladder per round)
     total_wall_s: float = 0.0   # whole tree_maximize wall clock
     manifest: Any = None        # repro.engine.telemetry.RunManifest when
     #                             cfg.telemetry was attached (also written
@@ -293,9 +304,13 @@ def _dispatch_round(obj, blocks, bmask, kalg, t, cfg: TreeConfig, mesh,
 
 
 @jax.jit
-def _fold_round(res_rows, res_mask, res_vals, res_calls,
-                best_rows, best_mask, best_val, total_calls):
-    """Device-side best-solution tracking (old host argmax, jitted)."""
+def _fold_round(res_rows, res_mask, res_vals, res_calls, res_depth,
+                best_rows, best_mask, best_val, total_calls, round_depth):
+    """Device-side best-solution tracking (old host argmax, jitted).
+
+    ``round_depth`` is the running max of per-machine sequential solve
+    depth across the folds of one round (machines — and waves — run in
+    parallel, so a round's adaptive depth is a max, not a sum)."""
     i_best = jnp.argmax(res_vals)                  # lowest index on ties
     v_best = res_vals[i_best]
     improved = v_best > best_val
@@ -303,7 +318,8 @@ def _fold_round(res_rows, res_mask, res_vals, res_calls,
     best_mask = jnp.where(improved, res_mask[i_best], best_mask)
     best_val = jnp.where(improved, v_best, best_val)
     total_calls = total_calls + jnp.sum(res_calls)
-    return best_rows, best_mask, best_val, total_calls, v_best
+    round_depth = jnp.maximum(round_depth, jnp.max(res_depth))
+    return best_rows, best_mask, best_val, total_calls, round_depth, v_best
 
 
 def _fast_forward_key(key, start_round: int):
@@ -653,6 +669,7 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
 
     sol_rows, sol_mask = [], []
     carry = [best_rows, best_mask, best_val, total_calls,
+             jnp.int32(0),                                 # round-depth max
              jnp.float32(-jnp.inf)]                        # [..., v_round]
 
     def solve(i: int, payload) -> jax.Array:
@@ -678,10 +695,11 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
             res = _dispatch_blocks(obj, blocks, bmask, keys[w0:w1],
                                    dead[w0:w1], cfg, mesh, attr_dim=a,
                                    constraint=constraint, meta=meta)
-        carry[0], carry[1], carry[2], carry[3], v_wave = _fold_round(
+        (carry[0], carry[1], carry[2], carry[3], carry[4],
+         v_wave) = _fold_round(
             res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
-            *carry[:4])
-        carry[4] = jnp.maximum(carry[4], v_wave)
+            res.depth, *carry[:5])
+        carry[5] = jnp.maximum(carry[5], v_wave)
         sol_rows.append(res.sol_rows)
         sol_mask.append(res.sol_mask)
         return v_wave
@@ -690,7 +708,8 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
                        tracer=tracer)
     if supervisor is not None:
         estats.fault_stats = supervisor.stats
-    best_rows, best_mask, best_val, total_calls, v_round = carry
+    (best_rows, best_mask, best_val, total_calls, round_depth,
+     v_round) = carry
 
     assert cursor["w0"] == Mp and sum(
         t.machines for t in estats.traces) == Mp, (cursor["w0"], Mp)
@@ -719,8 +738,8 @@ def _stream_round0(obj, source: GroundSetSource, kpart, kalg, L: int,
     if cfg.capacity_bytes is not None:
         assert stats.peak_wave_bytes <= cfg.capacity_bytes, (
             stats.peak_wave_bytes, cfg.capacity_bytes)
-    return (best_rows, best_mask, best_val, total_calls, v_round,
-            rows_in, mask_in, stats, estats)
+    return (best_rows, best_mask, best_val, total_calls, round_depth,
+            v_round, rows_in, mask_in, stats, estats)
 
 
 def _attr_setup(data, constraint, attrs, streaming: bool):
@@ -855,6 +874,7 @@ def tree_maximize(
     key = _fast_forward_key(key, start_round)
     machines_per_round: list[int] = []
     round_values: list[float] = []
+    depth_per_round: list[int] = []
     r_bound = cfg.round_bound_exact(n)
     t = start_round
     ingest: IngestStats | None = None
@@ -881,14 +901,16 @@ def tree_maximize(
             if t == 0 and streaming:
                 # ---- wave-scheduled ingestion: ≤ W·μ rows device-resident
                 machines_per_round.append(L)
-                (best_rows, best_mask, best_val, total_calls, v_best,
-                 rows_in, mask_in, ingest, engine_stats) = _stream_round0(
+                (best_rows, best_mask, best_val, total_calls, round_depth,
+                 v_best, rows_in, mask_in, ingest,
+                 engine_stats) = _stream_round0(
                     obj, source, kpart, kalg, L, cfg, mesh, fail_machines,
                     wave_machines, best_rows, best_mask, best_val,
                     total_calls, constraint=constraint, attrs_np=attrs_np,
                     wave_schedule=wave_schedule,
                     fault_injector=fault_injector)
                 round_values.append(_host_scalar(v_best))
+                depth_per_round.append(int(_host_scalar(round_depth)))
             else:
                 # ---- partition A_t into L balanced parts (virtual-location)
                 if t == 0:
@@ -903,11 +925,13 @@ def tree_maximize(
                                       fail_machines, attr_dim=a,
                                       constraint=constraint)
 
-                (best_rows, best_mask, best_val, total_calls,
+                (best_rows, best_mask, best_val, total_calls, round_depth,
                  v_best) = _fold_round(
                     res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
-                    best_rows, best_mask, best_val, total_calls)
+                    res.depth, best_rows, best_mask, best_val, total_calls,
+                    jnp.int32(0))
                 round_values.append(_host_scalar(v_best))
+                depth_per_round.append(int(_host_scalar(round_depth)))
 
                 # ---- union of partial solutions = next A (device-resident)
                 rows_in = res.sol_rows.reshape(-1, d + a)
@@ -943,8 +967,12 @@ def tree_maximize(
             rt1 = time.perf_counter()
             round_walls.append(rt1 - rt0)
             if tracer is not None:
+                # depth rides on the round span: τ-levels run inside the
+                # fused launch (device while_loop), so per-level spans are
+                # reported as the measured ladder length, not host timings
                 tracer.emit("round", "round", rt0, rt1, round=t - 1,
-                            machines=machines_per_round[-1])
+                            machines=machines_per_round[-1],
+                            depth=depth_per_round[-1])
 
             if L == 1:        # that was the final single-machine round
                 break
@@ -975,7 +1003,9 @@ def tree_maximize(
         ingest=ingest, engine_stats=engine_stats,
         checkpoint_stats=ckpt_stats,
         fault_stats=engine_stats.fault_stats if engine_stats else None,
-        round_walls=round_walls, total_wall_s=t_run1 - t_run0)
+        round_walls=round_walls, total_wall_s=t_run1 - t_run0,
+        depth_per_round=depth_per_round,
+        solve_depth=sum(depth_per_round))
     if tracer is not None:
         result.manifest = _build_run_manifest(cfg, result, n, d, source,
                                               streaming, tracer)
@@ -1068,6 +1098,7 @@ def _tree_maximize_host(
     key = _fast_forward_key(key, start_round)
     machines_per_round: list[int] = []
     round_values: list[float] = []
+    depth_per_round: list[int] = []
     r_bound = cfg.round_bound_exact(n)
     t = start_round
 
@@ -1097,6 +1128,7 @@ def _tree_maximize_host(
         vals = np.asarray(res.values)
         calls = int(np.asarray(res.oracle_calls).sum())
         total_calls += calls
+        depth_per_round.append(int(np.asarray(res.depth).max()))
         i_best = int(np.argmax(vals))
         round_values.append(float(vals[i_best]))
         if vals[i_best] > best_val:
@@ -1122,4 +1154,6 @@ def _tree_maximize_host(
     return _finish_result(
         best_rows, best_mask, d, a, constraint,
         value=best_val, rounds=t, oracle_calls=total_calls,
-        machines_per_round=machines_per_round, round_values=round_values)
+        machines_per_round=machines_per_round, round_values=round_values,
+        depth_per_round=depth_per_round,
+        solve_depth=sum(depth_per_round))

@@ -372,6 +372,12 @@ def feed_result_metrics(registry: MetricsRegistry, result) -> None:
             registry.histogram("ckpt.write_s", **lab).observe(r.write_s)
             registry.histogram("ckpt.wait_s", **lab).observe(r.wait_s)
         registry.gauge("ckpt.hidden_fraction", **lab).set(cs.hidden_fraction)
+    depths = getattr(result, "depth_per_round", None)
+    if depths:
+        registry.gauge("solve.depth_total").set(
+            int(getattr(result, "solve_depth", 0)))
+        for dv in depths:
+            registry.histogram("solve.depth_per_round").observe(int(dv))
 
 
 # ---------------------------------------------------------------------------
@@ -447,6 +453,10 @@ class RunManifest:
     serve: dict | None = None               # selection-service counters
     #                                         (requests/batches/latency/
     #                                         compile-cache/deltas)
+    adaptivity: dict | None = None          # sequential solve-depth record
+    #                                         (launches per round, τ-ladder
+    #                                         totals vs the greedy k·rounds
+    #                                         baseline)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -571,6 +581,19 @@ def build_manifest(cfg, result, *, n: int, d: int, dtype_label: str,
                         "write_s": cs.write_s, "wait_s": cs.wait_s,
                         "hidden_s": cs.hidden_s,
                         "hidden_fraction": cs.hidden_fraction}
+    depths = result.depth_per_round
+    if depths:
+        # the greedy baseline pays k dependent launches per round; the
+        # reduction factor is the headline adaptivity win
+        greedy_depth = cfg.k * int(result.rounds)
+        m.adaptivity = {
+            "algorithm": cfg.algorithm, "eps": cfg.eps,
+            "solve_depth": int(result.solve_depth),
+            "depth_per_round": [int(v) for v in depths],
+            "greedy_depth": greedy_depth,
+            "reduction": (greedy_depth / result.solve_depth
+                          if result.solve_depth else 0.0),
+        }
     walls = result.round_walls or []
     m.phases = {
         "total_wall_s": float(result.total_wall_s or 0.0),
@@ -638,6 +661,14 @@ def format_report(m: RunManifest) -> list[str]:
             f"checkpoint: {ck['mode']} rounds={ck['rounds']} "
             f"write={ck['write_s']:.3f}s stalled={ck['wait_s']:.3f}s "
             f"hidden={ck['hidden_fraction']:.2%}")
+    if m.adaptivity is not None:
+        ad = m.adaptivity
+        lines.append(
+            f"adaptivity: alg={ad['algorithm']} eps={ad['eps']} "
+            f"solve_depth={ad['solve_depth']} "
+            f"depth/round={ad['depth_per_round']} "
+            f"greedy_depth={ad['greedy_depth']} "
+            f"reduction={ad['reduction']:.1f}x")
     if m.feasibility is not None:
         fz = m.feasibility
         lines.append(f"feasibility: {'OK' if fz['ok'] else 'VIOLATED'} "

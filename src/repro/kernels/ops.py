@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.exemplar_gains import exemplar_gains_pallas
 from repro.kernels.greedy_select import greedy_select_pallas
+from repro.kernels.threshold_select import threshold_select_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rbf_kernel import rbf_kernel_pallas
 from repro.kernels.wkv6 import wkv6_pallas
@@ -233,6 +234,107 @@ def greedy_select(
                                    m_true=m, compute_dtype=cd, budget=bud,
                                    caps=cp, interpret=_interpret())
     return sel, cm[:m]
+
+
+def threshold_select(
+    X: jax.Array,
+    E: jax.Array,
+    cur_min: jax.Array,
+    mask: jax.Array,
+    tau,
+    k: int,
+    *,
+    used=None,
+    counts: jax.Array | None = None,
+    count=None,
+    impl: str = "auto",
+    bn: int = 256,
+    bm: int = 128,
+    compute_dtype=None,
+    weights: jax.Array | None = None,
+    budget: float | None = None,
+    group_ids: jax.Array | None = None,
+    caps: tuple[int, ...] | None = None,
+    x_scale: jax.Array | None = None,
+    x_zp: jax.Array | None = None,
+    eval_weights: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One τ-level of threshold-batch selection: batch-accept in one launch.
+
+    Returns ``(accept, cur_min_out)`` — see kernels/threshold_select.py.
+    ``accept`` is a (n,) bool mask of items committed at this τ-level;
+    the caller recomputes its scalar launch state (``used``, ``counts``,
+    ``count``, availability) from it in plain jnp, which keeps the driver
+    loop bit-identical across impls by construction.
+
+    The semantics are block-sequential at granularity ``bn`` (prefix-stop
+    acceptance — see the kernel docstring), so ``bn`` is part of the
+    function's *meaning* here, not just a tile size: both impls honour the
+    same ``bn`` and are pinned bit-identical at it.  ``tau``/``used``/
+    ``counts``/``count`` are traced scalars (the τ-ladder runs as one
+    ``lax.while_loop``); ``budget``/``caps`` may themselves be traced
+    (dynamic serve parameters), which — like ``eval_weights`` — dispatches
+    to the fused reference, exactly as :func:`greedy_select` does.
+
+    The Pallas path streams X block-by-block but keeps E VMEM-resident,
+    so ``auto`` reuses the greedy VMEM budget check (conservative: the
+    megakernel actually admits larger candidate blocks than greedy).
+    """
+    assert (weights is None) == (budget is None), "weights and budget pair up"
+    assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
+    assert (x_scale is None) == (x_zp is None), "x_scale and x_zp pair up"
+    n, m = X.shape[0], E.shape[0]
+    bn = min(bn, max(8, n))
+    bm = min(bm, max(8, m))
+    used0 = jnp.float32(0.0) if used is None else jnp.asarray(used, jnp.float32)
+    count0 = jnp.int32(0) if count is None else jnp.asarray(count, jnp.int32)
+    G = 0
+    if caps is not None:
+        G = len(caps) if isinstance(caps, (tuple, list)) else caps.shape[0]
+    counts0 = (jnp.zeros((max(G, 1),), jnp.int32) if counts is None
+               else jnp.asarray(counts, jnp.int32))
+    oversized = not _greedy_select_fits_vmem(n, m, X.shape[1], bn,
+                                             x_itemsize=X.dtype.itemsize)
+    dynamic_params = (isinstance(budget, jax.Array)
+                      or isinstance(caps, jax.Array)
+                      or eval_weights is not None)
+    if impl == "pallas" and dynamic_params:
+        raise ValueError("threshold_select: traced budget/caps and "
+                         "eval_weights require the fused reference impl "
+                         "(the Pallas megakernel takes them as "
+                         "compile-time statics)")
+    if not _use_pallas(impl) or (impl == "auto" and (oversized
+                                                    or dynamic_params)):
+        return ref.threshold_select(X, E, cur_min, mask,
+                                    jnp.asarray(tau, jnp.float32),
+                                    used0, counts0, count0, k=k, bn=bn,
+                                    compute_dtype=compute_dtype,
+                                    weights=weights, budget=budget,
+                                    group_ids=group_ids, caps=caps,
+                                    x_scale=x_scale, x_zp=x_zp,
+                                    eval_weights=eval_weights)
+    Xp = _pad_rows(X, bn)
+    avp = _pad_rows(mask.astype(jnp.float32), bn)
+    Ep = _pad_rows(E, bm)
+    cmp_ = _pad_rows(cur_min, bm)  # zero-pad ⇒ padded columns contribute 0
+    # padded weight/group/dequant rows are availability-0, values inert
+    wp = None if weights is None else _pad_rows(weights.astype(jnp.float32), bn)
+    bud = None if budget is None else float(budget)
+    gp = (None if group_ids is None
+          else _pad_rows(group_ids.astype(jnp.int32), bn))
+    cp = None if caps is None else tuple(int(c) for c in caps)
+    xsp = None if x_scale is None else _pad_rows(x_scale.astype(jnp.float32), bn)
+    xzp = None if x_zp is None else _pad_rows(x_zp.astype(jnp.float32), bn)
+    fscal = jnp.stack([jnp.asarray(tau, jnp.float32), used0])
+    iscal = (jnp.concatenate([count0[None], counts0[:G]]) if cp is not None
+             else count0[None])
+    cd = None if _on_tpu() else (
+        None if compute_dtype is None else jnp.dtype(compute_dtype).name)
+    acc, cm = threshold_select_pallas(Xp, Ep, cmp_, avp, fscal, iscal,
+                                      wp, gp, xsp, xzp, k=k, bn=bn,
+                                      m_true=m, compute_dtype=cd, budget=bud,
+                                      caps=cp, interpret=_interpret())
+    return acc[:n] > 0, cm[:m]
 
 
 def rbf_kernel(

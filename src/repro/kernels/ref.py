@@ -170,6 +170,113 @@ def greedy_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
     return sel_idx, cur_min
 
 
+def threshold_select(X: jax.Array, E: jax.Array, cur_min: jax.Array,
+                     mask: jax.Array, tau: jax.Array,
+                     used: jax.Array, counts: jax.Array, count: jax.Array,
+                     k: int, bn: int = 256,
+                     compute_dtype=None, weights: jax.Array | None = None,
+                     budget: float | None = None,
+                     group_ids: jax.Array | None = None,
+                     caps: tuple[int, ...] | None = None,
+                     x_scale: jax.Array | None = None,
+                     x_zp: jax.Array | None = None,
+                     eval_weights: jax.Array | None = None
+                     ) -> tuple[jax.Array, jax.Array]:
+    """One τ-level of threshold-batch selection (pure-jnp oracle).
+
+    Scores every candidate against the exemplar objective's marginal gains
+    under the incoming ``cur_min`` and accepts a *batch* of qualifying
+    items in one pass, instead of one argmax per launch.  Returns
+    ``(accept, cur_min_out)``:
+
+      accept       — (n,) bool, items committed at this τ-level
+      cur_min_out  — (m,) running minimum after folding all accepted rows
+
+    Semantics are **block-sequential** at granularity ``bn`` (the same
+    block size the Pallas megakernel tiles at — the two are bit-identical
+    per block):
+
+      * a block's gains are computed against the ``cur_min`` produced by
+        all *earlier* blocks (within the block, gains are frozen — the
+        intra-block staleness is the batching trade the ε-ladder bounds),
+      * an item *qualifies* when it is available, its gain ≥ τ, and it is
+        singly feasible against the block-entry constraint state,
+      * the block accepts the maximal **prefix** of qualifying items whose
+        cumulative commitment stays feasible: inclusive cumulative counts /
+        weights / per-group counts are checked against ``k`` / ``budget``
+        / ``caps``; the first qualifying item that would overflow stops
+        acceptance for the whole launch (later blocks accept nothing),
+        which keeps the accepted set prefix-feasible by construction,
+      * accepted rows fold into ``cur_min`` via the contraction-form
+        distance matrix (a masked row-min — no per-item refresh order to
+        match, since this kernel has no step-wise counterpart).
+
+    ``tau``, ``used`` (running knapsack weight), ``counts`` (per-group,
+    ``(G,)`` int32 — pass shape (1,) when unconstrained), and ``count``
+    (items selected so far) are traced scalars so the τ-ladder driver can
+    run as one ``lax.while_loop``.  ``budget``/``caps`` may be traced
+    (dynamic serve parameters) — every use below is tracer-safe.
+    """
+    from repro.core.constraints import KNAPSACK_TOL
+
+    n, _ = X.shape
+    m = E.shape[0]
+    assert (weights is None) == (budget is None), "weights and budget pair up"
+    assert (group_ids is None) == (caps is None), "group_ids and caps pair up"
+    X = dequantize_rows(X, x_scale, x_zp)
+    d2 = _sqdist(X, E, compute_dtype)                 # (n, m), τ-invariant
+    if caps is not None:
+        caps_arr = jnp.asarray(caps, jnp.int32)
+        G = int(caps_arr.shape[0])
+        gid = group_ids.astype(jnp.int32)
+    used = jnp.asarray(used, jnp.float32)
+    count = jnp.asarray(count, jnp.int32)
+    cm = cur_min
+    stopped = jnp.zeros((), bool)
+    inf = jnp.float32(jnp.inf)
+    accepts = []
+    for b0 in range(0, n, bn):
+        b1 = min(b0 + bn, n)
+        d2b = d2[b0:b1]
+        contrib = jnp.maximum(cm[None, :] - d2b, 0.0)
+        if eval_weights is not None:
+            contrib = contrib * eval_weights[None, :]
+        g = jnp.sum(contrib, axis=-1) / m
+        q = mask[b0:b1] & (g >= tau)
+        if weights is not None:
+            wb = weights[b0:b1]
+            q = q & (used + wb <= budget + KNAPSACK_TOL)
+        if caps is not None:
+            gidb = gid[b0:b1]
+            open_any = jnp.zeros_like(q)
+            for grp in range(G):
+                open_any = open_any | ((gidb == grp)
+                                       & (counts[grp] < caps_arr[grp]))
+            q = q & open_any
+        cumn = jnp.cumsum(q.astype(jnp.int32))
+        violate = (count + cumn) > k
+        if weights is not None:
+            cumw = jnp.cumsum(jnp.where(q, wb, 0.0))
+            violate = violate | (used + cumw > budget + KNAPSACK_TOL)
+        if caps is not None:
+            for grp in range(G):
+                cg = jnp.cumsum((q & (gidb == grp)).astype(jnp.int32))
+                violate = violate | ((counts[grp] + cg) > caps_arr[grp])
+        acc = q & (jnp.cumsum(violate.astype(jnp.int32)) == 0) & ~stopped
+        stopped = stopped | jnp.any(violate & q)
+        count = count + jnp.sum(acc.astype(jnp.int32))
+        if weights is not None:
+            used = used + jnp.sum(jnp.where(acc, wb, 0.0))
+        if caps is not None:
+            for grp in range(G):
+                counts = counts.at[grp].add(
+                    jnp.sum((acc & (gidb == grp)).astype(jnp.int32)))
+        cm = jnp.minimum(cm, jnp.min(jnp.where(acc[:, None], d2b, inf),
+                                     axis=0))
+        accepts.append(acc)
+    return jnp.concatenate(accepts), cm
+
+
 def rbf_kernel(X: jax.Array, Y: jax.Array, h: float) -> jax.Array:
     """K[i, j] = exp(-||x_i - y_j||^2 / h^2)  (paper §4.2, h=0.5)."""
     return jnp.exp(-pairwise_sqdist(X, Y) / (h * h))

@@ -2,7 +2,8 @@
 
     PYTHONPATH=src python -m repro.launch.submod \
         --dataset csn-20k --k 50 --capacity 400 \
-        [--algorithm greedy|stochastic_greedy|threshold_greedy] \
+        [--algorithm greedy|stochastic_greedy|threshold_greedy|threshold-batch] \
+        [--batch-eps E] \
         [--source resident|chunked|sharded] [--wave-machines W] \
         [--engine sync|pipelined] [--hosts P] [--capacity-bytes B] \
         [--wave-autotune] [--async-checkpoint] [--prefetch-depth D] \
@@ -77,6 +78,18 @@ races.  ``--fault-retries`` / ``--fault-backoff`` / ``--no-hedge`` /
 report line gives grep-able recovery counters (retries, hedges, evictions,
 dropped rows vs the budget).  Transient-only and evicted runs stay
 bit-identical to the fault-free run; only *dropped* waves change output.
+
+``--algorithm threshold-batch`` selects the low-adaptivity solve tier:
+each per-machine solve runs the threshold-batch megakernel, which scores
+the whole candidate block against a threshold τ per launch and
+batch-accepts every qualifying prefix-feasible item, lowering τ
+geometrically (τ ← τ(1−ε)) between launches.  Sequential solve depth per
+machine drops from k kernel launches to O(log(2k/ε)/ε) — the quality
+floor is f(S) ≥ (1−ε)·f(greedy) on the same block.  ``--batch-eps`` sets
+the ladder decay ε (overrides ``--eps`` for this tier; default 0.5).
+The report gains a grep-able ``adaptivity:`` line with the measured
+per-round launch depth, the equivalent greedy depth (k·rounds), and the
+reduction factor.
 
 ``--constraint`` applies a hereditary constraint to every machine's solve
 (grammar: ``knapsack:budget=F[:col=I]``, ``partition:caps=I,I,..[:col=I]``,
@@ -327,8 +340,15 @@ def main():
                     choices=sorted(datasets.REGISTRY))
     ap.add_argument("--k", type=int, default=50)
     ap.add_argument("--capacity", type=int, default=400)
-    ap.add_argument("--algorithm", default="greedy")
+    ap.add_argument("--algorithm", default="greedy",
+                    help="per-machine selection tier: greedy, "
+                         "stochastic_greedy, threshold_greedy, or "
+                         "threshold-batch (low-adaptivity τ-ladder)")
     ap.add_argument("--eps", type=float, default=0.5)
+    ap.add_argument("--batch-eps", type=float, default=None,
+                    help="τ-ladder decay ε for --algorithm threshold-batch "
+                         "(overrides --eps for that tier; smaller ε = "
+                         "tighter quality floor, deeper ladder)")
     ap.add_argument("--n-eval", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--source", default="resident",
@@ -428,6 +448,10 @@ def main():
     ap.add_argument("--serve-requests", type=int, default=12,
                     help="request-stream length for --serve-smoke")
     args = ap.parse_args()
+    # CLI spells the tier with a hyphen; internal names use underscores
+    args.algorithm = args.algorithm.replace("-", "_")
+    if args.algorithm == "threshold_batch" and args.batch_eps is not None:
+        args.eps = args.batch_eps
 
     if args.serve_smoke:
         serve_smoke(args)

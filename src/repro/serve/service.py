@@ -76,11 +76,18 @@ class SelectionRequest:
     vector — when given, the exemplar objective is reweighted toward
     evaluation points near the query (:func:`query_relevance_weights`).
     ``seed`` perturbs only the repartition chain of rounds ≥ 1.
+
+    ``algorithm``/``eps`` select the request's solve tier (e.g. the
+    low-adaptivity ``"threshold_batch"`` ladder for latency-bound
+    requests); None inherits the service defaults.  Both are fuse-key
+    dimensions, so mixed-tier batches split into per-tier fused launches.
     """
     k: int
     constraint: Any = None
     query: Any = None
     seed: int = 0
+    algorithm: str | None = None
+    eps: float | None = None
 
 
 @dataclasses.dataclass
@@ -94,6 +101,8 @@ class SelectionResult:
     detail: str
     latency_s: float = 0.0
     batch_size: int = 1
+    solve_depth: int = 0        # sequential kernel-launch depth of the solve
+    #                             (Σ over rounds of the per-round machine max)
 
 
 # ---------------------------------------------------------------------------
@@ -242,7 +251,8 @@ def make_round0_fn(fuse_key):
         cons = build_constraint(sig, cparams)
         res = run_round(obj, blocks, bmask, keys, k=k, alg=alg, eps=eps,
                         attr_dim=a, constraint=cons)
-        return res.sol_rows, res.sol_mask, res.values, res.oracle_calls
+        return (res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
+                res.depth)
 
     return round0
 
@@ -257,14 +267,15 @@ def make_tail_fn(fuse_key):
     ladder = round_ladder(Mp, k, mu)
     w = d + a
 
-    def tail(sol_rows, sol_mask, values, calls, eval_set, ew, cparams,
-             seed, key1):
+    def tail(sol_rows, sol_mask, values, calls, depth, eval_set, ew,
+             cparams, seed, key1):
         obj = _make_obj(eval_set, ew, weighted)
         cons = build_constraint(sig, cparams)
-        best_rows, best_mask, best_val, total_calls, _ = _fold_round(
-            sol_rows, sol_mask, values, calls,
+        (best_rows, best_mask, best_val, total_calls, solve_depth,
+         _) = _fold_round(
+            sol_rows, sol_mask, values, calls, depth,
             jnp.zeros((k, w), jnp.float32), jnp.zeros((k,), bool),
-            jnp.float32(-jnp.inf), jnp.int32(0))
+            jnp.float32(-jnp.inf), jnp.int32(0), jnp.int32(0))
         rows_in = sol_rows.reshape(-1, w)
         mask_in = sol_mask.reshape(-1)
         chain = jax.random.fold_in(key1, seed)
@@ -274,12 +285,15 @@ def make_tail_fn(fuse_key):
             keys = jax.random.split(kalg, m)
             res = run_round(obj, blk, bm, keys, k=k, alg=alg, eps=eps,
                             attr_dim=a, constraint=cons)
-            best_rows, best_mask, best_val, total_calls, _ = _fold_round(
+            (best_rows, best_mask, best_val, total_calls, round_depth,
+             _) = _fold_round(
                 res.sol_rows, res.sol_mask, res.values, res.oracle_calls,
-                best_rows, best_mask, best_val, total_calls)
+                res.depth, best_rows, best_mask, best_val, total_calls,
+                jnp.int32(0))
+            solve_depth = solve_depth + round_depth
             rows_in = res.sol_rows.reshape(-1, w)
             mask_in = res.sol_mask.reshape(-1)
-        return best_rows, best_mask, best_val, total_calls
+        return best_rows, best_mask, best_val, total_calls, solve_depth
 
     return tail
 
@@ -290,7 +304,7 @@ def make_tail_fn(fuse_key):
 
 
 class CompileCache:
-    """Jitted solve entries with trace accounting.
+    """Jitted solve entries with trace accounting and LRU eviction.
 
     ``entry`` returns the jitted callable for (kind, fuse key, bucket),
     building + jitting it on first use.  A Python-side counter increments
@@ -299,12 +313,27 @@ class CompileCache:
     ``compiles`` is a direct retrace probe: steady-state serving must
     leave it flat, and tests pin that rather than inferring it from
     timings.
+
+    ``capacity`` bounds the entry count: every ``entry`` hit refreshes
+    recency, and inserts past the bound evict the least-recently-used
+    callable (the hit counters *are* the recency signal — a workload's
+    hot fuse keys stay resident).  None (default) keeps the historical
+    unbounded behavior.  An evicted entry's trace count is dropped with
+    it: rebuilding it later is a fresh compile by decision, not the
+    warm-entry retrace ``steady_retraces`` exists to catch.
     """
 
-    def __init__(self):
-        self._fns: dict[tuple, Any] = {}
+    def __init__(self, capacity: int | None = None, metrics=None):
+        import collections
+
+        assert capacity is None or capacity >= 1, capacity
+        self._fns: "collections.OrderedDict[tuple, Any]" = \
+            collections.OrderedDict()
+        self.capacity = capacity
         self.compiles = 0            # trace events across all entries
         self.hits = 0                # entry() calls served by an existing fn
+        self.evictions = 0           # LRU entries dropped at capacity
+        self.metrics = metrics       # telemetry MetricsRegistry, or None
         self._trace_counts: dict[tuple, int] = {}
 
     @property
@@ -321,6 +350,7 @@ class CompileCache:
         fn = self._fns.get(key)
         if fn is not None:
             self.hits += 1
+            self._fns.move_to_end(key)             # refresh LRU recency
             return fn
         inner = build()
 
@@ -332,6 +362,15 @@ class CompileCache:
 
         fn = jax.jit(counted)
         self._fns[key] = fn
+        while self.capacity is not None and len(self._fns) > self.capacity:
+            old_key, _ = self._fns.popitem(last=False)
+            self._trace_counts.pop(old_key, None)
+            self.evictions += 1
+            if self.metrics is not None:
+                self.metrics.counter("serve_compile_cache_evictions").inc()
+        if self.metrics is not None:
+            self.metrics.gauge("serve_compile_cache_entries").set(
+                len(self._fns))
         return fn
 
 
@@ -377,14 +416,27 @@ class SelectionService:
 
     def __init__(self, session: SessionState, eval_set, *,
                  algorithm: str = "greedy", eps: float = 0.5,
-                 tracer=None):
+                 tracer=None, compile_cache_capacity: int | None = None,
+                 sol_cache_capacity: int | None = None):
+        import collections
+
         self.session = session
         self.eval_set = np.asarray(eval_set, np.float32)
         self.algorithm = algorithm
         self.eps = eps
         self.tracer = tracer
-        self.cache = CompileCache()
-        self._sol_cache: dict[tuple, dict] = {}
+        self.cache = CompileCache(
+            capacity=compile_cache_capacity,
+            metrics=tracer.metrics if tracer is not None else None)
+        # round-0 solution cache, LRU-bounded: keys embed the session
+        # generation, so entries from superseded generations can never hit
+        # again — the recency order drains them first once capacity binds
+        self._sol_cache: "collections.OrderedDict[tuple, dict]" = \
+            collections.OrderedDict()
+        self.sol_cache_capacity = sol_cache_capacity
+        assert sol_cache_capacity is None or sol_cache_capacity >= 1, (
+            sol_cache_capacity)
+        self.sol_evictions = 0
         self._dev: dict[str, Any] = {}
         self._geom: tuple | None = None
         self.requests_served = 0
@@ -399,6 +451,7 @@ class SelectionService:
         self.last_value = 0.0
         self.last_calls = 0
         self.last_rounds = 0
+        self.last_depth = 0
         self._sync_geometry()
 
     # -- geometry / staging ----------------------------------------------
@@ -446,7 +499,9 @@ class SelectionService:
         if sig != ("none",):
             assert s.a > 0, "constrained request against an attribute-less " \
                             "session — ingest with attrs"
-        fuse_key = (req.k, self.algorithm, self.eps, sig, weighted,
+        alg = self.algorithm if req.algorithm is None else req.algorithm
+        eps = self.eps if req.eps is None else req.eps
+        fuse_key = (req.k, alg, eps, sig, weighted,
                     s.Mp, s.mu, s.d, a_used, self.eval_set.shape[0])
         round_ladder(s.Mp, req.k, s.mu)       # validate early (may raise)
         h = hashlib.sha1()
@@ -505,10 +560,12 @@ class SelectionService:
         sols: list[tuple | None] = [None] * len(items)
         misses: list[int] = []
         for j, (_i, prep) in enumerate(items):
-            ent = self._sol_cache.get((fk, prep.fp, gen))
+            ck = (fk, prep.fp, gen)
+            ent = self._sol_cache.get(ck)
             if ent is None:
                 misses.append(j)
                 continue
+            self._sol_cache.move_to_end(ck)        # refresh LRU recency
             changed = np.flatnonzero(ent["versions"] != s.versions)
             if changed.size:
                 self._partial_resolve(fk, prep, ent, changed, blocks, bmask)
@@ -525,6 +582,7 @@ class SelectionService:
         sol_mask = pad([np.asarray(sv[1]) for sv in sols])
         values = pad([np.asarray(sv[2]) for sv in sols])
         calls = pad([np.asarray(sv[3]) for sv in sols])
+        depths = pad([np.asarray(sv[4]) for sv in sols])
         ews = pad([p.ew for _i, p in items])
         cps = pad([p.cparams for _i, p in items])
         seeds = pad([np.int32(p.req.seed) for _i, p in items])
@@ -532,23 +590,25 @@ class SelectionService:
         def build_tail():
             body = make_tail_fn(fk)
 
-            def batched(srows, smask, vals, cls, eval_set, ews, cps,
+            def batched(srows, smask, vals, cls, dps, eval_set, ews, cps,
                         seeds, key1):
                 def one(x):
-                    sr, sm, v, c, ew, cp, sd = x
-                    return body(sr, sm, v, c, eval_set, ew, cp, sd, key1)
-                return jax.lax.map(one, (srows, smask, vals, cls, ews,
-                                         cps, seeds))
+                    sr, sm, v, c, dp, ew, cp, sd = x
+                    return body(sr, sm, v, c, dp, eval_set, ew, cp, sd,
+                                key1)
+                return jax.lax.map(one, (srows, smask, vals, cls, dps,
+                                         ews, cps, seeds))
             return batched
 
         fn = self.cache.entry("tail", fk, B, build_tail)
-        brows, bmasks, bvals, bcalls = fn(sol_rows, sol_mask, values, calls,
-                                          self.eval_set, ews, cps, seeds,
-                                          self._key1)
+        brows, bmasks, bvals, bcalls, bdepth = fn(
+            sol_rows, sol_mask, values, calls, depths,
+            self.eval_set, ews, cps, seeds, self._key1)
         brows = np.asarray(brows)
         bmasks = np.asarray(bmasks)
         bvals = np.asarray(bvals)
         bcalls = np.asarray(bcalls)
+        bdepth = np.asarray(bdepth)
 
         outs = []
         for j, (_i, prep) in enumerate(items):
@@ -558,10 +618,11 @@ class SelectionService:
             self.last_value = float(bvals[j])
             self.last_calls = int(bcalls[j])
             self.last_rounds = len(round_ladder(Mp, k, s.mu))
+            self.last_depth = int(bdepth[j])
             outs.append(SelectionResult(
                 rows=rows, attrs=attrs, mask=mask, value=float(bvals[j]),
                 oracle_calls=int(bcalls[j]), feasible=bool(ok),
-                detail=detail))
+                detail=detail, solve_depth=int(bdepth[j])))
         return outs
 
     def _solve_misses(self, fk, items, misses, sols, blocks, bmask) -> None:
@@ -584,18 +645,28 @@ class SelectionService:
             return batched
 
         fn = self.cache.entry("round0", fk, (B, s.Mp), build_round0)
-        rrows, rmask, rvals, rcalls = fn(blocks, bmask, self._keys0,
-                                         self.eval_set, ews, cps)
+        rrows, rmask, rvals, rcalls, rdepth = fn(blocks, bmask, self._keys0,
+                                                 self.eval_set, ews, cps)
         rrows = np.asarray(rrows)
         rmask = np.asarray(rmask)
         rvals = np.asarray(rvals)
         rcalls = np.asarray(rcalls)
+        rdepth = np.asarray(rdepth)
         for b, j in enumerate(misses):
             prep = items[j][1]
-            sv = (rrows[b], rmask[b], rvals[b], rcalls[b])
+            sv = (rrows[b], rmask[b], rvals[b], rcalls[b], rdepth[b])
             self._sol_cache[(fk, prep.fp, s.generation)] = {
                 "versions": s.versions.copy(), "sols": sv}
             sols[j] = sv
+        while (self.sol_cache_capacity is not None
+               and len(self._sol_cache) > self.sol_cache_capacity):
+            self._sol_cache.popitem(last=False)
+            self.sol_evictions += 1
+            if self.tracer is not None:
+                self.tracer.metrics.counter("serve_sol_cache_evictions").inc()
+        if self.tracer is not None:
+            self.tracer.metrics.gauge("serve_sol_cache_entries").set(
+                len(self._sol_cache))
 
     def _partial_resolve(self, fk, prep, ent, changed, blocks, bmask) -> None:
         """Re-solve only the machine blocks whose membership version moved
@@ -618,15 +689,16 @@ class SelectionService:
             return batched
 
         fn = self.cache.entry("round0", fk, (1, Cp), build_round0)
-        rrows, rmask, rvals, rcalls = fn(
+        rrows, rmask, rvals, rcalls, rdepth = fn(
             blocks[idx], bmask[idx], self._keys0[idx], self.eval_set,
             prep.ew[None], prep.cparams[None])
-        sr, sm, vv, cc = (np.array(x) for x in ent["sols"])
+        sr, sm, vv, cc, dp = (np.array(x) for x in ent["sols"])
         sr[changed] = np.asarray(rrows)[0, :C]
         sm[changed] = np.asarray(rmask)[0, :C]
         vv[changed] = np.asarray(rvals)[0, :C]
         cc[changed] = np.asarray(rcalls)[0, :C]
-        ent["sols"] = (sr, sm, vv, cc)
+        dp[changed] = np.asarray(rdepth)[0, :C]
+        ent["sols"] = (sr, sm, vv, cc, dp)
         ent["versions"] = s.versions.copy()
         self.partial_resolves += 1
         if self.tracer is not None:
@@ -674,8 +746,13 @@ class SelectionService:
             "cache_keys": len(self.cache.keys),
             "compiles": self.cache.compiles,
             "cache_hits": self.cache.hits,
+            "cache_evictions": self.cache.evictions,
+            "cache_capacity": self.cache.capacity,
             "steady_retraces": self.cache.steady_retraces(),
             "sol_cache_hits": self.sol_hits,
+            "sol_cache_entries": len(self._sol_cache),
+            "sol_cache_evictions": self.sol_evictions,
+            "sol_cache_capacity": self.sol_cache_capacity,
             "partial_resolves": self.partial_resolves,
             "deltas": self.deltas,
             "changed_machines": self.delta_changed,
@@ -717,7 +794,7 @@ def offline_solve(session: SessionState, eval_set, req: SelectionRequest, *,
     r0 = jax.jit(make_round0_fn(fk))(
         jnp.asarray(blocks), jnp.asarray(session.valid), keys0,
         svc.eval_set, jnp.asarray(prep.ew), jnp.asarray(prep.cparams))
-    brows, bmask, bval, bcalls = jax.jit(make_tail_fn(fk))(
+    brows, bmask, bval, bcalls, bdepth = jax.jit(make_tail_fn(fk))(
         *r0, svc.eval_set, jnp.asarray(prep.ew), jnp.asarray(prep.cparams),
         jnp.int32(req.seed), key1)
     rows_w = np.asarray(brows)
@@ -727,4 +804,5 @@ def offline_solve(session: SessionState, eval_set, req: SelectionRequest, *,
     return SelectionResult(rows=rows, attrs=attrs, mask=mask,
                            value=float(np.asarray(bval)),
                            oracle_calls=int(np.asarray(bcalls)),
-                           feasible=bool(ok), detail=detail)
+                           feasible=bool(ok), detail=detail,
+                           solve_depth=int(np.asarray(bdepth)))

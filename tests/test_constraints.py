@@ -530,15 +530,19 @@ def test_constraint_without_attrs_rejected():
 
 
 def test_run_algorithm_threads_constraint_everywhere():
-    """All three subprocedure loops honor the constraint (not just greedy)."""
+    """All subprocedure loops honor the constraint (not just greedy)."""
     data, obj = _setup(n=120, seed=11)
     T = jnp.asarray(data)
     attrs = jnp.asarray(_attrs(len(data), seed=11))
     c = PartitionMatroid((1, 1, 1, 1), col=1)
-    for alg in ("greedy", "stochastic_greedy", "threshold_greedy"):
+    per_alg = {"greedy": {},
+               "stochastic_greedy": {"key": jax.random.PRNGKey(0),
+                                     "eps": 0.3},
+               "threshold_greedy": {"eps": 0.3},
+               "threshold_batch": {"eps": 0.3}}
+    for alg, kw in per_alg.items():
         res = run_algorithm(alg, obj, T, jnp.ones((len(data),), bool), 10,
-                            key=jax.random.PRNGKey(0), eps=0.3,
-                            constraint=c, attrs=attrs)
+                            constraint=c, attrs=attrs, **kw)
         sel = np.asarray(res.sel_idx)[np.asarray(res.sel_mask)]
         ok, detail = check_feasible(c, np.asarray(attrs)[sel],
                                     np.ones(len(sel), bool))

@@ -417,3 +417,75 @@ def test_telemetry_off_is_default_and_harmless(world):
     assert svc.tracer is None
     res = svc.query(SelectionRequest(k=K))
     assert res.feasible or res.detail == "unconstrained"
+
+
+# ---------------------------------------------------------------------------
+# bounded caches: LRU eviction on the round-0 solution + compile caches
+# ---------------------------------------------------------------------------
+
+
+def test_sol_cache_lru_bounded_and_correct(world):
+    X, attrs, E, cfg, _st, _svc = world
+    s = _fresh_session(X, attrs, cfg)
+    svc = SelectionService(s, E, sol_cache_capacity=2)
+    r3 = svc.query(SelectionRequest(k=3))
+    svc.query(SelectionRequest(k=4))
+    svc.query(SelectionRequest(k=5))          # capacity 2 → k=3 entry evicted
+    stats = svc.serve_stats()
+    assert stats["sol_cache_capacity"] == 2
+    assert stats["sol_cache_entries"] <= 2
+    assert stats["sol_cache_evictions"] >= 1
+    # the evicted key re-solves from the session and returns the same bits
+    r3b = svc.query(SelectionRequest(k=3))
+    np.testing.assert_array_equal(r3.rows, r3b.rows)
+    assert r3.value == r3b.value
+    # a hit refreshes recency: touch k=3, insert k=6 → k=5 goes, k=3 stays
+    svc.query(SelectionRequest(k=3))
+    hits = svc.serve_stats()["sol_cache_hits"]
+    svc.query(SelectionRequest(k=6))
+    svc.query(SelectionRequest(k=3))
+    assert svc.serve_stats()["sol_cache_hits"] == hits + 1
+
+
+def test_compile_cache_lru_bounded_and_correct(world):
+    X, attrs, E, cfg, _st, _svc = world
+    s = _fresh_session(X, attrs, cfg)
+    svc = SelectionService(s, E, compile_cache_capacity=1)
+    r3 = svc.query(SelectionRequest(k=3))
+    svc.query(SelectionRequest(k=4))          # capacity 1 → k=3 fn evicted
+    stats = svc.serve_stats()
+    assert stats["cache_capacity"] == 1
+    assert stats["cache_keys"] <= 1
+    assert stats["cache_evictions"] >= 1
+    # rebuilding an evicted entry is a fresh compile, not a steady retrace
+    r3b = svc.query(SelectionRequest(k=3))
+    np.testing.assert_array_equal(r3.rows, r3b.rows)
+    assert svc.serve_stats()["steady_retraces"] == 0
+
+
+def test_cache_eviction_metrics_registered(world):
+    X, attrs, E, cfg, _st, _svc = world
+    tracer = Tracer()
+    s = _fresh_session(X, attrs, cfg)
+    svc = SelectionService(s, E, tracer=tracer,
+                           compile_cache_capacity=1, sol_cache_capacity=1)
+    for k in (3, 4, 5):
+        svc.query(SelectionRequest(k=k))
+    snap = tracer.metrics.snapshot()
+    evs = {k: v for k, v in snap["counters"].items()
+           if "cache_evictions" in k}
+    assert any(k.startswith("serve_compile_cache_evictions") and v >= 1
+               for k, v in evs.items()), snap["counters"]
+    assert any(k.startswith("serve_sol_cache_evictions") and v >= 1
+               for k, v in evs.items()), snap["counters"]
+    assert any(k.startswith("serve_compile_cache_entries")
+               for k in snap["gauges"])
+    assert any(k.startswith("serve_sol_cache_entries")
+               for k in snap["gauges"])
+
+
+def test_unbounded_caches_by_default(world):
+    _X, _attrs, _E, _cfg, _st, svc = world
+    assert svc.cache.capacity is None and svc.sol_cache_capacity is None
+    assert svc.serve_stats()["cache_evictions"] == 0
+    assert svc.serve_stats()["sol_cache_evictions"] == 0

@@ -1,0 +1,330 @@
+"""Threshold-batch low-adaptivity selection tier (PR 10).
+
+Certifies the PR-10 contracts:
+
+  * the one-launch τ-level kernel (``ops.threshold_select``) is
+    *bit-identical* between the Pallas megakernel (interpret on CPU) and
+    the pure-jnp reference — accept masks and cur_min bits — across input
+    dtypes (fp32 / bf16 / quantized int8 operands) and constraint
+    operands, including mid-ladder constraint state;
+  * every set the τ-ladder driver returns is feasible under all four
+    hereditary constraint classes (independent NumPy checker);
+  * the tier's quality floor f(S) ≥ (1−ε)·f(greedy) holds on seeded
+    instances;
+  * streaming == resident bit-identity survives the tree with
+    ``algorithm="threshold_batch"``;
+  * sequential solve-depth accounting: greedy pays k per round,
+    threshold-batch pays the measured ladder length (≤ 1 + ⌈log(2k/ε)/ε⌉);
+  * ``run_algorithm`` kwarg hygiene: unknown algorithm names and
+    algorithm-inapplicable kwargs raise with clear errors;
+  * the serve layer resolves ``algorithm``/``eps`` per request (mixed
+    batches split by fuse key) and reports per-result solve depth.
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (ArraySource, ExemplarClustering, Intersection,
+                        Knapsack, PartitionMatroid, TreeConfig,
+                        WeightedCoverage, check_feasible, greedy,
+                        run_algorithm, threshold_batch, tree_maximize)
+from repro.core.algorithms import driver_kwargs
+from repro.data.sources import synthetic_sharded_source
+from repro.kernels import ops
+from repro.serve import SelectionRequest, SelectionService, ingest
+
+N_GROUPS = 3
+
+
+def _setup(n, m, d, seed=0, frac_valid=0.9):
+    r = np.random.default_rng(seed)
+    X = jnp.asarray(r.standard_normal((n, d)).astype(np.float32))
+    E = jnp.asarray(r.standard_normal((m, d)).astype(np.float32))
+    mask = jnp.asarray(r.random(n) < frac_valid)
+    w = jnp.asarray(r.uniform(0.2, 1.0, n).astype(np.float32))
+    g = jnp.asarray(r.integers(0, N_GROUPS, n).astype(np.int32))
+    return X, E, mask, w, g
+
+
+def _tau_grid(X, E, cur_min):
+    """Data-derived τ levels: fractions of the initial max marginal gain."""
+    d2 = np.sum((np.asarray(X, np.float32)[:, None, :]
+                 - np.asarray(E)[None, :, :]) ** 2, axis=-1)
+    gains = np.maximum(np.asarray(cur_min)[None, :] - d2, 0.0).sum(-1)
+    gains /= E.shape[0]
+    gmax = float(gains.max())
+    return [0.7 * gmax, 0.3 * gmax, 0.05 * gmax]
+
+
+# ---------------------------------------------------------------------------
+# kernel bit-identity: pallas (interpret) == ref, accept + cur_min bits
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cons", ["none", "knapsack", "partition", "both"])
+def test_pallas_bit_identical_to_ref(dtype, cons):
+    X, E, mask, w, g = _setup(96, 24, 6, seed=7)
+    obj = ExemplarClustering(E)
+    cur_min = obj.init_state(X, mask)["cur_min"]
+    Xd = X.astype(dtype)
+    kw = {}
+    if cons in ("knapsack", "both"):
+        kw.update(weights=w, budget=3.0)
+    if cons in ("partition", "both"):
+        kw.update(group_ids=g, caps=(4, 3, 4))
+    for tau in _tau_grid(X, E, cur_min):
+        out_r = ops.threshold_select(Xd, E, cur_min, mask, tau, k=10,
+                                     impl="ref", bn=32, **kw)
+        out_p = ops.threshold_select(Xd, E, cur_min, mask, tau, k=10,
+                                     impl="pallas", bn=32, **kw)
+        for a, b, name in zip(out_r, out_p, ("accept", "cur_min")):
+            assert np.asarray(a).tobytes() == np.asarray(b).tobytes(), (
+                cons, dtype, tau, name)
+
+
+def test_pallas_bit_identical_midladder_state():
+    """Non-zero launch state (used weight, group counts, count) — the
+    second-and-later launches of a ladder — still bit-identical."""
+    X, E, mask, w, g = _setup(64, 16, 5, seed=11)
+    obj = ExemplarClustering(E)
+    cur_min = obj.init_state(X, mask)["cur_min"]
+    tau = _tau_grid(X, E, cur_min)[1]
+    kw = dict(weights=w, budget=4.0, group_ids=g, caps=(5, 5, 5),
+              used=jnp.float32(1.25), counts=jnp.asarray([2, 0, 1],
+                                                         jnp.int32),
+              count=jnp.int32(3))
+    out_r = ops.threshold_select(X, E, cur_min, mask, tau, k=8,
+                                 impl="ref", bn=16, **kw)
+    out_p = ops.threshold_select(X, E, cur_min, mask, tau, k=8,
+                                 impl="pallas", bn=16, **kw)
+    for a, b in zip(out_r, out_p):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+def test_pallas_bit_identical_quantized_operands():
+    """int8 storage rows + per-row dequant params: both impls run the same
+    fp32 multiply-add dequant, so accept/cur_min bits agree."""
+    r = np.random.default_rng(23)
+    n, m, d = 80, 16, 6
+    Xf = r.standard_normal((n, d)).astype(np.float32)
+    scale = (np.abs(Xf).max(axis=1) / 127.0 + 1e-8).astype(np.float32)
+    Xq = jnp.asarray(np.clip(np.round(Xf / scale[:, None]),
+                             -127, 127).astype(np.int8))
+    x_scale = jnp.asarray(scale)
+    x_zp = jnp.zeros((n,), jnp.float32)
+    E = jnp.asarray(r.standard_normal((m, d)).astype(np.float32))
+    mask = jnp.ones((n,), bool)
+    obj = ExemplarClustering(E)
+    deq = Xq.astype(jnp.float32) * x_scale[:, None] + x_zp[:, None]
+    cur_min = obj.init_state(deq, mask)["cur_min"]
+    tau = _tau_grid(deq, E, cur_min)[1]
+    out_r = ops.threshold_select(Xq, E, cur_min, mask, tau, k=12,
+                                 impl="ref", bn=16,
+                                 x_scale=x_scale, x_zp=x_zp)
+    out_p = ops.threshold_select(Xq, E, cur_min, mask, tau, k=12,
+                                 impl="pallas", bn=16,
+                                 x_scale=x_scale, x_zp=x_zp)
+    for a, b in zip(out_r, out_p):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# τ-ladder driver: feasibility, quality floor, depth
+# ---------------------------------------------------------------------------
+
+
+def _constraints(k):
+    return {
+        "unconstrained": (None, None),
+        "knapsack": (Knapsack(budget=0.35 * k, col=0), 2),
+        "partition": (PartitionMatroid(caps=(max(1, k // N_GROUPS),)
+                                       * N_GROUPS, col=1), 2),
+        "intersection": (Intersection((
+            Knapsack(budget=0.45 * k, col=0),
+            PartitionMatroid(caps=(max(1, k // 2),) * N_GROUPS, col=1))), 2),
+    }
+
+
+def _attrs(n, seed):
+    r = np.random.default_rng(seed)
+    w = r.uniform(0.2, 1.0, n).astype(np.float32)
+    g = r.integers(0, N_GROUPS, n).astype(np.float32)
+    return np.stack([w, g], axis=1)
+
+
+@pytest.mark.parametrize("cname", ["unconstrained", "knapsack", "partition",
+                                   "intersection"])
+def test_returned_set_feasible_all_constraint_classes(cname):
+    k = 12
+    cons, _a = _constraints(k)[cname]
+    X, E, mask, *_ = _setup(150, 32, 8, seed=5)
+    attrs = jnp.asarray(_attrs(150, seed=5)) if cons is not None else None
+    obj = ExemplarClustering(E)
+    for eps in (0.3, 0.5):
+        res = run_algorithm("threshold_batch", obj, X, mask, k, eps=eps,
+                            constraint=cons, attrs=attrs)
+        smask = np.asarray(res.sel_mask)
+        sel = np.asarray(res.sel_idx)
+        assert smask.sum() <= k
+        # selected slots hold real, distinct, in-mask candidates
+        taken = sel[smask]
+        assert len(set(taken.tolist())) == smask.sum()
+        assert np.asarray(mask)[taken].all()
+        if cons is not None:
+            sattrs = np.asarray(attrs)[np.where(smask, sel, 0)]
+            ok, detail = check_feasible(cons, sattrs, smask)
+            assert ok, (cname, eps, detail)
+
+
+def test_value_floor_vs_greedy_seeded():
+    for seed in (0, 3, 9):
+        X, E, mask, *_ = _setup(200, 48, 8, seed=seed)
+        obj = ExemplarClustering(E)
+        base = greedy(obj, X, mask, 16)
+        for eps in (0.2, 0.5):
+            res = threshold_batch(obj, X, mask, 16, eps=eps)
+            assert float(res.value) >= (1.0 - eps) * float(base.value) - 1e-6, (
+                seed, eps, float(res.value), float(base.value))
+
+
+def test_depth_accounting_through_tree():
+    r = np.random.default_rng(2)
+    data = r.standard_normal((2_000, 8)).astype(np.float32)
+    obj = ExemplarClustering(jnp.asarray(data[:128]))
+    k, eps = 32, 0.5
+    res_g = tree_maximize(obj, jnp.asarray(data),
+                          TreeConfig(k=k, capacity=400, seed=0))
+    res_b = tree_maximize(obj, jnp.asarray(data),
+                          TreeConfig(k=k, capacity=400, seed=0,
+                                     algorithm="threshold_batch", eps=eps))
+    # greedy: exactly k launches per round (round depth = max over machines)
+    assert res_g.solve_depth == k * res_g.rounds
+    assert res_g.depth_per_round == [k] * res_g.rounds
+    # threshold-batch: measured ladder, capped, strictly shallower at k=32
+    cap = 1 + math.ceil(math.log(2.0 * k / eps) / eps)
+    assert res_b.solve_depth == sum(res_b.depth_per_round)
+    assert all(1 <= dp <= cap for dp in res_b.depth_per_round), (
+        res_b.depth_per_round, cap)
+    assert res_b.solve_depth < res_g.solve_depth
+    assert float(res_b.value) >= (1.0 - eps) * float(res_g.value) - 1e-6
+
+
+def test_streaming_equals_resident_through_tree():
+    def attr_gen(r, rows):
+        w = r.uniform(0.2, 1.0, rows).astype(np.float32)
+        g = r.integers(0, N_GROUPS, rows).astype(np.float32)
+        return np.stack([w, g], axis=1)
+
+    src = synthetic_sharded_source(n=4_000, d=8, shard_rows=1_024, seed=3,
+                                   attr_gen=attr_gen, a=2)
+    data = src.materialize()
+    attrs = src.materialize_attrs()
+    obj = ExemplarClustering(jnp.asarray(data[:128]))
+    for cons in (None, Knapsack(budget=3.0, col=0)):
+        cfg = TreeConfig(k=8, capacity=250, seed=1,
+                         algorithm="threshold_batch", eps=0.4)
+        resident = tree_maximize(obj, jnp.asarray(data), cfg, constraint=cons,
+                                 attrs=attrs if cons is not None else None)
+        streamed = tree_maximize(obj, src, cfg, wave_machines=4,
+                                 constraint=cons)
+        assert streamed.value == resident.value
+        assert np.array_equal(streamed.sel_rows, resident.sel_rows)
+        assert streamed.oracle_calls == resident.oracle_calls
+        assert streamed.solve_depth == resident.solve_depth
+        assert streamed.depth_per_round == resident.depth_per_round
+
+
+def test_threshold_batch_requires_fused_objective():
+    w = jnp.asarray([3.0, 2.0, 1.0], jnp.float32)
+    obj = WeightedCoverage(w)            # rowwise, but no fused ladder hook
+    inc = jnp.asarray(np.eye(3, dtype=np.float32))
+    with pytest.raises(ValueError, match="threshold_batch"):
+        threshold_batch(obj, inc, jnp.ones((3,), bool), 2)
+
+
+def test_threshold_batch_constrained_requires_attrs():
+    X, E, mask, *_ = _setup(40, 12, 4, seed=1)
+    obj = ExemplarClustering(E)
+    with pytest.raises(ValueError, match="attrs"):
+        threshold_batch(obj, X, mask, 5,
+                        constraint=Knapsack(budget=2.0, col=0), attrs=None)
+
+
+# ---------------------------------------------------------------------------
+# run_algorithm kwarg hygiene
+# ---------------------------------------------------------------------------
+
+
+def test_run_algorithm_rejects_unknown_name():
+    X, E, mask, *_ = _setup(30, 10, 4)
+    obj = ExemplarClustering(E)
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        run_algorithm("gredy", obj, X, mask, 4)
+
+
+@pytest.mark.parametrize("alg,kw", [
+    ("greedy", {"eps": 0.3}),
+    ("greedy", {"key": 0}),
+    ("threshold_greedy", {"key": 0}),
+    ("threshold_batch", {"key": 0}),
+    ("threshold_greedy", {"fused": True}),
+])
+def test_run_algorithm_rejects_inapplicable_kwargs(alg, kw):
+    X, E, mask, *_ = _setup(30, 10, 4)
+    obj = ExemplarClustering(E)
+    if "key" in kw:
+        kw = dict(kw, key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="does not accept"):
+        run_algorithm(alg, obj, X, mask, 4, **kw)
+
+
+def test_run_algorithm_stochastic_requires_key():
+    X, E, mask, *_ = _setup(30, 10, 4)
+    obj = ExemplarClustering(E)
+    with pytest.raises(ValueError, match="key"):
+        run_algorithm("stochastic_greedy", obj, X, mask, 4, eps=0.3)
+
+
+def test_driver_kwargs_filters_to_accepted_subset():
+    key = jax.random.PRNGKey(1)
+    assert driver_kwargs("greedy", key=key, eps=0.3) == {}
+    skw = driver_kwargs("stochastic_greedy", key=key, eps=0.3)
+    assert set(skw) == {"key", "eps"} and skw["eps"] == 0.3
+    assert driver_kwargs("threshold_batch", key=key, eps=0.3) == {"eps": 0.3}
+    # unknown names filter to nothing — run_algorithm owns the hard error
+    assert driver_kwargs("nope", key=key, eps=0.3) == {}
+
+
+# ---------------------------------------------------------------------------
+# serve: per-request algorithm/eps resolve into the fuse key
+# ---------------------------------------------------------------------------
+
+
+def test_serve_per_request_algorithm_mixed_batch():
+    rng = np.random.default_rng(17)
+    n, d, mu, k = 112, 5, 12, 4
+    X = rng.normal(size=(n, d)).astype(np.float32)
+    attrs = np.stack([rng.uniform(0.2, 1.0, n).astype(np.float32),
+                      rng.integers(0, 3, n).astype(np.float32)], axis=1)
+    E = X[rng.choice(n, 24, replace=False)]
+    st = ingest(ArraySource(X), TreeConfig(k=k, capacity=mu, seed=5),
+                attrs=attrs)
+    svc = SelectionService(st, E)
+    reqs = [SelectionRequest(k=k),
+            SelectionRequest(k=k, algorithm="threshold_batch", eps=0.5)]
+    res = svc.serve(reqs)                 # mixed tiers → two fuse groups
+    assert all(r.feasible for r in res)
+    assert res[0].solve_depth > 0 and res[1].solve_depth > 0
+    # greedy tier pays exactly k per round; the batch tier reports its own
+    # measured ladder depth, which differs from the greedy accounting
+    assert res[0].solve_depth % k == 0
+    assert float(res[1].value) >= 0.5 * float(res[0].value) - 1e-6
+    # singleton serve of the same threshold-batch request is bit-identical
+    alone = svc.serve([reqs[1]])[0]
+    assert np.array_equal(alone.rows, res[1].rows)
+    assert alone.solve_depth == res[1].solve_depth
